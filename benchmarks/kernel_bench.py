@@ -1,0 +1,58 @@
+"""Kernel microbenchmarks: us_per_call for each kernel's jnp reference path on
+CPU (the Pallas interpret path is a correctness harness, not a perf path —
+real kernel timing needs TPU hardware; see §Roofline for the compiled-HLO
+analysis that stands in for device timing)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ops import mha
+from repro.kernels.mamba_scan.ops import ssd
+from repro.kernels.matmul.ref import matmul_ref
+
+
+def _time(fn, *args, iters=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench() -> list[tuple]:
+    rng = np.random.default_rng(0)
+    rows = []
+
+    m = k = n = 512
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    f = jax.jit(matmul_ref)
+    us = _time(f, x, y)
+    rows.append((f"kernel/matmul_ref/{m}x{k}x{n}", us,
+                 f"{2*m*k*n/us/1e3:.2f} GFLOP/s"))
+
+    b, s, h, d = 1, 512, 4, 64
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    f = jax.jit(lambda q, k, v: mha(q, k, v, use_pallas=False))
+    us = _time(f, q, kk, v)
+    rows.append((f"kernel/flash_ref/b{b}s{s}h{h}d{d}", us,
+                 f"{4*b*h*s*s*d/us/1e3:.2f} GFLOP/s"))
+
+    b, s, hh, p, g, nn = 1, 512, 8, 64, 1, 64
+    xs = jnp.asarray(rng.standard_normal((b, s, hh, p)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((b, s, hh))) * 0.1, jnp.float32)
+    a = jnp.asarray(-np.ones(hh), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((b, s, g, nn)), jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((b, s, g, nn)), jnp.float32)
+    f = jax.jit(lambda *args: ssd(*args, chunk=128, use_pallas=False)[0])
+    us = _time(f, xs, dt, a, bm, cm)
+    rows.append((f"kernel/ssd_chunked/b{b}s{s}h{hh}p{p}n{nn}", us, "chunk=128"))
+    return rows

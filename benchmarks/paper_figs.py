@@ -1,0 +1,113 @@
+"""Paper-figure reproductions (Figs 3-6, Eqs 4-9) on the calibrated simulator.
+
+Each function mirrors one figure of the paper and returns rows of
+(name, value, derived) that benchmarks/run.py emits as CSV.  The assertions
+encode the paper's qualitative claims; EXPERIMENTS.md §Paper-repro quotes the
+numbers side by side with the paper's.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import (
+    PAPER_MACHINES,
+    ClusterSim,
+    OverheadModel,
+    overhead_slope_fit,
+    predicted_speedup,
+    virtual_machine_count,
+)
+
+
+def _sim() -> ClusterSim:
+    return ClusterSim(perfs=PAPER_MACHINES, overhead=OverheadModel(m=20.0))
+
+
+def fig3_speedup_vs_workers() -> list[tuple]:
+    """Fig 3(c): speedup vs #service-providers at size 800, both modes."""
+    sim = _sim()
+    rows = []
+    het = sim.speedup_curve(800, homogenize=False)
+    hom = sim.speedup_curve(800, homogenize=True)
+    for k, (e, h) in enumerate(zip(het, hom, strict=True), start=1):
+        rows.append((f"fig3/het/workers={k}", e, ""))
+        rows.append((f"fig3/hom/workers={k}", h, ""))
+    rows.append(("fig3/het/max", max(het), f"paper=2.8@5 (ours @{np.argmax(het)+1})"))
+    rows.append(("fig3/hom/max", max(hom), f"paper=3.6@9 (ours @{np.argmax(hom)+1})"))
+    rows.append(("fig3/gain", max(hom) / max(het), "paper=1.29"))
+    return rows
+
+
+def fig4_formula_vs_measured() -> list[tuple]:
+    """Fig 4: measured homogenized speedup vs Eq. 6 prediction (+jitter run)."""
+    rows = []
+    sim = _sim()
+    jsim = ClusterSim(perfs=PAPER_MACHINES, overhead=OverheadModel(m=20.0),
+                      jitter=0.05, seed=7)
+    for n in (200, 400, 600, 800, 1000):
+        meas = sim.run_job(n, homogenize=True).speedup
+        noisy = float(np.mean([jsim.run_job(n, homogenize=True).speedup
+                               for _ in range(5)]))
+        pred = predicted_speedup(
+            sim.standalone_time(n), PAPER_MACHINES, sim.p_standalone,
+            load=n, overhead=sim.overhead,
+        )
+        rows.append((f"fig4/size={n}/formula", pred, ""))
+        rows.append((f"fig4/size={n}/measured", meas, f"dev={abs(meas-pred)/pred:.3f}"))
+        rows.append((f"fig4/size={n}/measured_jitter", noisy,
+                     f"dev={abs(noisy-pred)/pred:.3f}"))
+    return rows
+
+
+def fig5_overhead_linearity() -> list[tuple]:
+    """Fig 5: overhead vs load, slope M recoverable (paper M=20)."""
+    sim = _sim()
+    loads = [200, 400, 600, 800, 1000]
+    ovh = [sim.run_job(n).overhead for n in loads]
+    m = overhead_slope_fit(loads, ovh)
+    rows = [(f"fig5/load={n}/overhead", o, "") for n, o in zip(loads, ovh, strict=True)]
+    rows.append(("fig5/fitted_M", m, "paper M=20"))
+    return rows
+
+
+def fig6_load_and_linearity() -> list[tuple]:
+    """Fig 6: speedup curves across sizes; hom max ~5.5 vs het max ~3.5."""
+    sim = _sim()
+    rows = []
+    het_max = hom_max = 0.0
+    nh = virtual_machine_count(PAPER_MACHINES, sim.p_standalone)
+    for n in (200, 400, 600, 800, 1000):
+        het = max(sim.speedup_curve(n, homogenize=False))
+        hom = max(sim.speedup_curve(n, homogenize=True))
+        het_max, hom_max = max(het_max, het), max(hom_max, hom)
+        rows.append((f"fig6/size={n}/het_max", het, ""))
+        rows.append((f"fig6/size={n}/hom_max", hom,
+                     f"linearity={hom/nh:.3f} (vs ideal N_H={nh:.2f})"))
+    rows.append(("fig6/het_max_all", het_max, "paper~3.5"))
+    rows.append(("fig6/hom_max_all", hom_max, "paper~5.5"))
+    rows.append(("fig6/gain_all", hom_max / het_max,
+                 "paper 55% ('55% increase in speedup')"))
+    return rows
+
+
+def adaptive_convergence() -> list[tuple]:
+    """Closed loop: heartbeat-learned perfs converge to oracle speedup."""
+    sim = ClusterSim(perfs=PAPER_MACHINES)
+    res = sim.run_adaptive(800, n_jobs=8)
+    oracle = sim.run_job(800, homogenize=True).speedup
+    rows = [
+        (f"adaptive/job={i}", r.speedup, "") for i, r in enumerate(res)
+    ]
+    rows.append(("adaptive/oracle", oracle, ""))
+    rows.append(("adaptive/final_ratio", res[-1].speedup / oracle, ">0.95 expected"))
+    return rows
+
+
+ALL = {
+    "fig3": fig3_speedup_vs_workers,
+    "fig4": fig4_formula_vs_measured,
+    "fig5": fig5_overhead_linearity,
+    "fig6": fig6_load_and_linearity,
+    "adaptive": adaptive_convergence,
+}

@@ -1,0 +1,70 @@
+"""Roofline table builder: reads results/dryrun/*.json into EXPERIMENTS-ready
+markdown + CSV rows (compute/memory/collective terms, dominant bottleneck,
+useful-FLOPs ratio)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load_cells(tag: str = "") -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            c = json.load(f)
+        if c.get("tag", "") != tag:
+            continue
+        cells.append(c)
+    return cells
+
+
+def rows(tag: str = "") -> list[tuple]:
+    out = []
+    for c in load_cells(tag):
+        name = f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}"
+        if c["status"] != "run":
+            out.append((name, 0.0, c["status"]))
+            continue
+        r = c["roofline"]
+        note = "" if c.get("extrapolation") else " [scan-only: compile proof]"
+        out.append(
+            (
+                name,
+                max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+                f"dom={r['dominant']} c={r['compute_s']:.4f}s m={r['memory_s']:.4f}s "
+                f"x={r['collective_s']:.4f}s useful={r['useful_flops_ratio']:.2f}"
+                + note,
+            )
+        )
+    return out
+
+
+def markdown_table(tag: str = "", mesh: str = "single") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS/HLO | status |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for c in load_cells(tag):
+        if c["mesh"] != mesh:
+            continue
+        if c["status"] != "run":
+            lines.append(
+                f"| {c['arch']} | {c['shape']} | - | - | - | - | - | {c['status']} |"
+            )
+            continue
+        r = c["roofline"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | {r['dominant']} | "
+            f"{r['useful_flops_ratio']:.2f} | ok ({c['compile_s']}s compile) |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

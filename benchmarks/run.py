@@ -1,0 +1,40 @@
+"""Benchmark runner: one section per paper figure + kernels + roofline.
+
+Prints ``name,us_per_call,derived`` CSV (values that aren't times keep the
+value column; the derived column says what they are).
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import kernel_bench, paper_figs, roofline
+
+    rows: list[tuple] = []
+    for name, fn in paper_figs.ALL.items():
+        try:
+            rows.extend(fn())
+        except Exception as e:  # keep the harness running; report the failure
+            rows.append((f"{name}/ERROR", 0.0, repr(e)))
+    try:
+        rows.extend(kernel_bench.bench())
+    except Exception as e:
+        rows.append(("kernel/ERROR", 0.0, repr(e)))
+    try:
+        rows.extend(roofline.rows())
+    except Exception as e:
+        rows.append(("roofline/ERROR", 0.0, repr(e)))
+
+    print("name,us_per_call,derived")
+    for name, val, derived in rows:
+        print(f"{name},{val:.6g},{derived}")
+
+    bad = [r for r in rows if "ERROR" in r[0]]
+    if bad:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

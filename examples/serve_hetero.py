@@ -1,0 +1,68 @@
+"""Serving with homogenized dispatch + a real continuous-batching engine.
+
+Part 1 — one real DecodeEngine (continuous batching over a tiny LM): requests
+of different lengths stream through a fixed slot pool; finished sequences are
+replaced immediately.
+
+Part 2 — fleet dispatch: three replicas of unequal throughput receive request
+bundles.  The homogenized dispatcher learns replica perf from heartbeats and
+allots proportional shares; we compare makespan vs equal split and show
+failover when a replica dies.
+
+Run:  PYTHONPATH=src python examples/serve_hetero.py
+"""
+
+import jax
+
+from repro.models import LayerSpec, Model, ModelConfig
+from repro.serve import DecodeEngine, HomogenizedDispatcher, Replica, Request
+
+
+def main() -> None:
+    # ---------------- Part 1: continuous batching on a real engine ----------
+    cfg = ModelConfig(
+        name="serve-demo", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab_size=128, head_dim=16,
+        layer_pattern=(LayerSpec("attn", "dense"),),
+        param_dtype="float32", compute_dtype="float32", use_pallas=False,
+        rope_theta=1e4,
+    )
+    model = Model(cfg)
+    params = model.init(jax.random.key(0))
+    eng = DecodeEngine(model, params, max_batch=4, max_seq=64)
+    reqs = [
+        Request(rid=i, prompt=[1 + i, 2, 3 + i % 5], max_new_tokens=4 + 3 * (i % 3))
+        for i in range(10)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run_until_drained()
+    print("== continuous batching (1 replica, 4 slots, 10 requests) ==")
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"req {r.rid}: prompt={r.prompt} -> {r.out_tokens} "
+              f"(finished @engine-step {r.finish_step})")
+    print(f"engine steps={eng.steps} tokens_out={eng.tokens_out} "
+          f"(tokens/step={eng.throughput:.2f} — continuous batching keeps slots busy)")
+
+    # ---------------- Part 2: homogenized fleet dispatch --------------------
+    print("\n== homogenized dispatch across 3 replicas (perfs 10/5/1) ==")
+    reps = [Replica("r-fast", 10.0), Replica("r-mid", 5.0), Replica("r-slow", 1.0)]
+    hom = HomogenizedDispatcher(reps, homogenize=True)
+    equ = HomogenizedDispatcher(reps, homogenize=False)
+    print("bundle | homogenized makespan (shares) | equal-split makespan (shares)")
+    for bundle in range(5):
+        rh = hom.dispatch(160)
+        re_ = equ.dispatch(160)
+        print(f"{bundle:6d} | {rh.makespan:8.2f}s {rh.shares} | "
+              f"{re_.makespan:8.2f}s {re_.shares}")
+    print(f"steady-state speedup from homogenization: "
+          f"{re_.makespan / rh.makespan:.2f}x")
+
+    print("\n-- replica r-mid dies; dispatcher redistributes --")
+    hom.kill("r-mid")
+    r = hom.dispatch(160)
+    print(f"post-failure shares: {r.shares} makespan={r.makespan:.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,107 @@
+"""End-to-end driver: train an LM with Homogenized Data Parallelism.
+
+Four simulated pods with heterogeneous throughput train one model; the
+coordinator learns per-pod performance from heartbeats and re-allots grain
+scope-lengths (the paper's technique at pod granularity).  Mid-run we inject
+a straggler (pod throttles 5x) and then kill a pod outright — watch the plan
+adapt and training continue.  A checkpoint/restart at the end proves
+fault-tolerant resume.
+
+Run:      PYTHONPATH=src python examples/train_hetero.py
+Bigger:   PYTHONPATH=src python examples/train_hetero.py --d-model 768 --layers 12 \
+              --steps 300          # ~100M params — same driver, more patience
+"""
+
+import argparse
+import shutil
+
+from repro.core import OverheadModel
+from repro.data import GrainSpec
+from repro.models import LayerSpec, Model, ModelConfig
+from repro.optim import AdamWConfig
+from repro.train import HDPConfig, HDPTrainer, Pod
+
+
+def build_model(d_model: int, layers: int, vocab: int) -> Model:
+    return Model(
+        ModelConfig(
+            name="hdp-lm", n_layers=layers, d_model=d_model,
+            n_heads=max(2, d_model // 64), n_kv_heads=max(2, d_model // 128),
+            d_ff=d_model * 4, vocab_size=vocab, head_dim=32,
+            layer_pattern=(LayerSpec("attn", "dense"),),
+            param_dtype="float32", compute_dtype="float32",
+            use_pallas=False, rope_theta=1e4,
+        )
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--grains", type=int, default=8)
+    ap.add_argument("--ckpt", default="/tmp/repro_hdp_ckpt")
+    args = ap.parse_args()
+    shutil.rmtree(args.ckpt, ignore_errors=True)
+
+    model = build_model(args.d_model, args.layers, args.vocab)
+    n_params = sum(
+        p.size for p in __import__("jax").tree.leaves(
+            __import__("jax").eval_shape(
+                lambda: model.init(__import__("jax").random.key(0))
+            )
+        )
+    )
+    print(f"model: {n_params/1e6:.1f}M params")
+
+    pods = [Pod("pod0", 4.0), Pod("pod1", 3.0), Pod("pod2", 2.0), Pod("pod3", 1.0)]
+    cfg = HDPConfig(
+        total_grains=args.grains,
+        grain_spec=GrainSpec(grain_size=1, seq_len=args.seq, vocab_size=args.vocab),
+        overhead=OverheadModel(m=4.0),
+        ckpt_dir=args.ckpt, ckpt_every=50,
+    )
+    tr = HDPTrainer(model, pods, cfg,
+                    opt_cfg=AdamWConfig(peak_lr=1e-3, warmup_steps=20,
+                                        decay_steps=args.steps, weight_decay=0.0))
+
+    straggle_at = args.steps // 3
+    kill_at = 2 * args.steps // 3
+    for s in range(args.steps):
+        if s == straggle_at:
+            print(f"--- step {s}: pod1 throttles 5x (straggler injection) ---")
+            tr.set_perf("pod1", 0.6)
+        if s == kill_at:
+            print(f"--- step {s}: pod3 dies (elastic replan) ---")
+            tr.kill("pod3")
+        rec = tr.step(s)
+        if s % 20 == 0 or s in (straggle_at, kill_at, args.steps - 1):
+            plan = " ".join(f"{k}:{v}" for k, v in rec["plan"].items())
+            print(
+                f"step {s:4d} loss={rec['loss']:.4f} "
+                f"step_time={rec['step_time']:6.2f}s plan[{plan}]"
+            )
+    if tr.ckpt:
+        tr.ckpt.wait()
+
+    print("\n--- simulated restart from checkpoint ---")
+    tr2 = HDPTrainer(model, [Pod("pod0", 4.0), Pod("pod1", 0.6), Pod("pod2", 2.0)],
+                     cfg, opt_cfg=AdamWConfig(peak_lr=1e-3, warmup_steps=20,
+                                              decay_steps=args.steps,
+                                              weight_decay=0.0))
+    print(f"resumed at step {tr2.start_step}")
+    for s in range(tr2.start_step, tr2.start_step + 10):
+        rec = tr2.step(s)
+    print(f"post-restart loss={rec['loss']:.4f} (finite => state intact)")
+
+    first = tr.history[0]["loss"]
+    last = tr.history[-1]["loss"]
+    print(f"\nloss {first:.4f} -> {last:.4f} "
+          f"({'OK: decreased' if last < first else 'WARN: did not decrease'})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro: homogenization-based load balancing as a production JAX framework.
+
+Reproduces Hossain et al., "Load Balancing in a Networked Environment through
+Homogenization" (CS.DC 2011) and integrates the technique as a first-class
+feature of a multi-pod JAX training/serving stack.  See DESIGN.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,5 @@
+from .registry import ARCH_IDS, all_configs, get_config
+from .shapes import SHAPES, ShapeSpec, cell_status, input_specs
+
+__all__ = ["ARCH_IDS", "all_configs", "get_config", "SHAPES", "ShapeSpec",
+           "cell_status", "input_specs"]

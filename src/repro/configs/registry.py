@@ -1,0 +1,50 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers/tests."""
+
+from __future__ import annotations
+
+import importlib
+
+from ..models.config import ModelConfig
+
+_MODULES = {
+    "qwen2-vl-7b": "qwen2_vl_7b",
+    "qwen2-moe-a2.7b": "qwen2_moe_a2_7b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "mamba2-2.7b": "mamba2_2_7b",
+    "granite-34b": "granite_34b",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "qwen3-8b": "qwen3_8b",
+    "qwen2-1.5b": "qwen2_1_5b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def _mod(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f".{_MODULES[arch]}", __package__)
+
+
+def get_config(arch: str, reduced: bool = False, **overrides) -> ModelConfig:
+    cfg = (_mod(arch).reduced() if reduced else _mod(arch).config())
+    if overrides:
+        import dataclasses
+
+        flat = {k: v for k, v in overrides.items() if "." not in k}
+        nested = {k: v for k, v in overrides.items() if "." in k}
+        if flat:
+            cfg = dataclasses.replace(cfg, **flat)
+        for key, val in nested.items():  # e.g. "ssm.chunk" = 64
+            head, _, rest = key.partition(".")
+            sub = getattr(cfg, head)
+            cfg = dataclasses.replace(
+                cfg, **{head: dataclasses.replace(sub, **{rest: val})}
+            )
+    return cfg.validate()
+
+
+def all_configs(reduced: bool = False) -> dict[str, ModelConfig]:
+    return {a: get_config(a, reduced) for a in ARCH_IDS}

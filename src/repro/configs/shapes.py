@@ -1,0 +1,147 @@
+"""Assigned input shapes + abstract input_specs for the dry-run.
+
+Four shapes per architecture (40 cells):
+  train_4k     seq 4096  x global_batch 256   -> train_step
+  prefill_32k  seq 32768 x global_batch 32    -> prefill_step
+  decode_32k   seq 32768 x global_batch 128   -> decode_step (1 new token)
+  long_500k    seq 524288 x global_batch 1    -> decode_step; requires
+               sub-quadratic attention => runs only for SSM/hybrid archs
+               (mamba2-2.7b, jamba-v0.1-52b); skipped for the 8 pure
+               full-attention archs (incl. MLA: compressed cache, still
+               quadratic attention).  Skips are recorded per-cell.
+
+Enc-dec (seamless): train/prefill split seq into src|tgt halves; decode cells
+use a 4096-frame encoder memory beside the seq_len self-attn cache.
+
+``input_specs`` returns ShapeDtypeStructs only — nothing is allocated; the
+same builders with ``concrete=True`` give real arrays for smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.config import ModelConfig
+from ..models.model import Model
+
+CROSS_SEQ_DECODE = 4096
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def is_subquadratic(cfg: ModelConfig) -> bool:
+    return any(s.mixer == "mamba" for s in cfg.layer_pattern)
+
+
+def cell_status(cfg: ModelConfig, shape: ShapeSpec) -> str:
+    """'run' or a skip reason (recorded in EXPERIMENTS.md)."""
+    if shape.name == "long_500k" and not is_subquadratic(cfg):
+        return "skip: full quadratic attention at 524288 ctx (per assignment)"
+    return "run"
+
+
+def _arr(shape, dtype, concrete: bool, fill: str = "zeros", vocab: int | None = None):
+    if not concrete:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if fill == "tokens":
+        rng = np.random.default_rng(0)
+        return jnp.asarray(rng.integers(0, vocab, shape), dtype)
+    if fill == "normal":
+        rng = np.random.default_rng(0)
+        return jnp.asarray(rng.standard_normal(shape) * 0.02, dtype)
+    if fill == "ones":
+        return jnp.ones(shape, dtype)
+    if fill == "arange3":  # mrope positions
+        b, _, s = shape
+        return jnp.broadcast_to(jnp.arange(s, dtype=dtype)[None, None, :], shape)
+    return jnp.zeros(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, batch: int, seq: int, concrete=False) -> dict:
+    i32, f32 = jnp.int32, jnp.float32
+    emb_dt = jnp.dtype(cfg.compute_dtype)
+    v = cfg.vocab_size
+    if cfg.is_enc_dec:
+        src, tgt = seq // 2, seq // 2
+        return {
+            "src_embeds": _arr((batch, src, cfg.d_model), emb_dt, concrete, "normal"),
+            "tgt_tokens": _arr((batch, tgt), i32, concrete, "tokens", v),
+            "targets": _arr((batch, tgt), i32, concrete, "tokens", v),
+            "loss_mask": _arr((batch, tgt), f32, concrete, "ones"),
+        }
+    if cfg.input_mode == "embeds":
+        pos_shape = (batch, 3, seq) if cfg.mrope_sections else (batch, seq)
+        return {
+            "embeds": _arr((batch, seq, cfg.d_model), emb_dt, concrete, "normal"),
+            "positions": _arr(pos_shape, i32, concrete,
+                              "arange3" if cfg.mrope_sections else "zeros"),
+            "targets": _arr((batch, seq), i32, concrete, "tokens", v),
+            "loss_mask": _arr((batch, seq), f32, concrete, "ones"),
+        }
+    return {
+        "tokens": _arr((batch, seq), i32, concrete, "tokens", v),
+        "targets": _arr((batch, seq), i32, concrete, "tokens", v),
+        "loss_mask": _arr((batch, seq), f32, concrete, "ones"),
+    }
+
+
+def prefill_batch_specs(cfg: ModelConfig, batch: int, seq: int, concrete=False) -> dict:
+    b = train_batch_specs(cfg, batch, seq, concrete)
+    b.pop("targets", None)
+    b.pop("loss_mask", None)
+    return b
+
+
+def decode_input_specs(cfg: ModelConfig, batch: int, seq: int, concrete=False):
+    """Returns (inputs, caches, pos) for decode_step."""
+    i32 = jnp.int32
+    emb_dt = jnp.dtype(cfg.compute_dtype)
+    model = Model(cfg)
+    cross = CROSS_SEQ_DECODE if cfg.is_enc_dec else None
+    if concrete:
+        caches = model.init_cache(batch, seq, cross_seq=cross)
+    else:
+        caches = jax.eval_shape(
+            lambda: model.init_cache(batch, seq, cross_seq=cross)
+        )
+    if cfg.input_mode == "embeds" and not cfg.is_enc_dec:
+        pos_shape = (batch, 3, 1) if cfg.mrope_sections else (batch, 1)
+        inputs = {
+            "embeds": _arr((batch, 1, cfg.d_model), emb_dt, concrete, "normal"),
+            "positions": _arr(pos_shape, i32, concrete, "zeros"),
+        }
+    else:
+        inputs = _arr((batch, 1), i32, concrete, "tokens", cfg.vocab_size)
+    pos = jnp.int32(seq - 1) if concrete else jax.ShapeDtypeStruct((), i32)
+    return inputs, caches, pos
+
+
+def input_specs(
+    cfg: ModelConfig, shape: ShapeSpec, concrete: bool = False
+) -> dict[str, Any]:
+    """All inputs for the shape's step kind, abstract by default."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape.global_batch, shape.seq_len, concrete)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape.global_batch, shape.seq_len, concrete)}
+    inputs, caches, pos = decode_input_specs(cfg, shape.global_batch, shape.seq_len, concrete)
+    return {"inputs": inputs, "caches": caches, "pos": pos}

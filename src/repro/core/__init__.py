@@ -1,0 +1,50 @@
+"""Core homogenization library — the paper's contribution.
+
+Control-plane (pure Python, coordinator-side):
+  homogenization  — scope lengths, N_H, overhead model, speedup (Eqs. 1-9)
+  performance     — heartbeat EMA tracker producing homogenized performance
+  scheduler       — grain plans with hysteresis + elastic replan
+  tda             — client/server/service-provider triangle, real execution
+  simulate        — discrete-event heterogeneous cluster (paper §3 testbed)
+"""
+
+from .homogenization import (
+    OverheadModel,
+    equal_split,
+    finish_times,
+    homogenization_quality,
+    overhead_slope_fit,
+    predicted_speedup,
+    predicted_time,
+    scope_lengths,
+    virtual_machine_count,
+)
+from .performance import PerformanceTracker, PerfReport, WorkerState
+from .scheduler import GrainPlan, HomogenizedScheduler
+from .simulate import PAPER_MACHINES, REF_SIZE, ClusterSim, JobResult, Machine
+from .tda import ServiceProvider, TDAServer, ThinClient
+
+__all__ = [
+    "OverheadModel",
+    "equal_split",
+    "finish_times",
+    "homogenization_quality",
+    "overhead_slope_fit",
+    "predicted_speedup",
+    "predicted_time",
+    "scope_lengths",
+    "virtual_machine_count",
+    "PerformanceTracker",
+    "PerfReport",
+    "WorkerState",
+    "GrainPlan",
+    "HomogenizedScheduler",
+    "PAPER_MACHINES",
+    "REF_SIZE",
+    "ClusterSim",
+    "JobResult",
+    "Machine",
+    "ServiceProvider",
+    "TDAServer",
+    "ThinClient",
+]

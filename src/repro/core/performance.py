@@ -1,0 +1,126 @@
+"""Performance tracking: the paper's "background process" + homogenized performance.
+
+The TDA server maintains tables of worker performance; each service-provider
+reports its current load/throughput "after certain time interval".  The server
+folds the reports into a single *homogenized performance* number per worker,
+which the allotment (scope-length) computation consumes.
+
+We realize the fold as an exponential moving average over observed throughput
+(work-units per second), with:
+
+  - staleness decay: a worker that stops reporting is progressively distrusted,
+  - straggler flagging: perf below ``straggler_fraction`` of the fleet median,
+  - liveness: workers missing ``dead_after`` heartbeats are declared dead
+    (feeds the elastic replan path).
+
+Pure Python control-plane code (runs on the coordinator host, never traced).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+import numpy as np
+
+__all__ = ["PerfReport", "WorkerState", "PerformanceTracker"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfReport:
+    """One heartbeat from a service-provider."""
+
+    worker: str
+    work_done: float          # work units (grains, tokens, matrix rows...)
+    elapsed_s: float          # wall-clock seconds for that work
+    time_s: float             # report timestamp (simulated or real clock)
+
+    @property
+    def throughput(self) -> float:
+        if self.elapsed_s <= 0:
+            raise ValueError("elapsed_s must be > 0")
+        return self.work_done / self.elapsed_s
+
+
+@dataclasses.dataclass
+class WorkerState:
+    perf: float               # homogenized performance (EMA of throughput)
+    last_report_s: float
+    n_reports: int = 0
+    alive: bool = True
+
+
+class PerformanceTracker:
+    """EMA tracker producing the paper's homogenized-performance vector."""
+
+    def __init__(
+        self,
+        alpha: float = 0.3,
+        staleness_half_life_s: float = 60.0,
+        dead_after_s: float = 300.0,
+        straggler_fraction: float = 0.5,
+    ):
+        if not 0 < alpha <= 1:
+            raise ValueError("alpha must be in (0, 1]")
+        self.alpha = alpha
+        self.staleness_half_life_s = staleness_half_life_s
+        self.dead_after_s = dead_after_s
+        self.straggler_fraction = straggler_fraction
+        self._workers: dict[str, WorkerState] = {}
+
+    # -- ingest ------------------------------------------------------------
+    def observe(self, report: PerfReport) -> None:
+        tput = report.throughput
+        st = self._workers.get(report.worker)
+        if st is None or not st.alive:
+            self._workers[report.worker] = WorkerState(
+                perf=tput, last_report_s=report.time_s, n_reports=1
+            )
+            return
+        st.perf = self.alpha * tput + (1 - self.alpha) * st.perf
+        st.last_report_s = max(st.last_report_s, report.time_s)
+        st.n_reports += 1
+
+    def observe_many(self, reports: Iterable[PerfReport]) -> None:
+        for r in reports:
+            self.observe(r)
+
+    # -- liveness ----------------------------------------------------------
+    def mark_dead(self, worker: str) -> None:
+        if worker in self._workers:
+            self._workers[worker].alive = False
+
+    def sweep(self, now_s: float) -> list[str]:
+        """Declare workers dead after ``dead_after_s`` without a heartbeat.
+        Returns the newly-dead worker ids (elastic replan trigger)."""
+        died = []
+        for name, st in self._workers.items():
+            if st.alive and now_s - st.last_report_s > self.dead_after_s:
+                st.alive = False
+                died.append(name)
+        return died
+
+    # -- query -------------------------------------------------------------
+    def workers(self, alive_only: bool = True) -> list[str]:
+        return sorted(
+            n for n, s in self._workers.items() if s.alive or not alive_only
+        )
+
+    def perf(self, worker: str, now_s: float | None = None) -> float:
+        st = self._workers[worker]
+        p = st.perf
+        if now_s is not None and now_s > st.last_report_s:
+            # Staleness decay: halve trust every half-life without a report.
+            age = now_s - st.last_report_s
+            p *= 0.5 ** (age / self.staleness_half_life_s)
+        return p
+
+    def perf_vector(self, now_s: float | None = None) -> dict[str, float]:
+        return {w: self.perf(w, now_s) for w in self.workers()}
+
+    def stragglers(self, now_s: float | None = None) -> list[str]:
+        pv = self.perf_vector(now_s)
+        if len(pv) < 2:
+            return []
+        med = float(np.median(list(pv.values())))
+        return sorted(w for w, p in pv.items() if p < self.straggler_fraction * med)

@@ -1,0 +1,141 @@
+"""Triangular Dynamic Architecture (TDA) roles, with *real* execution.
+
+The triangle (paper Fig. 2): a thin client sends a request to the TDA server;
+the server granulizes it into sub-requests sized by homogenization and sends
+them to service-providers; each provider computes its part and returns it
+*directly to the client*, which combines the parts.
+
+This module runs the triangle in-process with real numerics: the default
+workload is the paper's row-granulized matrix multiplication (optionally via
+the Pallas matmul kernel), so tests can assert that the distributed product is
+exactly the single-machine product.  Wall-clock on this 1-core container is
+sequential, so *timing* comes from the ClusterSim cost model while *values*
+are computed for real.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from .performance import PerformanceTracker, PerfReport
+from .scheduler import GrainPlan, HomogenizedScheduler
+from .simulate import ClusterSim
+
+__all__ = ["SubRequest", "SubResult", "ServiceProvider", "TDAServer", "ThinClient"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SubRequest:
+    job_id: int
+    worker: str
+    row_start: int
+    row_stop: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SubResult:
+    job_id: int
+    worker: str
+    row_start: int
+    row_stop: int
+    value: np.ndarray
+    elapsed_s: float  # simulated
+
+
+class ServiceProvider:
+    """Executes sub-requests; reports heartbeats to the server (background
+    process).  ``matmul_fn`` defaults to numpy; examples swap in the Pallas
+    kernel wrapper."""
+
+    def __init__(
+        self,
+        name: str,
+        perf: float,
+        matmul_fn: Callable[[np.ndarray, np.ndarray], np.ndarray] | None = None,
+    ):
+        self.name = name
+        self.perf = perf
+        self.matmul_fn = matmul_fn or (lambda a, b: a @ b)
+
+    def execute(
+        self, req: SubRequest, a: np.ndarray, b: np.ndarray, sim: ClusterSim
+    ) -> SubResult:
+        rows = a[req.row_start : req.row_stop]
+        value = np.asarray(self.matmul_fn(rows, b))
+        elapsed = sim._worker_time(req.row_stop - req.row_start, self.perf, a.shape[0])
+        return SubResult(req.job_id, self.name, req.row_start, req.row_stop, value, elapsed)
+
+
+class TDAServer:
+    """Granulizes requests using homogenized performance (paper §2)."""
+
+    def __init__(self, providers: list[ServiceProvider], homogenize: bool = True):
+        self.providers = providers
+        self.tracker = PerformanceTracker(alpha=0.5)
+        self.clock = 0.0
+        for p in providers:
+            #
+
+            # Neutral prior until heartbeats arrive.
+            self.tracker.observe(PerfReport(p.name, 1.0, 1.0, self.clock))
+        self.homogenize = homogenize
+        self._job_id = 0
+
+    def granulize(self, n_rows: int) -> tuple[int, list[SubRequest], GrainPlan]:
+        sched = HomogenizedScheduler(
+            self.tracker, total_grains=n_rows, homogenize=self.homogenize
+        )
+        plan = sched.plan(now_s=self.clock, force=True)
+        self._job_id += 1
+        reqs, start = [], 0
+        by_name = {p.name: p for p in self.providers}
+        for w, share in zip(plan.workers, plan.shares, strict=True):
+            if share > 0:
+                reqs.append(SubRequest(self._job_id, by_name[w].name, start, start + share))
+            start += share
+        return self._job_id, reqs, plan
+
+    def heartbeat(self, report: PerfReport) -> None:
+        self.tracker.observe(report)
+        self.clock = max(self.clock, report.time_s)
+
+
+class ThinClient:
+    """Sends the request, receives parts directly from providers, combines."""
+
+    def __init__(self, server: TDAServer, sim: ClusterSim | None = None):
+        self.server = server
+        self.sim = sim or ClusterSim(
+            perfs=[p.perf for p in server.providers]
+        )
+
+    def matmul(self, a: np.ndarray, b: np.ndarray) -> tuple[np.ndarray, float]:
+        """Distributed a @ b.  Returns (product, simulated_total_time)."""
+        if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+            raise ValueError(f"bad matmul shapes {a.shape} x {b.shape}")
+        _, reqs, _ = self.server.granulize(a.shape[0])
+        by_name = {p.name: p for p in self.server.providers}
+        parts: list[SubResult] = []
+        for req in reqs:
+            provider = by_name[req.worker]
+            res = provider.execute(req, a, b, self.sim)
+            parts.append(res)
+            # Provider -> server heartbeat (the background process).
+            self.server.heartbeat(
+                PerfReport(
+                    worker=req.worker,
+                    work_done=(req.row_stop - req.row_start)
+                    * self.sim.unit_cost(a.shape[0]),
+                    elapsed_s=max(res.elapsed_s, 1e-9),
+                    time_s=self.server.clock + res.elapsed_s,
+                )
+            )
+        # Client-side combine (triangle edge: provider -> client).
+        out = np.zeros((a.shape[0], b.shape[1]), dtype=parts[0].value.dtype)
+        for part in parts:
+            out[part.row_start : part.row_stop] = part.value
+        sim_time = max(p.elapsed_s for p in parts) + self.sim.overhead(a.shape[0])
+        return out, sim_time

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel ships as <name>/<name>.py (pl.pallas_call + BlockSpec),
+<name>/ops.py (public jit'd wrapper with padding + dispatch) and
+<name>/ref.py (pure-jnp oracle).  Kernels are validated on CPU with
+interpret=True; on TPU backends ops auto-select the compiled kernel.
+"""

@@ -1,0 +1,125 @@
+"""Causal flash attention Pallas kernel (online softmax), TPU target.
+
+Prefill hot-spot: at 32k context the (Sq, Skv) logits matrix cannot live in
+HBM, let alone VMEM.  Grid is (B*H, Sq/bq, Skv/bk); the Skv axis is sequential
+("arbitrary") and carries running max / normalizer / f32 accumulator in VMEM
+scratch — the canonical online-softmax recurrence.  Causal block skipping:
+blocks strictly above the diagonal contribute nothing and are skipped with
+``pl.when`` (the grid still visits them, but they cost no FLOPs on TPU since
+the MXU issue is predicated).
+
+Layout: inputs are pre-flattened to (B*H, S, D) by ops.py (GQA K/V heads are
+repeated to Q heads there — the kernel is head-layout agnostic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, n_k: int, bq: int, bk: int,
+    scale: float, causal: bool
+):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Causal: the whole k-block is masked out iff its first key index exceeds
+    # the last query index of this q-block.
+    run = (not causal) or (ik * bk <= iq * bq + bq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(                          # (bq, bk)
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        if causal:
+            qi = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kj = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qi >= kj, s, NEG_INF)
+        m_prev = m_ref[...]                               # (bq, 1)
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                            # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                   # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "block_k", "causal", "interpret", "group")
+)
+def flash_attention(
+    q: jax.Array,  # (B*Hq, Sq, D)
+    k: jax.Array,  # (B*Hkv, Skv, D)   Hkv = Hq // group
+    v: jax.Array,  # (B*Hkv, Skv, D)
+    *,
+    block_q: int = 512,
+    block_k: int = 512,
+    causal: bool = True,
+    interpret: bool = False,
+    group: int = 1,
+) -> jax.Array:
+    """GQA-native: K/V are NOT head-repeated — the K/V BlockSpec index_map
+    divides the grid's head index by ``group``, so consecutive Q-head programs
+    re-read the same K/V block (a VMEM-resident reuse on TPU, not an HBM
+    copy; Pallas's pipeline skips the DMA when the next block index is
+    unchanged)."""
+    bh, sq, d = q.shape
+    bhkv, skv, _ = k.shape
+    if bh != bhkv * group:
+        raise ValueError(f"q heads {bh} != kv heads {bhkv} * group {group}")
+    bq, bk = min(block_q, sq), min(block_k, skv)
+    if sq % bq or skv % bk:
+        raise ValueError(f"seq lens ({sq},{skv}) not divisible by ({bq},{bk})")
+    n_q, n_k = sq // bq, skv // bk
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(
+        _flash_kernel, n_k=n_k, bq=bq, bk=bk, scale=scale, causal=causal
+    )
+    params = {}
+    if not interpret:
+        params["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+        **params,
+    )(q, k, v)

@@ -1,0 +1,57 @@
+"""Public flash-attention op: GQA head handling + padding + dispatch."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention as _flash_call
+from .ref import attention_ref
+
+
+def mha(
+    q: jax.Array,  # (B, Sq, Hq, D)
+    k: jax.Array,  # (B, Skv, Hkv, D)
+    v: jax.Array,  # (B, Skv, Hkv, D)
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_k: int = 512,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Multi-head attention with GQA (Hkv divides Hq).  Returns (B, Sq, Hq, D)."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    if hq % hkv:
+        raise ValueError(f"GQA needs Hkv | Hq, got {hkv}, {hq}")
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    rep = hq // hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, sq, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, skv, d)
+    if not use_pallas:
+        # oracle path repeats (reference clarity over efficiency)
+        kr = jnp.repeat(k, rep, axis=2) if rep > 1 else k
+        vr = jnp.repeat(v, rep, axis=2) if rep > 1 else v
+        out = attention_ref(
+            qf,
+            kr.transpose(0, 2, 1, 3).reshape(b * hq, skv, d),
+            vr.transpose(0, 2, 1, 3).reshape(b * hq, skv, d),
+            causal=causal,
+        )
+    else:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        bq = min(block_q, sq)
+        bk = min(block_k, skv)
+        while sq % bq:
+            bq //= 2
+        while skv % bk:
+            bk //= 2
+        out = _flash_call(
+            qf, kf, vf, block_q=max(bq, 1), block_k=max(bk, 1),
+            causal=causal, interpret=interpret, group=rep,
+        )
+    return out.reshape(b, hq, sq, d).transpose(0, 2, 1, 3)

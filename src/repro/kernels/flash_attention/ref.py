@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for flash attention (materializes full logits)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True
+) -> jax.Array:
+    """(BH, Sq, D) x (BH, Skv, D) -> (BH, Sq, D), softmax in f32."""
+    d = q.shape[-1]
+    s = jnp.einsum(
+        "bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) / (d ** 0.5)
+    if causal:
+        sq, skv = q.shape[1], k.shape[1]
+        qi = jnp.arange(sq)[:, None]
+        kj = jnp.arange(skv)[None, :]
+        s = jnp.where(qi >= kj, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

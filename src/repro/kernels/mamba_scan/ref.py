@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the SSD scan: naive sequential recurrence (gold)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(
+    xdt: jax.Array,   # (BH, S, P)
+    la: jax.Array,    # (BH, S)
+    b: jax.Array,     # (BH, S, N)
+    c: jax.Array,     # (BH, S, N)
+    h0: jax.Array | None = None,   # (BH, P, N)
+) -> tuple[jax.Array, jax.Array]:
+    """Step-by-step recurrence h_i = a_i h_{i-1} + xdt_i ⊗ B_i ; y_i = h_i·C_i."""
+    bh, s, p = xdt.shape
+    n = b.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((bh, p, n), jnp.float32)
+
+    def step(h, inp):
+        xdt_t, la_t, b_t, c_t = inp  # (BH,P), (BH,), (BH,N), (BH,N)
+        a_t = jnp.exp(la_t.astype(jnp.float32))[:, None, None]
+        h = a_t * h + jnp.einsum(
+            "bp,bn->bpn", xdt_t.astype(jnp.float32), b_t.astype(jnp.float32)
+        )
+        y_t = jnp.einsum("bpn,bn->bp", h, c_t.astype(jnp.float32))
+        return h, y_t
+
+    inputs = (
+        xdt.transpose(1, 0, 2),
+        la.transpose(1, 0),
+        b.transpose(1, 0, 2),
+        c.transpose(1, 0, 2),
+    )
+    h_final, ys = jax.lax.scan(step, h0, inputs)
+    return ys.transpose(1, 0, 2).astype(xdt.dtype), h_final

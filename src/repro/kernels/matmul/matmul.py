@@ -1,0 +1,78 @@
+"""Blocked MXU matmul Pallas kernel — the paper's workload, TPU-native.
+
+The paper distributes row-granulized matrix multiplication across machines;
+on a TPU chip the same granulation recurses one level down: HBM-resident
+operands are tiled into MXU-aligned VMEM blocks.  Grid is
+(M/bm, N/bn, K/bk) with the K dimension sequential ("arbitrary") so partial
+products accumulate in an f32 VMEM scratch; the out block is written once on
+the last K step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    """x @ y with explicit VMEM tiling.  Shapes must tile evenly (ops.py pads)."""
+    m, k = x.shape
+    k2, n = y.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch {x.shape} @ {y.shape}")
+    block_m, block_n, block_k = min(block_m, m), min(block_n, n), min(block_k, k)
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(
+            f"shape ({m},{k})x({k},{n}) not divisible by blocks "
+            f"({block_m},{block_n},{block_k}); use ops.matmul for padding"
+        )
+    n_k = k // block_k
+    grid = (m // block_m, n // block_n, n_k)
+    kernel = functools.partial(_matmul_kernel, n_k=n_k)
+    params = {}
+    if not interpret:
+        params["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+        **params,
+    )(x, y)

@@ -1,0 +1,45 @@
+"""Public matmul op: pads to MXU-aligned tiles, dispatches kernel or oracle."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .matmul import matmul as _matmul_kernel_call
+from .ref import matmul_ref
+
+
+def _round_up(x: int, mult: int) -> int:
+    return (x + mult - 1) // mult * mult
+
+
+def matmul(
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    block_m: int = 256,
+    block_n: int = 256,
+    block_k: int = 512,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """x @ y.  ``use_pallas=None`` auto-selects the kernel on TPU backends and
+    the jnp oracle elsewhere (tests force the kernel with interpret=True)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if not use_pallas:
+        return matmul_ref(x, y)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    m, k = x.shape
+    _, n = y.shape
+    bm, bn, bk = (min(block_m, _round_up(m, 8)),
+                  min(block_n, _round_up(n, 128)),
+                  min(block_k, _round_up(k, 128)))
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k))) if (mp != m or kp != k) else x
+    yp = jnp.pad(y, ((0, kp - k), (0, np_ - n))) if (kp != k or np_ != n) else y
+    out = _matmul_kernel_call(
+        xp, yp, block_m=bm, block_n=bn, block_k=bk, interpret=interpret
+    )
+    return out[:m, :n]

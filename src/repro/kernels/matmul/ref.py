@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the blocked matmul kernel."""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x: jax.Array, y: jax.Array) -> jax.Array:
+    return jnp.dot(
+        x, y, preferred_element_type=jnp.float32
+    ).astype(x.dtype)

@@ -1,0 +1,477 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. builds abstract inputs (ShapeDtypeStructs — nothing allocated),
+  3. jits the step with explicit in/out shardings from sharding/policy.py,
+  4. ``.lower().compile()`` — success proves the distribution config is
+     coherent (sharding divisibility, collective legality, compile-time mem),
+  5. records memory_analysis / cost_analysis / per-collective bytes into
+     ``results/dryrun/<arch>__<shape>__<mesh>[__tag].json`` for §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+  ... --set cache_update=onehot --tag onehot      (perf-iteration knobs)
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from ..configs import ARCH_IDS, SHAPES, cell_status, get_config, input_specs
+from ..models.model import Model
+from ..optim.adamw import AdamWConfig
+from ..sharding.policy import Policy
+from ..train.step import make_decode_step, make_prefill_step, make_train_step
+from ..train.train_state import init_train_state
+from .mesh import HW, make_production_mesh
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_V2_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return default
+
+
+def collective_stats(hlo_text: str, n_devices: int) -> dict:
+    """Per-device collective bytes from the post-SPMD HLO, ring model:
+    all-gather/all-to-all: r*(g-1)/g ; reduce-scatter: r*(g-1) ;
+    all-reduce: 2*r*(g-1)/g ; collective-permute: r.  (r = result bytes)."""
+    per_op: dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    counts: dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    top: list[tuple] = []
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "=" not in ls:
+            continue
+        lhs, _, rhs = ls.partition("=")
+        rhs = rhs.strip()
+        op = None
+        for c in _COLLECTIVES:
+            if rhs.split("(")[0].strip().split(" ")[-1] in (c, c + "-start"):
+                op = c
+                break
+        if op is None:
+            continue
+        r = _shape_bytes(lhs) or _shape_bytes(rhs.split("(")[0])
+        g = _group_size(ls, n_devices)
+        if g <= 1:
+            continue
+        if op == "all-gather" or op == "all-to-all":
+            b = r * (g - 1) / g
+        elif op == "reduce-scatter":
+            b = r * (g - 1)
+        elif op == "all-reduce":
+            b = 2 * r * (g - 1) / g
+        else:
+            b = r
+        per_op[op] += b
+        counts[op] += 1
+        top.append((b, f"{op} g={g} {lhs.strip()[:120]}"))
+    top.sort(key=lambda x: -x[0])
+    return {
+        "bytes_per_device": sum(per_op.values()),
+        "per_op_bytes": per_op,
+        "per_op_counts": counts,
+        "top_ops": [{"bytes": b, "what": w} for b, w in top[:12]],
+    }
+
+
+def model_flops(cfg, model: Model, shape, n_tokens: int, kind: str) -> float:
+    """6*N_active*D (train) / 2*N_active*D (inference); N counts non-embedding
+    params with routed experts scaled by top_k/E, plus the LM head."""
+    abstract = model.abstract_params()
+    total = 0
+    routed = 0
+    embed = 0
+
+    def visit(path, leaf):
+        nonlocal total, routed, embed
+        names = [str(k.key) for k in path if hasattr(k, "key")]
+        n = int(np.prod(leaf.shape))
+        total += n
+        if "moe" in names and names[-1] in ("w_gate", "w_up", "w_down") and "shared" not in names:
+            routed += n
+        if "embed" in names and names[-1] == "table":
+            embed += n
+
+    jax.tree_util.tree_map_with_path(visit, abstract)
+    active = total - embed
+    if cfg.moe:
+        active -= routed * (1 - cfg.moe.top_k / cfg.moe.n_routed)
+    if cfg.tie_embeddings:
+        active += embed  # tied head matmul still costs flops
+    mult = 6.0 if kind == "train" else 2.0
+    return mult * active * n_tokens, {"params_total": total, "params_active": active}
+
+
+def build_step(cfg, model: Model, kind: str, policy: Policy, specs: dict,
+               n_micro: int = 1):
+    """Returns (fn, args, in_shardings, out_shardings, donate)."""
+    if kind == "train":
+        step = make_train_step(model, AdamWConfig(), n_micro=n_micro)
+        abstract_state = jax.eval_shape(
+            lambda: init_train_state(model.init(jax.random.key(0)))
+        )
+        from ..train.train_state import TrainState
+
+        p_sh = policy.to_shardings(policy.param_specs(abstract_state.params))
+        state_sh = TrainState(
+            params=p_sh,
+            opt={
+                "m": p_sh,
+                "v": p_sh,
+                "step": policy.to_shardings(jax.sharding.PartitionSpec()),
+            },
+        )
+        batch_sh = policy.to_shardings(policy.batch_specs(specs["batch"]))
+        return (
+            step,
+            (abstract_state, specs["batch"]),
+            (state_sh, batch_sh),
+            (state_sh, None),
+            (0,),
+        )
+    if kind == "prefill":
+        step = make_prefill_step(model)
+        abstract_params = model.abstract_params()
+        p_sh = policy.to_shardings(policy.param_specs(abstract_params))
+        batch_sh = policy.to_shardings(policy.batch_specs(specs["batch"]))
+        cache_sh_out = None  # let XLA place prefill caches
+        return (
+            step,
+            (abstract_params, specs["batch"]),
+            (p_sh, batch_sh),
+            (None, cache_sh_out),
+            (),
+        )
+    # decode
+    step = make_decode_step(model)
+    abstract_params = model.abstract_params()
+    p_sh = policy.to_shardings(policy.param_specs(abstract_params))
+    cache_sh = policy.to_shardings(policy.cache_specs(specs["caches"]))
+    in_sh = policy.to_shardings(policy.batch_specs(specs["inputs"]))
+    pos_sh = policy.to_shardings(jax.sharding.PartitionSpec())
+    return (
+        step,
+        (abstract_params, specs["caches"], specs["inputs"], specs["pos"]),
+        (p_sh, cache_sh, in_sh, pos_sh),
+        (None, cache_sh),
+        (1,),
+    )
+
+
+def _measure(cfg, shape, mesh, n_dev) -> dict:
+    """Lower+compile one configuration; return raw per-device cost terms."""
+    model = Model(cfg)
+    policy = Policy(cfg, mesh)
+    specs = input_specs(cfg, shape, concrete=False)
+    fn, args, in_sh, out_sh, donate = build_step(cfg, model, shape.kind, policy, specs)
+    with mesh:
+        lowered = jax.jit(
+            fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate
+        ).lower(*args)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = collective_stats(compiled.as_text(), n_dev)
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll_bytes": coll["bytes_per_device"],
+        "coll": coll,
+        "compiled": compiled,
+    }
+
+
+def _small_cfg(cfg, k: int):
+    """cfg with k periods (and k encoder layers for enc-dec), fully unrolled."""
+    reps = {
+        "n_layers": len(cfg.prefix_pattern) + k * len(cfg.layer_pattern),
+        "full_unroll": True,
+    }
+    if cfg.encoder is not None:
+        from ..models.config import EncoderConfig
+
+        reps["encoder"] = EncoderConfig(n_layers=k)
+    return dataclasses.replace(cfg, **reps)
+
+
+def extrapolated_costs(cfg, shape, mesh, n_dev) -> dict:
+    """HloCostAnalysis visits lax.scan while-bodies once, so scanned stacks
+    undercount flops/bytes/collectives.  Fix: compile 1-period and 2-period
+    models fully unrolled (cheap) and extrapolate linearly to P periods —
+    exact, because periods are identical by construction.
+
+    Returns per-device totals: base + P * body for each term."""
+    p = cfg.n_periods
+    # Compile-time control: the unrolled chunked-attention loops would emit
+    # (S/chunk)^2 blocks at 32k+ context; widen the chunk so the unrolled
+    # cost compiles stay ~8x8 blocks.  Totals (flops/bytes) are first-order
+    # invariant to the chunk size, so the measurement is unaffected.
+    attn_chunk = max(cfg.attn_chunk, shape.seq_len // 8)
+    u1 = _measure(
+        dataclasses.replace(_small_cfg(cfg, 1), attn_chunk=attn_chunk),
+        shape, mesh, n_dev,
+    )
+    u2 = _measure(
+        dataclasses.replace(_small_cfg(cfg, 2), attn_chunk=attn_chunk),
+        shape, mesh, n_dev,
+    )
+    out = {}
+    for key in ("flops", "bytes", "coll_bytes"):
+        body = max(u2[key] - u1[key], 0.0)
+        out[key] = u1[key] + (p - 1) * body
+        out[key + "_body"] = body
+    # collective op counts, extrapolated for the report
+    per_op = {}
+    for op in u1["coll"]["per_op_bytes"]:
+        b1 = u1["coll"]["per_op_bytes"][op]
+        b2 = u2["coll"]["per_op_bytes"][op]
+        per_op[op] = b1 + (p - 1) * max(b2 - b1, 0.0)
+    out["per_op_bytes"] = per_op
+    out["top_ops"] = u2["coll"].get("top_ops", [])  # per-period shapes visible here
+    return out
+
+
+def run_cell(
+    arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+    overrides: dict | None = None, tag: str = "", extrapolate: bool = True,
+    n_micro: int = 1,
+) -> dict:
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch, **(overrides or {}))
+    status = cell_status(cfg, shape)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind, "tag": tag,
+        "status": status, "overrides": {k: str(v) for k, v in (overrides or {}).items()},
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{mesh_kind}{'__' + tag if tag else ''}.json"
+    path = os.path.join(out_dir, fname)
+    if status != "run":
+        with open(path, "w") as f:
+            json.dump(result, f, indent=2)
+        return result
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    model = Model(cfg)
+    policy = Policy(cfg, mesh)
+    specs = input_specs(cfg, shape, concrete=False)
+    fn, args, in_sh, out_sh, donate = build_step(
+        cfg, model, shape.kind, policy, specs, n_micro=n_micro
+    )
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(
+            fn, in_shardings=in_sh, out_shardings=out_sh,
+            donate_argnums=donate,
+        )
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo, n_dev)
+
+    n_tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    if cfg.is_enc_dec and shape.kind != "decode":
+        n_tokens = shape.global_batch * shape.seq_len // 2  # decoder tokens
+    mf, pstats = model_flops(cfg, model, shape, n_tokens, shape.kind)
+
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    raw_scan = {
+        "flops": flops_dev,
+        "bytes": bytes_dev,
+        "coll_bytes": coll["bytes_per_device"],
+    }
+    if extrapolate:
+        ext = extrapolated_costs(cfg, shape, mesh, n_dev)
+        flops_dev, bytes_dev = ext["flops"], ext["bytes"]
+        coll = {
+            "bytes_per_device": ext["coll_bytes"],
+            "per_op_bytes": ext["per_op_bytes"],
+            "per_op_counts": coll["per_op_counts"],
+            "top_ops": ext["top_ops"],
+        }
+        result["raw_scan_costs"] = raw_scan
+        result["extrapolation"] = {k: v for k, v in ext.items()
+                                   if k.endswith("_body")}
+    mem_stats = {
+        "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+        "output_bytes": getattr(mem, "output_size_in_bytes", None),
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+        "peak_bytes": getattr(mem, "peak_memory_in_bytes", None)
+        if hasattr(mem, "peak_memory_in_bytes") else None,
+        "alias_bytes": getattr(mem, "alias_size_in_bytes", None),
+    }
+    chips = n_dev
+    compute_s = flops_dev / HW["peak_flops_bf16"]
+    memory_s = bytes_dev / HW["hbm_bw"]
+    collective_s = coll["bytes_per_device"] / HW["ici_bw"]
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+    result.update(
+        {
+            "n_devices": chips,
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "memory": mem_stats,
+            "cost_flops_per_device": flops_dev,
+            "cost_bytes_per_device": bytes_dev,
+            "collectives": coll,
+            "model_flops_total": mf,
+            "params": pstats,
+            "tokens": n_tokens,
+            "roofline": {
+                "compute_s": compute_s,
+                "memory_s": memory_s,
+                "collective_s": collective_s,
+                "dominant": dominant,
+                "useful_flops_ratio": mf / max(flops_dev * chips, 1.0),
+            },
+        }
+    )
+    with open(path, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument(
+        "--set", action="append", default=[],
+        help="ModelConfig overrides key=value (e.g. cache_update=onehot)",
+    )
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--no-extrapolate", action="store_true",
+                    help="skip the 1/2-period unrolled cost extrapolation")
+    ap.add_argument("--n-micro", type=int, default=1,
+                    help="microbatch accumulation steps inside train_step")
+    args = ap.parse_args()
+
+    def parse_val(v: str):
+        if v.lower() in ("true", "false"):
+            return v.lower() == "true"
+        try:
+            return int(v)
+        except ValueError:
+            pass
+        try:
+            return float(v)
+        except ValueError:
+            return v
+
+    overrides = {}
+    for kv in args.set:
+        k, _, v = kv.partition("=")
+        overrides[k] = parse_val(v)
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mk in meshes:
+                    cells.append((arch, shape, mk))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required without --all")
+        cells = [(args.arch, args.shape, mk) for mk in meshes]
+
+    failures = []
+    for arch, shape, mk in cells:
+        fname = f"{arch}__{shape}__{mk}{'__' + args.tag if args.tag else ''}.json"
+        if args.skip_existing and os.path.exists(os.path.join(args.out, fname)):
+            print(f"[skip existing] {fname}")
+            continue
+        print(f"=== {arch} x {shape} x {mk} ===", flush=True)
+        try:
+            res = run_cell(arch, shape, mk, args.out, overrides, args.tag,
+                           extrapolate=(mk == "single" and not args.no_extrapolate),
+                           n_micro=args.n_micro)
+            if res["status"] != "run":
+                print(f"  SKIPPED: {res['status']}")
+                continue
+            r = res["roofline"]
+            print(
+                f"  ok  compile={res['compile_s']}s  "
+                f"flops/dev={res['cost_flops_per_device']:.3e}  "
+                f"coll_bytes/dev={res['collectives']['bytes_per_device']:.3e}  "
+                f"terms(c/m/x)=({r['compute_s']:.4f}/{r['memory_s']:.4f}/"
+                f"{r['collective_s']:.4f})s dominant={r['dominant']}",
+                flush=True,
+            )
+        except Exception as e:
+            failures.append((arch, shape, mk, repr(e)))
+            print(f"  FAILED: {e}")
+            traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("\nall cells green")
+
+
+if __name__ == "__main__":
+    main()

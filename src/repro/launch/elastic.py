@@ -1,0 +1,99 @@
+"""Elastic fleet management: re-mesh plans after pod loss/join.
+
+At 1000+ node scale, pod failures are routine.  The recovery path here is the
+TDA-shaped one the rest of the framework already implements:
+
+  1. heartbeats stop → PerformanceTracker.sweep declares the pod dead,
+  2. ElasticFleet computes the new *outer* worker set and a RemeshPlan:
+     which mesh each surviving pod runs (inner SPMD meshes are per-pod and
+     unchanged — a dead pod never forces a global re-shard), how the grain
+     scope-lengths redistribute, and which checkpoint step to resume from,
+  3. survivors reload the last complete checkpoint (grain addressing is a
+     pure function of (step, plan), so no data-redistribution protocol) and
+     training continues.
+
+The inner-mesh story for a *partial* pod loss (some chips of a slice) is
+re-slicing: the pod re-enters with a smaller inner mesh and a proportionally
+smaller heartbeat perf — homogenization then allots it less work, no special
+case needed.  That degradation path is exactly the paper's mechanism.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from ..core.homogenization import scope_lengths
+from ..core.performance import PerformanceTracker
+from ..core.scheduler import GrainPlan
+
+__all__ = ["PodSpec", "RemeshPlan", "ElasticFleet"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PodSpec:
+    name: str
+    n_chips: int                # inner mesh size (e.g. 256)
+    mesh_shape: tuple[int, int]  # inner (data, model)
+
+    def __post_init__(self):
+        d, m = self.mesh_shape
+        if d * m != self.n_chips:
+            raise ValueError(f"{self.name}: mesh {self.mesh_shape} != {self.n_chips} chips")
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    survivors: tuple[str, ...]
+    grain_plan: GrainPlan
+    resume_step: int
+    lost: tuple[str, ...]
+
+    @property
+    def capacity_fraction(self) -> float:
+        return len(self.survivors) / max(len(self.survivors) + len(self.lost), 1)
+
+
+class ElasticFleet:
+    def __init__(self, pods: list[PodSpec], tracker: PerformanceTracker,
+                 total_grains: int):
+        self.pods = {p.name: p for p in pods}
+        self.tracker = tracker
+        self.total_grains = total_grains
+        self._lost: set[str] = set()
+
+    def alive(self) -> list[str]:
+        return [n for n in self.pods if n not in self._lost]
+
+    def handle_failures(self, now_s: float, last_ckpt_step: int) -> RemeshPlan | None:
+        """Sweep heartbeats; if pods died, produce the recovery plan."""
+        died = self.tracker.sweep(now_s)
+        died = [d for d in died if d in self.pods and d not in self._lost]
+        if not died:
+            return None
+        self._lost.update(died)
+        return self._plan(last_ckpt_step)
+
+    def handle_join(self, pod: PodSpec, perf_prior: float, now_s: float,
+                    last_ckpt_step: int) -> RemeshPlan:
+        """A (repaired or new) pod joins; it starts with a prior perf and the
+        tracker refines it from real heartbeats."""
+        from ..core.performance import PerfReport
+
+        self.pods[pod.name] = pod
+        self._lost.discard(pod.name)
+        self.tracker.observe(PerfReport(pod.name, perf_prior, 1.0, now_s))
+        return self._plan(last_ckpt_step)
+
+    def _plan(self, resume_step: int) -> RemeshPlan:
+        alive = self.alive()
+        if not alive:
+            raise RuntimeError("all pods lost")
+        perfs = self.tracker.perf_vector()
+        ps = [max(perfs.get(n, 1e-9), 1e-9) for n in alive]
+        shares = scope_lengths(self.total_grains, ps)
+        return RemeshPlan(
+            survivors=tuple(alive),
+            grain_plan=GrainPlan(tuple(alive), tuple(shares), self.total_grains),
+            resume_step=resume_step,
+            lost=tuple(sorted(self._lost)),
+        )

@@ -1,0 +1,12 @@
+from .config import (
+    EncoderConfig,
+    LayerSpec,
+    MLAConfig,
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+)
+from .model import Model
+
+__all__ = ["EncoderConfig", "LayerSpec", "MLAConfig", "ModelConfig",
+           "MoEConfig", "SSMConfig", "Model"]

@@ -1,0 +1,154 @@
+"""Mamba-2 block (SSD form, arXiv:2405.21060) with train + decode paths.
+
+Projections are kept *separate* (wz/wx/wb/wc/wdt instead of one fused in_proj)
+so each output dim shards cleanly over the `model` mesh axis without slicing a
+concatenated sharded dimension (see DESIGN.md §5).  Math is identical to the
+fused layout.
+
+jamba's mamba layers reuse this block (Jamba ships Mamba-1; we implement the
+SSD/Mamba-2 equivalent as the TPU-native form — deviation noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.mamba_scan.ops import ssd
+from .config import ModelConfig
+from .layers import dense_init, dtype_of, gated_rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaCache:
+    conv: jax.Array    # (B, d_conv-1, conv_channels) rolling window
+    state: jax.Array   # (B, H, P, N) ssm state
+
+
+jax.tree_util.register_dataclass(MambaCache, data_fields=["conv", "state"], meta_fields=[])
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.d_inner(cfg.d_model)
+    heads = s.n_heads(cfg.d_model)
+    gn = s.n_groups * s.d_state
+    conv_ch = d_in + 2 * gn        # conv runs over (x, B, C) streams
+    return s, d_in, heads, gn, conv_ch
+
+
+def init_mamba(key, cfg: ModelConfig) -> dict:
+    s, d_in, heads, gn, conv_ch = _dims(cfg)
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": dense_init(ks[0], (cfg.d_model, d_in), dt),
+        "wx": dense_init(ks[1], (cfg.d_model, d_in), dt),
+        "wb": dense_init(ks[2], (cfg.d_model, gn), dt),
+        "wc": dense_init(ks[3], (cfg.d_model, gn), dt),
+        "wdt": dense_init(ks[4], (cfg.d_model, heads), dt),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, heads, dtype=jnp.float32)
+        ),  # A = -exp(a_log), mamba2 init A in [1,16]
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "conv_w": dense_init(ks[5], (s.d_conv, conv_ch), dt, scale=1.0),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "norm": jnp.ones((d_in,), dt),
+        "wo": dense_init(ks[6], (d_in, cfg.d_model), dt),
+    }
+
+
+def _conv_full(p: dict, u: jax.Array, d_conv: int) -> jax.Array:
+    """Causal depthwise conv over (B, S, C): pad left, window-sum."""
+    pad = d_conv - 1
+    up = jnp.pad(u, ((0, 0), (pad, 0), (0, 0)))
+    out = sum(
+        up[:, i : i + u.shape[1], :] * p["conv_w"][i][None, None, :]
+        for i in range(d_conv)
+    )
+    return jax.nn.silu((out + p["conv_b"]).astype(jnp.float32)).astype(u.dtype)
+
+
+def mamba_train(
+    p: dict, cfg: ModelConfig, x: jax.Array
+) -> tuple[jax.Array, MambaCache]:
+    """Full-sequence SSD.  Returns output and final recurrent state (used by
+    prefill; train ignores it)."""
+    s, d_in, heads, gn, conv_ch = _dims(cfg)
+    b, seq, _ = x.shape
+    z = jnp.einsum("bsd,de->bse", x, p["wz"])
+    xs = jnp.einsum("bsd,de->bse", x, p["wx"])
+    bs = jnp.einsum("bsd,de->bse", x, p["wb"])
+    cs = jnp.einsum("bsd,de->bse", x, p["wc"])
+    dt_raw = jnp.einsum("bsd,dh->bsh", x, p["wdt"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    u = jnp.concatenate([xs, bs, cs], axis=-1)
+    conv_out = _conv_full(p, u, s.d_conv)
+    xc = conv_out[..., :d_in].reshape(b, seq, heads, s.head_dim)
+    bc = conv_out[..., d_in : d_in + gn].reshape(b, seq, s.n_groups, s.d_state)
+    cc = conv_out[..., d_in + gn :].reshape(b, seq, s.n_groups, s.d_state)
+    a = -jnp.exp(p["a_log"])
+    y, state = ssd(
+        xc, dt.astype(xc.dtype), a, bc, cc, p["d_skip"],
+        chunk=s.chunk, use_pallas=cfg.use_pallas, unroll=cfg.full_unroll,
+    )
+    y = y.reshape(b, seq, d_in)
+    y = gated_rms_norm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["wo"])
+    conv_tail = jnp.concatenate([jnp.zeros((b, s.d_conv - 1, conv_ch), u.dtype), u], 1)[
+        :, -(s.d_conv - 1) :, :
+    ]
+    return out, MambaCache(conv=conv_tail, state=state)
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int) -> MambaCache:
+    s, d_in, heads, gn, conv_ch = _dims(cfg)
+    dt = dtype_of(cfg.compute_dtype)
+    return MambaCache(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_ch), dt),
+        state=jnp.zeros((batch, heads, s.head_dim, s.d_state), jnp.float32),
+    )
+
+
+def mamba_decode(
+    p: dict, cfg: ModelConfig, x: jax.Array, cache: MambaCache
+) -> tuple[jax.Array, MambaCache]:
+    """One-token recurrent step.  x: (B, 1, d)."""
+    s, d_in, heads, gn, conv_ch = _dims(cfg)
+    b = x.shape[0]
+    xt = x[:, 0]
+    z = jnp.einsum("bd,de->be", xt, p["wz"])
+    u_t = jnp.concatenate(
+        [
+            jnp.einsum("bd,de->be", xt, p["wx"]),
+            jnp.einsum("bd,de->be", xt, p["wb"]),
+            jnp.einsum("bd,de->be", xt, p["wc"]),
+        ],
+        axis=-1,
+    )                                                    # (B, conv_ch)
+    dt_raw = jnp.einsum("bd,dh->bh", xt, p["wdt"]).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])          # (B, H)
+    window = jnp.concatenate([cache.conv, u_t[:, None, :]], axis=1)  # (B,dc,C)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xc = conv_out[:, :d_in].reshape(b, heads, s.head_dim)
+    bc = conv_out[:, d_in : d_in + gn].reshape(b, s.n_groups, s.d_state)
+    cc = conv_out[:, d_in + gn :].reshape(b, s.n_groups, s.d_state)
+    rep = heads // s.n_groups
+    bch = jnp.repeat(bc, rep, axis=1)                    # (B, H, N)
+    cch = jnp.repeat(cc, rep, axis=1)
+    a = -jnp.exp(p["a_log"])                             # (H,)
+    decay = jnp.exp(dt * a[None, :])                     # (B, H)
+    xdt = (xc.astype(jnp.float32) * dt[..., None])       # (B, H, P)
+    state = cache.state * decay[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xdt, bch.astype(jnp.float32)
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", state, cch.astype(jnp.float32))
+    y = y + xc.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(b, d_in).astype(x.dtype)
+    y = gated_rms_norm(y, z, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["wo"])[:, None, :]
+    return out, MambaCache(conv=window[:, 1:], state=state)

@@ -1,0 +1,180 @@
+"""Mixture-of-Experts with homogenized expert capacity.
+
+Routing is top-k with capacity buckets built by a sort-free rank scatter
+(static shapes, SPMD-friendly): each token gets a rank among the tokens routed
+to its expert via a cumulative one-hot count; tokens whose rank exceeds the
+expert's capacity are dropped (standard GShard/Switch semantics).
+
+**Homogenization hook (the paper's technique at expert granularity):** each
+expert's capacity is its *scope length*.  ``capacity_per_expert`` accepts a
+performance vector (measured expert throughput — heterogeneous when experts
+land on heterogeneous slices, or proxy-estimated from historical load) and
+allots the global token budget proportionally via
+``core.homogenization.scope_lengths``, so all experts finish their expert-FFN
+matmuls at the same time.  Uniform perfs degrade to the classic equal
+capacity.
+
+Shared experts (DeepSeek/Qwen-MoE style) run densely beside the routed path.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from ..core.homogenization import scope_lengths
+from .config import ModelConfig
+from .layers import dense_init, dtype_of
+
+
+def capacity_per_expert(
+    n_tokens: int, cfg_moe, expert_perfs=None, round_to: int = 8
+) -> np.ndarray:
+    """Scope-length allotment of the routed-token budget across experts."""
+    e = cfg_moe.n_routed
+    budget = int(cfg_moe.capacity_factor * n_tokens * cfg_moe.top_k)
+    if expert_perfs is None:
+        caps = np.full(e, (budget + e - 1) // e, np.int64)
+    else:
+        caps = np.asarray(scope_lengths(budget, list(expert_perfs)), np.int64)
+    caps = np.maximum((caps + round_to - 1) // round_to * round_to, round_to)
+    return caps
+
+
+def init_moe(key, cfg: ModelConfig) -> dict:
+    m = cfg.moe
+    dt = dtype_of(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (cfg.d_model, m.n_routed), jnp.float32, scale=0.1),
+        "w_gate": dense_init(ks[1], (m.n_routed, cfg.d_model, m.d_expert), dt),
+        "w_up": dense_init(ks[2], (m.n_routed, cfg.d_model, m.d_expert), dt),
+        "w_down": dense_init(ks[3], (m.n_routed, m.d_expert, cfg.d_model), dt),
+    }
+    if m.n_shared:
+        ks2 = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(ks2[0], (cfg.d_model, m.d_shared), dt),
+            "w_up": dense_init(ks2[1], (cfg.d_model, m.d_shared), dt),
+            "w_down": dense_init(ks2[2], (m.d_shared, cfg.d_model), dt),
+        }
+    return p
+
+
+def apply_moe(
+    p: dict, cfg: ModelConfig, x: jax.Array, capacities: jax.Array | None = None
+) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss).  ``capacities``: (E,) int32 (static or
+    traced); None => uniform capacity from the config's capacity factor."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                       # (T, E)
+    gate_vals, experts = jax.lax.top_k(probs, m.top_k)            # (T, K)
+    if m.normalize_topk:
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+        )
+    gate_vals = gate_vals * m.routed_scaling
+
+    # Load-balancing aux loss (Switch): E * sum_e f_e * p_e.
+    me = jnp.mean(probs, axis=0)
+    onehot_first = jax.nn.one_hot(experts[:, 0], m.n_routed, dtype=jnp.float32)
+    fe = jnp.mean(onehot_first, axis=0)
+    aux = m.n_routed * jnp.sum(fe * me) * m.router_aux_coef
+
+    if capacities is None:
+        cap = int(np.ceil(m.capacity_factor * t * m.top_k / m.n_routed))
+        cap = max((cap + 7) // 8 * 8, 8)
+        capacities = jnp.full((m.n_routed,), cap, jnp.int32)
+    cap_max = int(np.ceil(m.capacity_factor * t * m.top_k / m.n_routed * 2))
+    cap_max = max((cap_max + 7) // 8 * 8, 8)
+
+    # Rank of each (token, k) assignment within its expert (order: token id).
+    flat_experts = experts.reshape(-1)                            # (T*K,)
+    eo = jax.nn.one_hot(flat_experts, m.n_routed, dtype=jnp.int32)
+    ranks = (jnp.cumsum(eo, axis=0) - eo).reshape(t, m.top_k, m.n_routed)
+    rank_in_expert = jnp.take_along_axis(
+        ranks.reshape(t * m.top_k, m.n_routed), flat_experts[:, None], axis=1
+    ).reshape(t, m.top_k)
+    keep = (rank_in_expert < capacities[experts]) & (rank_in_expert < cap_max)
+
+    # Scatter tokens into (E, C) buckets; dropped tokens write to an OOB
+    # sentinel index that ``mode="drop"`` discards.
+    bucket_idx = jnp.where(
+        keep, experts * cap_max + rank_in_expert, m.n_routed * cap_max
+    )                                                             # (T, K)
+    token_ids = jnp.broadcast_to(jnp.arange(t)[:, None], (t, m.top_k))
+    gather_src = jnp.zeros((m.n_routed * cap_max,), jnp.int32)
+    gather_src = gather_src.at[bucket_idx.reshape(-1)].set(
+        token_ids.reshape(-1), mode="drop"
+    )
+    filled = jnp.zeros((m.n_routed * cap_max,), jnp.bool_).at[
+        bucket_idx.reshape(-1)
+    ].set(True, mode="drop")
+
+    xg = xt[gather_src.reshape(m.n_routed, cap_max)]              # (E, C, d)
+    xg = jnp.where(filled.reshape(m.n_routed, cap_max)[..., None], xg, 0)
+    g = jnp.einsum("ecd,edf->ecf", xg, p["w_gate"])
+    u = jnp.einsum("ecd,edf->ecf", xg, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    yo = jnp.einsum("ecf,efd->ecd", h, p["w_down"])               # (E, C, d)
+
+    # Combine: token t gets sum_k gate * y[expert_k, slot_k].
+    yo_flat = yo.reshape(m.n_routed * cap_max, d)
+    per_k = yo_flat[bucket_idx]                                   # (T, K, d)
+    combine = jnp.where(keep[..., None], per_k * gate_vals[..., None].astype(x.dtype), 0)
+    out = jnp.sum(combine, axis=1).reshape(b, s, d)
+
+    if m.n_shared:
+        sp = p["shared"]
+        g = jnp.einsum("bsd,df->bsf", x, sp["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, sp["w_up"])
+        hshared = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        out = out + jnp.einsum("bsf,fd->bsd", hshared, sp["w_down"])
+    return out, aux
+
+
+def apply_moe_dense(p: dict, cfg: ModelConfig, x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Dropless decode path: sweep every expert over the (small) token batch
+    and mask by the top-k gates.  Exact (no capacity drops); FLOPs are
+    E/top_k times the routed cost, which is the right trade at decode batch
+    sizes (T = B·1) where the capacity machinery would be all overhead."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, experts = jax.lax.top_k(probs, m.top_k)
+    if m.normalize_topk:
+        gate_vals = gate_vals / jnp.maximum(
+            jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+        )
+    gate_vals = gate_vals * m.routed_scaling
+    gates = jnp.zeros((t, m.n_routed), jnp.float32).at[
+        jnp.arange(t)[:, None], experts
+    ].add(gate_vals)
+    g = jnp.einsum("td,edf->etf", xt, p["w_gate"])
+    u = jnp.einsum("td,edf->etf", xt, p["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    y = jnp.einsum("etf,efd->etd", h, p["w_down"])
+    out = jnp.einsum("etd,te->td", y, gates.astype(x.dtype)).reshape(b, s, d)
+    if m.n_shared:
+        sp = p["shared"]
+        g = jnp.einsum("bsd,df->bsf", x, sp["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, sp["w_up"])
+        hs = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+        out = out + jnp.einsum("bsf,fd->bsd", hs, sp["w_down"])
+    return out, jnp.zeros((), jnp.float32)
+
+
+def expert_load(cfg_moe, probs_or_logits: jax.Array) -> jax.Array:
+    """Diagnostic: fraction of top-1 routed tokens per expert."""
+    probs = jax.nn.softmax(probs_or_logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    return jnp.bincount(top1, length=cfg_moe.n_routed) / probs.shape[0]

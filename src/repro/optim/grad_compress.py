@@ -1,0 +1,59 @@
+"""int8 error-feedback gradient compression for the DP all-reduce.
+
+Large-scale trick: the cross-pod (DCN) gradient all-reduce is
+bandwidth-limited, so compress grads to int8 with per-tensor scale before the
+collective and keep the quantization residual locally (error feedback), which
+provably preserves convergence for SGD-family optimizers.
+
+Compression is simulated faithfully on CPU (quantize -> dequantize);
+on a real fleet the int8 payload is what crosses DCN (4x byte reduction of the
+collective term — accounted in EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """per-tensor absmax int8 quantization. Returns (q, scale)."""
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_tree(grads, residuals):
+    """Error-feedback compression over a pytree.
+
+    Returns (dequantized grads to feed the all-reduce/optimizer,
+             new residuals = (g + r) - dequant(q)).
+    """
+
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        q, s = compress(corrected)
+        deq = decompress(q, s)
+        return deq, corrected - deq
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r, strict=True)]
+    deq = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    res = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return deq, res
+
+
+def init_residuals(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_bytes(params) -> int:
+    """Bytes crossing the wire per step with int8 + fp32 scale per tensor."""
+    leaves = jax.tree.leaves(params)
+    return sum(l.size for l in leaves) + 4 * len(leaves)

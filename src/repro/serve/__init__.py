@@ -1,0 +1,4 @@
+from .dispatch import DispatchResult, HomogenizedDispatcher, Replica
+from .engine import DecodeEngine, Request
+
+__all__ = ["DispatchResult", "HomogenizedDispatcher", "Replica", "DecodeEngine", "Request"]

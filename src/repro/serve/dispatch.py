@@ -1,0 +1,72 @@
+"""Homogenized request dispatch across serving replicas.
+
+The paper's scope-length allotment applied at the serving tier: replicas are
+service-providers, a request bundle is the linearly-divisible load, and the
+dispatcher (TDA server) assigns each replica a share proportional to its
+homogenized performance (EMA of measured tokens/sec heartbeats).  All
+replicas drain their queues at the same moment — the homogenization line —
+which minimizes the bundle's completion time (makespan).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from ..core.homogenization import equal_split, scope_lengths
+from ..core.performance import PerformanceTracker, PerfReport
+
+__all__ = ["Replica", "DispatchResult", "HomogenizedDispatcher"]
+
+
+@dataclasses.dataclass
+class Replica:
+    name: str
+    perf: float            # true tokens/sec (hidden; learned via heartbeats)
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchResult:
+    shares: dict[str, int]
+    makespan: float        # simulated: max replica drain time
+    per_replica_time: dict[str, float]
+
+
+class HomogenizedDispatcher:
+    def __init__(self, replicas: Sequence[Replica], homogenize: bool = True,
+                 alpha: float = 0.5):
+        self.replicas = {r.name: r for r in replicas}
+        self.homogenize = homogenize
+        self.tracker = PerformanceTracker(alpha=alpha, dead_after_s=1e9)
+        self.clock = 0.0
+        for r in replicas:
+            self.tracker.observe(PerfReport(r.name, 1.0, 1.0, 0.0))
+
+    def dispatch(self, n_requests: int, tokens_per_request: float = 1.0) -> DispatchResult:
+        names = self.tracker.workers()
+        perfs = [self.tracker.perf(n, self.clock) for n in names]
+        shares = (
+            scope_lengths(n_requests, perfs)
+            if self.homogenize
+            else equal_split(n_requests, len(names))
+        )
+        times = {}
+        for name, share in zip(names, shares, strict=True):
+            r = self.replicas[name]
+            t = share * tokens_per_request / r.perf if share else 0.0
+            times[name] = t
+            if share:
+                self.tracker.observe(
+                    PerfReport(name, share * tokens_per_request, max(t, 1e-9),
+                               self.clock + t)
+                )
+        makespan = max(times.values()) if times else 0.0
+        self.clock += makespan
+        return DispatchResult(
+            shares=dict(zip(names, shares, strict=True)),
+            makespan=makespan,
+            per_replica_time=times,
+        )
+
+    def kill(self, name: str) -> None:
+        self.tracker.mark_dead(name)

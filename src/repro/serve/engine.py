@@ -1,0 +1,150 @@
+"""Continuous-batching decode engine (single replica).
+
+A fixed pool of ``max_batch`` slots shares one jitted batched decode_step
+with a *per-slot position vector* — slots advance independently, so finished
+sequences are replaced by queued requests immediately (continuous batching)
+with no head-of-line blocking.  Prompts are teacher-forced through the decode
+path token-by-token, which keeps a single compiled shape per engine — the
+right trade for the CPU test harness; on TPU the same engine would take a
+prefill fast path per admitted request.
+
+The engine reports throughput heartbeats which the homogenized dispatcher
+(dispatch.py) consumes for cross-replica scope-length allotment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    submit_step: int = 0
+    finish_step: int = 0
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request | None = None
+    pos: int = 0             # next cache index to write
+    fed: int = 0             # prompt tokens already consumed
+
+
+class DecodeEngine:
+    def __init__(
+        self, model: Model, params, max_batch: int = 4, max_seq: int = 128,
+        eos_id: int | None = None, greedy: bool = True, seed: int = 0,
+    ):
+        if model.cfg.input_mode == "embeds" and not model.cfg.is_enc_dec:
+            raise ValueError("DecodeEngine drives token-input models")
+        if model.cfg.is_enc_dec:
+            raise ValueError("use the enc-dec serving path (examples) instead")
+        self.model = model
+        self.params = params
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.greedy = greedy
+        self.rng = np.random.default_rng(seed)
+        self.slots = [_Slot() for _ in range(max_batch)]
+        self.queue: list[Request] = []
+        self.caches = model.init_cache(max_batch, max_seq)
+        self._decode = jax.jit(model.decode_step, donate_argnums=1)
+        self.steps = 0
+        self.tokens_out = 0
+
+    # ----------------------------------------------------------------- admin
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.max_seq:
+            raise ValueError("request exceeds engine max_seq")
+        req.submit_step = self.steps
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in self.slots:
+            if slot.req is None and self.queue:
+                slot.req = self.queue.pop(0)
+                slot.pos = 0
+                slot.fed = 0
+
+    @property
+    def active(self) -> int:
+        return sum(1 for s in self.slots if s.req is not None)
+
+    # ------------------------------------------------------------------ step
+    def step(self) -> list[Request]:
+        """Advance every active slot one token; returns finished requests.
+
+        Idle slots re-write position 0 of their own cache lane with a pad
+        token — harmless (the lane is reinitialized on admission by writing
+        from pos 0 upward, and validity masks bound attention at pos)."""
+        self._admit()
+        if self.active == 0:
+            return []
+        toks = np.zeros((self.max_batch, 1), np.int64)
+        pos = np.zeros((self.max_batch,), np.int64)
+        for i, slot in enumerate(self.slots):
+            r = slot.req
+            if r is None:
+                continue
+            pos[i] = slot.pos
+            if slot.fed < len(r.prompt):
+                toks[i, 0] = r.prompt[slot.fed]
+            else:
+                toks[i, 0] = r.out_tokens[-1]
+        logits, self.caches = self._decode(
+            self.params, self.caches, jnp.asarray(toks, jnp.int32),
+            jnp.asarray(pos, jnp.int32),
+        )
+        self.steps += 1
+        finished = []
+        lg = np.asarray(logits[:, 0], np.float32)
+        for i, slot in enumerate(self.slots):
+            r = slot.req
+            if r is None:
+                continue
+            slot.pos += 1
+            if slot.fed < len(r.prompt):
+                slot.fed += 1
+                if slot.fed < len(r.prompt):
+                    continue  # still feeding prompt; no sample yet
+            nxt = (
+                int(lg[i, : self.model.cfg.vocab_size].argmax())
+                if self.greedy
+                else int(self.rng.choice(self.model.cfg.vocab_size))
+            )
+            r.out_tokens.append(nxt)
+            self.tokens_out += 1
+            if (
+                len(r.out_tokens) >= r.max_new_tokens
+                or (self.eos_id is not None and nxt == self.eos_id)
+                or slot.pos >= self.max_seq
+            ):
+                r.done = True
+                r.finish_step = self.steps
+                finished.append(r)
+                slot.req = None
+        return finished
+
+    def run_until_drained(self, max_steps: int = 10_000) -> list[Request]:
+        done: list[Request] = []
+        for _ in range(max_steps):
+            done.extend(self.step())
+            if self.active == 0 and not self.queue:
+                break
+        return done
+
+    @property
+    def throughput(self) -> float:
+        return self.tokens_out / max(self.steps, 1)

@@ -1,0 +1,3 @@
+from .policy import MeshAxes, Policy
+
+__all__ = ["MeshAxes", "Policy"]

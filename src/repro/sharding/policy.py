@@ -1,0 +1,230 @@
+"""Sharding policies: parameter/optimizer/batch/cache PartitionSpecs.
+
+Two policies (cfg.sharding_policy):
+  tp       — weights shard on heads/ff/experts/vocab over the `model` axis;
+             replicated over data.  For models whose optimizer state fits.
+  fsdp_tp  — additionally shard the d_model (reduction) dim of every matrix
+             and all Adam moments over the data axes (ZeRO-ish).  XLA inserts
+             the per-layer all-gathers.
+
+Decode caches shard batch over the data axes and *sequence over `model`* —
+head-count agnostic (MQA granite, 12-head qwen2-1.5b both work); softmax
+max/sum and the S-contraction become all-reduces over `model`.
+
+Divisibility rules are resolved per-tensor: a dim shards over an axis only if
+it divides evenly; otherwise that dim is replicated (recorded by the caller
+via ``explain``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    dp: tuple[str, ...]          # ("data",) or ("pod", "data")
+    tp: str = "model"
+
+    @staticmethod
+    def from_mesh(mesh: Mesh) -> "MeshAxes":
+        names = tuple(mesh.axis_names)
+        if "pod" in names:
+            return MeshAxes(dp=("pod", "data"))
+        return MeshAxes(dp=("data",))
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        out = 1
+        for a in axis:
+            out *= mesh.shape[a]
+        return out
+    return mesh.shape[axis]
+
+
+class Policy:
+    def __init__(self, cfg: ModelConfig, mesh: Mesh):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axes = MeshAxes.from_mesh(mesh)
+        self.fsdp = cfg.sharding_policy == "fsdp_tp"
+
+    # -- helpers -------------------------------------------------------------
+    def _dp(self, dim: int):
+        """data-axes sharding for a dim, only under fsdp and if divisible."""
+        ax = self.axes.dp if len(self.axes.dp) > 1 else self.axes.dp[0]
+        if self.fsdp and dim % _axis_size(self.mesh, ax) == 0:
+            return ax
+        return None
+
+    def _tp(self, dim: int):
+        return self.axes.tp if dim % _axis_size(self.mesh, self.axes.tp) == 0 else None
+
+    def _dp_batch(self, dim: int):
+        ax = self.axes.dp if len(self.axes.dp) > 1 else self.axes.dp[0]
+        return ax if dim % _axis_size(self.mesh, ax) == 0 else None
+
+    # -- parameter specs ------------------------------------------------------
+    def _leaf_spec(self, path: tuple[str, ...], shape: tuple[int, ...]) -> P:
+        cfg = self.cfg
+        name = path[-1]
+        parent = path[-2] if len(path) >= 2 else ""
+        gparent = path[-3] if len(path) >= 3 else ""
+
+        def spec(*parts):
+            return P(*parts)
+
+        # ---- embeddings
+        if parent == "embed" or gparent == "embed":
+            if name == "table":
+                return spec(self._tp(shape[0]), self._dp(shape[1]))
+            if name == "head":
+                return spec(self._dp(shape[0]), self._tp(shape[1]))
+        # ---- norms / small vectors
+        if len(shape) <= 1:
+            return spec(None)
+        # ---- attention
+        if parent in ("attn", "cross"):
+            if name == "wq":
+                return spec(self._dp(shape[0]), self._tp(shape[1]), None)
+            if name in ("wk", "wv"):
+                return spec(self._dp(shape[0]), self._tp(shape[1]), None)
+            if name == "wo":
+                return spec(self._tp(shape[0]), None, self._dp(shape[2]))
+            if name in ("bq", "bk", "bv"):
+                return spec(self._tp(shape[0]), None)
+        # ---- MLA
+        if parent == "mla":
+            if name == "wdq":
+                return spec(self._dp(shape[0]), self._tp(shape[1]))
+            if name in ("wdkv", "wkr"):
+                return spec(self._dp(shape[0]), None)
+            if name in ("wuq", "wuk", "wuv"):
+                return spec(None, self._tp(shape[1]), None)
+            if name == "wo":
+                return spec(self._tp(shape[0]), None, self._dp(shape[2]))
+        # ---- MoE
+        if parent == "moe" or (gparent == "moe" and parent == "shared"):
+            if parent == "shared":
+                if name in ("w_gate", "w_up"):
+                    return spec(self._dp(shape[0]), self._tp(shape[1]))
+                if name == "w_down":
+                    return spec(self._tp(shape[0]), self._dp(shape[1]))
+            if name == "router":
+                return spec(self._dp(shape[0]), None)
+            ep = self._tp(shape[0])  # expert-parallel if E % tp == 0
+            if name in ("w_gate", "w_up"):
+                if ep is not None:
+                    return spec(ep, self._dp(shape[1]), None)
+                return spec(None, self._dp(shape[1]), self._tp(shape[2]))
+            if name == "w_down":
+                if ep is not None:
+                    return spec(ep, None, self._dp(shape[2]))
+                return spec(None, self._tp(shape[1]), self._dp(shape[2]))
+        # ---- Mamba
+        if parent == "mamba":
+            if name in ("wz", "wx", "wb", "wc", "wdt"):
+                return spec(self._dp(shape[0]), self._tp(shape[1]))
+            if name == "wo":
+                return spec(self._tp(shape[0]), self._dp(shape[1]))
+            if name in ("conv_w", "conv_b"):
+                return spec(*([None] * len(shape)))
+        # ---- dense MLP
+        if parent == "mlp":
+            if name in ("w_gate", "w_up"):
+                return spec(self._dp(shape[0]), self._tp(shape[1]))
+            if name == "w_down":
+                return spec(self._tp(shape[0]), self._dp(shape[1]))
+        del cfg
+        return spec(*([None] * len(shape)))
+
+    def param_specs(self, abstract_params: Any):
+        """PartitionSpec tree matching the (abstract) param tree."""
+
+        def walk(path, leaf):
+            names = []
+            stacked = False
+            for k in path:
+                if isinstance(k, jax.tree_util.DictKey):
+                    names.append(str(k.key))
+                elif isinstance(k, jax.tree_util.SequenceKey):
+                    names.append(f"i{k.idx}")
+            if "periods" in names:
+                stacked = True
+            shape = tuple(leaf.shape)
+            if stacked:
+                base = self._leaf_spec(tuple(names), shape[1:])
+                return P(None, *base)
+            return self._leaf_spec(tuple(names), shape)
+
+        return jax.tree_util.tree_map_with_path(walk, abstract_params)
+
+    def param_shardings(self, abstract_params: Any):
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s),
+            self.param_specs(abstract_params),
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    # -- optimizer state: same layout as params (moments mirror param specs) --
+    def opt_specs(self, abstract_params: Any):
+        ps = self.param_specs(abstract_params)
+        return {"m": ps, "v": ps, "step": P()}
+
+    # -- batches ---------------------------------------------------------------
+    def batch_specs(self, batch: Any):
+        def spec(leaf):
+            shape = tuple(leaf.shape)
+            if not shape:
+                return P()
+            return P(self._dp_batch(shape[0]), *([None] * (len(shape) - 1)))
+
+        return jax.tree.map(spec, batch)
+
+    # -- decode caches -----------------------------------------------------------
+    def cache_specs(self, abstract_caches: Any):
+        """(B, S, ...) caches: batch over dp, seq over model; mamba states:
+        batch over dp, heads/channels over model.  Leading period dim -> None."""
+
+        def walk(path, leaf):
+            names = [
+                str(k.key) for k in path if isinstance(k, jax.tree_util.DictKey)
+            ]
+            shape = tuple(leaf.shape)
+            stacked = "periods" in names
+            if stacked:
+                shape = shape[1:]
+            is_mamba = len(shape) in (3, 4) and (
+                names and names[-1] in ("conv", "state")
+            )
+            if is_mamba and names[-1] == "state":       # (B, H, P, N)
+                base = P(self._dp_batch(shape[0]), self._tp(shape[1]), None, None)
+            elif is_mamba:                              # (B, w, C)
+                base = P(self._dp_batch(shape[0]), None, self._tp(shape[2]))
+            elif len(shape) == 4:                        # attn k/v (B,S,H,D)
+                base = P(self._dp_batch(shape[0]), self._tp(shape[1]), None, None)
+            elif len(shape) == 3:                        # mla (B,S,r)
+                base = P(self._dp_batch(shape[0]), self._tp(shape[1]), None)
+            else:
+                base = P(*([None] * len(shape)))
+            if stacked:
+                return P(None, *base)
+            return base
+
+        return jax.tree_util.tree_map_with_path(walk, abstract_caches)
+
+    def to_shardings(self, specs: Any):
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s),
+            specs,
+            is_leaf=lambda x: isinstance(x, P),
+        )

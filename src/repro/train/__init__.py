@@ -1,0 +1,6 @@
+from .loop import HDPConfig, HDPTrainer, Pod, train_single
+from .step import make_decode_step, make_prefill_step, make_train_step
+from .train_state import TrainState, init_train_state
+
+__all__ = ["HDPConfig", "HDPTrainer", "Pod", "train_single", "make_decode_step",
+           "make_prefill_step", "make_train_step", "TrainState", "init_train_state"]

@@ -1,0 +1,211 @@
+"""Training loops: single-worker and HDP (Homogenized Data Parallel).
+
+HDP is the paper's TDA mapped onto pods (DESIGN.md §2):
+
+  - the *coordinator* (TDA server) holds a PerformanceTracker fed by per-step
+    heartbeats and a HomogenizedScheduler that allots grain scope-lengths,
+  - each *pod* (service-provider) gradient-accumulates over its allotted
+    grains; shapes stay static by padding to the fleet-max share with
+    loss_mask=0 (real compute on TPU follows the real grain count — the pad
+    is a CPU-simulation convenience),
+  - the *combine* (client edge of the triangle) is a token-weighted gradient
+    average — unbiased under unequal allotment,
+  - straggler mitigation: a slowing pod's EMA perf drops => smaller scope
+    next replan; missing heartbeats => eviction + elastic replan,
+  - fault tolerance: async atomic checkpoints; restart resumes from the last
+    complete step with identical grain addressing.
+
+On this 1-core container pods execute sequentially and *simulated* wall time
+(grains/perf + the paper's O(L) overhead) drives the scheduler — numerics are
+real, timing is modeled, exactly like core/simulate.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint.checkpoint import AsyncCheckpointer, restore
+from ..core.homogenization import OverheadModel
+from ..core.performance import PerformanceTracker, PerfReport
+from ..core.scheduler import HomogenizedScheduler
+from ..data.pipeline import GrainSpec, SyntheticSource, worker_batch
+from ..models.model import Model
+from ..optim.adamw import AdamWConfig, adamw_update
+from ..optim.grad_compress import ef_compress_tree, init_residuals
+from .train_state import TrainState, init_train_state
+
+
+# --------------------------------------------------------------- single worker
+def train_single(
+    model: Model, n_steps: int, batch_fn: Callable[[int], dict],
+    opt_cfg: AdamWConfig | None = None, ckpt_dir: str | None = None,
+    ckpt_every: int = 100, log_every: int = 10, seed: int = 0,
+    log_fn: Callable[[int, dict], None] | None = None,
+) -> tuple[TrainState, list[dict]]:
+    from .step import make_train_step
+
+    opt_cfg = opt_cfg or AdamWConfig()
+    state = init_train_state(model.init(jax.random.key(seed)))
+    start = 0
+    ckpt = AsyncCheckpointer(ckpt_dir) if ckpt_dir else None
+    if ckpt_dir:
+        restored, rstep = restore(ckpt_dir, state)
+        if restored is not None:
+            state, start = restored, rstep
+    step_fn = jax.jit(make_train_step(model, opt_cfg), donate_argnums=0)
+    history = []
+    for step in range(start, n_steps):
+        state, metrics = step_fn(state, batch_fn(step))
+        if step % log_every == 0 or step == n_steps - 1:
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"] = step
+            history.append(m)
+            if log_fn:
+                log_fn(step, m)
+        if ckpt and (step + 1) % ckpt_every == 0:
+            ckpt.save(step + 1, state)
+    if ckpt:
+        ckpt.wait()
+    return state, history
+
+
+# ------------------------------------------------------------------------- HDP
+@dataclasses.dataclass
+class Pod:
+    name: str
+    perf: float                   # true perf (hidden from the scheduler)
+    alive: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class HDPConfig:
+    total_grains: int
+    grain_spec: GrainSpec
+    homogenize: bool = True
+    compress_grads: bool = False
+    overhead: OverheadModel = dataclasses.field(
+        default_factory=lambda: OverheadModel(m=200.0)
+    )
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    jitter: float = 0.0
+    seed: int = 0
+
+
+class HDPTrainer:
+    def __init__(self, model: Model, pods: list[Pod], cfg: HDPConfig,
+                 opt_cfg: AdamWConfig | None = None):
+        self.model = model
+        self.pods = {p.name: p for p in pods}
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg or AdamWConfig()
+        self.tracker = PerformanceTracker(alpha=0.5, dead_after_s=1e7)
+        self.clock = 0.0
+        for p in pods:
+            self.tracker.observe(PerfReport(p.name, 1.0, 1.0, self.clock))
+        self.scheduler = HomogenizedScheduler(
+            self.tracker, cfg.total_grains, homogenize=cfg.homogenize
+        )
+        self.source = SyntheticSource(cfg.grain_spec, seed=cfg.seed)
+        self.state = init_train_state(model.init(jax.random.key(cfg.seed)))
+        self.start_step = 0
+        self.ckpt = AsyncCheckpointer(cfg.ckpt_dir) if cfg.ckpt_dir else None
+        if cfg.ckpt_dir:
+            restored, rstep = restore(cfg.ckpt_dir, self.state)
+            if restored is not None:
+                self.state, self.start_step = restored, rstep
+        self.residuals = (
+            init_residuals(self.state.params) if cfg.compress_grads else None
+        )
+        self.rng = np.random.default_rng(cfg.seed)
+        self._grad_fn = jax.jit(
+            jax.value_and_grad(
+                lambda p, b: self.model.loss(p, b), has_aux=True
+            )
+        )
+        self._update_fn = jax.jit(
+            lambda g, o, p: adamw_update(g, o, p, self.opt_cfg), donate_argnums=(1,)
+        )
+        self.history: list[dict] = []
+
+    # -- failure / straggler injection hooks (tests, examples) --------------
+    def set_perf(self, pod: str, perf: float) -> None:
+        self.pods[pod].perf = perf
+
+    def kill(self, pod: str) -> None:
+        self.pods[pod].alive = False
+        self.tracker.mark_dead(pod)
+
+    # -- one training step ---------------------------------------------------
+    def step(self, step_idx: int) -> dict:
+        cfg = self.cfg
+        plan = self.scheduler.plan(now_s=self.clock)
+        pad_to = max(plan.shares)
+        grads_sum = None
+        tok_sum = 0.0
+        loss_sum = 0.0
+        pod_times = {}
+        for name in plan.workers:
+            pod = self.pods[name]
+            share = plan.share_for(name)
+            if share == 0 or not pod.alive:
+                continue
+            batch = worker_batch(
+                self.source, step_idx, plan, name, cfg.grain_spec, pad_to_grains=pad_to
+            )
+            (loss, metrics), grads = self._grad_fn(self.state.params, batch)
+            w = float(metrics["tokens"])
+            if self.cfg.compress_grads:
+                grads, self.residuals = ef_compress_tree(grads, self.residuals)
+            if grads_sum is None:
+                grads_sum = jax.tree.map(lambda g: g * w, grads)
+            else:
+                grads_sum = jax.tree.map(lambda a, g: a + g * w, grads_sum, grads)
+            tok_sum += w
+            loss_sum += float(loss) * w
+            # simulated pod wall time: share / perf (+ jitter)
+            t = share / pod.perf
+            if cfg.jitter:
+                t *= float(1 + cfg.jitter * abs(self.rng.standard_normal()))
+            pod_times[name] = t
+        if grads_sum is None:
+            raise RuntimeError("no live pods")
+        grads = jax.tree.map(lambda g: g / tok_sum, grads_sum)
+        new_params, new_opt, stats = self._update_fn(
+            grads, self.state.opt, self.state.params
+        )
+        self.state = TrainState(params=new_params, opt=new_opt)
+        # heartbeats (the paper's background process)
+        step_time = max(pod_times.values()) + cfg.overhead(cfg.total_grains)
+        self.clock += step_time
+        for name, t in pod_times.items():
+            share = plan.share_for(name)
+            self.tracker.observe(
+                PerfReport(name, work_done=share, elapsed_s=max(t, 1e-9),
+                           time_s=self.clock)
+            )
+        rec = {
+            "step": step_idx,
+            "loss": loss_sum / tok_sum,
+            "tokens": tok_sum,
+            "step_time": step_time,
+            "plan": dict(zip(plan.workers, plan.shares, strict=True)),
+            "grad_norm": float(stats["grad_norm"]),
+        }
+        self.history.append(rec)
+        if self.ckpt and (step_idx + 1) % cfg.ckpt_every == 0:
+            self.ckpt.save(step_idx + 1, self.state)
+        return rec
+
+    def run(self, n_steps: int) -> list[dict]:
+        for s in range(self.start_step, n_steps):
+            self.step(s)
+        if self.ckpt:
+            self.ckpt.wait()
+        return self.history

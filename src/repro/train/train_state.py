@@ -1,0 +1,27 @@
+"""TrainState: params + AdamW state as a registered dataclass pytree."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+
+from ..optim.adamw import init_opt_state
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    params: Any
+    opt: dict
+
+    @property
+    def step(self):
+        return self.opt["step"]
+
+
+jax.tree_util.register_dataclass(TrainState, data_fields=["params", "opt"], meta_fields=[])
+
+
+def init_train_state(params) -> TrainState:
+    return TrainState(params=params, opt=init_opt_state(params))

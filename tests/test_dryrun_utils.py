@@ -1,0 +1,105 @@
+"""Dry-run analysis utilities: HLO collective parsing, flops accounting,
+small-config construction.  Pure-function tests (no 512-device mesh here;
+the compile path itself is exercised by the dryrun CLI and results JSONs)."""
+
+import jax
+
+from repro.configs import SHAPES, cell_status, get_config
+from repro.launch.dryrun import (
+    _shape_bytes,
+    _small_cfg,
+    collective_stats,
+    model_flops,
+)
+from repro.models import Model
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[8,128]") == 8 * 128 * 2
+    assert _shape_bytes("f32[2,2]{1,0}") == 16
+    assert _shape_bytes("(bf16[4,4], f32[4])") == 32 + 16
+    assert _shape_bytes("pred[]") == 0 or _shape_bytes("pred[]") == 1  # scalar
+
+
+def test_collective_stats_ring_model():
+    hlo = """
+      %ar = f32[1024]{0} all-reduce(f32[1024] %x), replica_groups={{0,1,2,3}}, to_apply=%sum
+      %ag = bf16[64,64]{1,0} all-gather(bf16[8,64] %y), replica_groups=[2,8]<=[16] , dimensions={0}
+      %cp = f32[16]{0} collective-permute(f32[16] %z), source_target_pairs={{0,1}}
+    """
+    st = collective_stats(hlo, 16)
+    # all-reduce: 2 * 4096B * 3/4 = 6144
+    assert abs(st["per_op_bytes"]["all-reduce"] - 6144) < 1
+    # all-gather: 8192B * 7/8 = 7168
+    assert abs(st["per_op_bytes"]["all-gather"] - 7168) < 1
+    assert st["per_op_bytes"]["collective-permute"] == 64
+    assert st["per_op_counts"]["all-reduce"] == 1
+    assert len(st["top_ops"]) == 3
+    assert st["top_ops"][0]["bytes"] >= st["top_ops"][1]["bytes"]
+
+
+def test_collective_stats_ignores_group_of_one():
+    hlo = "%ar = f32[1024]{0} all-reduce(f32[1024] %x), replica_groups={{0}}"
+    st = collective_stats(hlo, 16)
+    assert st["bytes_per_device"] == 0
+
+
+def test_collective_stats_counts_async_start_once():
+    hlo = """
+      %s = f32[256]{0} all-gather-start(f32[32] %x), replica_groups={{0,1,2,3,4,5,6,7}}
+      %d = f32[256]{0} all-gather-done(f32[256] %s)
+    """
+    st = collective_stats(hlo, 8)
+    assert st["per_op_counts"]["all-gather"] == 1
+
+
+def test_model_flops_dense_vs_moe_active():
+    cfg = get_config("qwen2-moe-a2.7b", reduced=True)
+    model = Model(cfg)
+    mf, stats = model_flops(cfg, model, SHAPES["train_4k"], 1000, "train")
+    assert stats["params_active"] < stats["params_total"]
+    # active excludes (1 - top_k/E) of routed experts
+    cfg_d = get_config("qwen3-8b", reduced=True)
+    mf_d, stats_d = model_flops(cfg_d, Model(cfg_d), SHAPES["train_4k"], 1000, "train")
+    assert stats_d["params_active"] <= stats_d["params_total"]  # embed excluded
+    assert mf > 0 and mf_d > 0
+
+
+def test_model_flops_train_vs_decode_multiplier():
+    cfg = get_config("qwen3-8b", reduced=True)
+    model = Model(cfg)
+    t, _ = model_flops(cfg, model, SHAPES["train_4k"], 1000, "train")
+    d, _ = model_flops(cfg, model, SHAPES["decode_32k"], 1000, "decode")
+    assert abs(t / d - 3.0) < 1e-6  # 6ND vs 2ND
+
+
+def test_small_cfg_periods():
+    cfg = get_config("deepseek-v2-236b")
+    s1, s2 = _small_cfg(cfg, 1), _small_cfg(cfg, 2)
+    assert s1.n_layers == 2 and s1.n_periods == 1     # 1 prefix + 1 period
+    assert s2.n_layers == 3 and s2.n_periods == 2
+    assert s1.full_unroll and s2.full_unroll
+    j = _small_cfg(get_config("jamba-v0.1-52b"), 2)
+    assert j.n_layers == 16 and j.n_periods == 2      # period length 8
+    e = _small_cfg(get_config("seamless-m4t-medium"), 2)
+    assert e.encoder.n_layers == 2                    # encoder scales too
+
+
+def test_cell_status_long_context_rules():
+    assert cell_status(get_config("mamba2-2.7b"), SHAPES["long_500k"]) == "run"
+    assert cell_status(get_config("jamba-v0.1-52b"), SHAPES["long_500k"]) == "run"
+    for arch in ("qwen3-8b", "deepseek-v2-236b", "seamless-m4t-medium"):
+        assert cell_status(get_config(arch), SHAPES["long_500k"]).startswith("skip")
+        assert cell_status(get_config(arch), SHAPES["train_4k"]) == "run"
+
+
+def test_abstract_specs_allocate_nothing():
+    from repro.configs import input_specs
+
+    cfg = get_config("qwen3-8b")  # FULL config — must not allocate
+    specs = input_specs(cfg, SHAPES["decode_32k"], concrete=False)
+    leaves = jax.tree_util.tree_leaves(specs["caches"])
+    assert all(isinstance(l, jax.ShapeDtypeStruct) for l in leaves)
+    # full-size cache: 36 periods x (128, 32768, 8, 128) x 2 (k+v)
+    k = leaves[0]
+    assert k.shape[0] == 36 and k.shape[1:] == (128, 32768, 8, 128)

@@ -1,0 +1,83 @@
+"""Elastic fleet: failure detection, remesh plans, rejoin."""
+
+import pytest
+
+from repro.core import PerformanceTracker, PerfReport
+from repro.launch.elastic import ElasticFleet, PodSpec, RemeshPlan
+
+
+def _fleet(n=4, grains=64, dead_after=50.0):
+    tracker = PerformanceTracker(alpha=1.0, dead_after_s=dead_after)
+    pods = [PodSpec(f"pod{i}", 256, (16, 16)) for i in range(n)]
+    for p in pods:
+        tracker.observe(PerfReport(p.name, 4.0, 1.0, 0.0))
+    return ElasticFleet(pods, tracker, grains), tracker
+
+
+def test_podspec_validates_mesh():
+    with pytest.raises(ValueError):
+        PodSpec("bad", 256, (8, 16))
+
+
+def test_no_failures_no_plan():
+    fleet, tracker = _fleet()
+    for name in fleet.pods:
+        tracker.observe(PerfReport(name, 4.0, 1.0, 40.0))
+    assert fleet.handle_failures(now_s=45.0, last_ckpt_step=100) is None
+
+
+def test_failure_produces_remesh_plan():
+    fleet, tracker = _fleet()
+    # pods 0-2 keep heartbeating; pod3 goes silent
+    for i in range(3):
+        tracker.observe(PerfReport(f"pod{i}", 4.0, 1.0, 100.0))
+    plan = fleet.handle_failures(now_s=100.0, last_ckpt_step=80)
+    assert isinstance(plan, RemeshPlan)
+    assert plan.lost == ("pod3",)
+    assert set(plan.survivors) == {"pod0", "pod1", "pod2"}
+    assert sum(plan.grain_plan.shares) == 64     # full redistribution
+    assert plan.resume_step == 80
+    assert plan.capacity_fraction == pytest.approx(0.75)
+    # second sweep with no new deaths: no plan
+    for i in range(3):
+        tracker.observe(PerfReport(f"pod{i}", 4.0, 1.0, 101.0))
+    assert fleet.handle_failures(now_s=101.0, last_ckpt_step=80) is None
+
+
+def test_rejoin_restores_capacity():
+    fleet, tracker = _fleet()
+    for i in range(3):
+        tracker.observe(PerfReport(f"pod{i}", 4.0, 1.0, 100.0))
+    fleet.handle_failures(now_s=100.0, last_ckpt_step=80)
+    plan = fleet.handle_join(
+        PodSpec("pod3", 256, (16, 16)), perf_prior=4.0, now_s=120.0,
+        last_ckpt_step=110,
+    )
+    assert set(plan.survivors) == {f"pod{i}" for i in range(4)}
+    assert plan.lost == ()
+    assert sum(plan.grain_plan.shares) == 64
+
+
+def test_degraded_pod_rejoins_smaller():
+    """Partial loss: pod rejoins with a smaller inner mesh and lower perf
+    prior — homogenization gives it proportionally less work (the paper's
+    mechanism is the degradation path)."""
+    fleet, tracker = _fleet()
+    for i in range(3):
+        tracker.observe(PerfReport(f"pod{i}", 4.0, 1.0, 100.0))
+    fleet.handle_failures(now_s=100.0, last_ckpt_step=80)
+    plan = fleet.handle_join(
+        PodSpec("pod3", 128, (8, 16)), perf_prior=2.0, now_s=120.0,
+        last_ckpt_step=110,
+    )
+    shares = dict(zip(plan.grain_plan.workers, plan.grain_plan.shares, strict=True))
+    assert shares["pod3"] < shares["pod0"]
+    assert shares["pod3"] >= 1
+
+
+def test_all_pods_lost_raises():
+    fleet, tracker = _fleet(n=1)
+    plan_or_err = None
+    with pytest.raises(RuntimeError):
+        fleet.handle_failures(now_s=1000.0, last_ckpt_step=0)
+    del plan_or_err

@@ -1,0 +1,154 @@
+"""Unit + property tests for the paper's homogenization math (Eqs. 1-9)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    OverheadModel,
+    equal_split,
+    finish_times,
+    homogenization_quality,
+    overhead_slope_fit,
+    predicted_speedup,
+    predicted_time,
+    scope_lengths,
+    virtual_machine_count,
+)
+
+perfs_st = st.lists(
+    st.floats(min_value=0.05, max_value=100.0, allow_nan=False), min_size=1, max_size=32
+)
+
+
+# ---------------------------------------------------------------- scope lengths
+@settings(max_examples=200, deadline=None)
+@given(total=st.integers(min_value=0, max_value=100_000), perfs=perfs_st)
+def test_scope_lengths_sum_and_bounds(total, perfs):
+    shares = scope_lengths(total, perfs)
+    assert sum(shares) == total
+    assert all(s >= 0 for s in shares)
+    # Largest-remainder fairness: each share within 1 unit of exact proportion.
+    p = np.asarray(perfs)
+    exact = total * p / p.sum()
+    assert all(abs(s - e) < 1.0 for s, e in zip(shares, exact, strict=True))
+
+
+@settings(max_examples=100, deadline=None)
+@given(total=st.integers(min_value=1, max_value=10_000), perfs=perfs_st)
+def test_scope_lengths_deterministic(total, perfs):
+    assert scope_lengths(total, perfs) == scope_lengths(total, perfs)
+
+
+def test_scope_lengths_proportional_exact():
+    # 2:1 perf ratio, divisible total -> exact 2:1 allotment.
+    assert scope_lengths(30, [2.0, 1.0]) == [20, 10]
+    assert scope_lengths(800, [1.0, 1.0, 1.0, 1.0]) == [200] * 4
+
+
+def test_scope_length_monotone_in_perf():
+    shares = scope_lengths(100, [4.0, 2.0, 1.0])
+    assert shares[0] >= shares[1] >= shares[2]
+
+
+def test_equal_split_is_paper_baseline():
+    assert equal_split(10, 3) in ([4, 3, 3], [3, 4, 3], [3, 3, 4])
+    assert sum(equal_split(800, 9)) == 800
+
+
+@pytest.mark.parametrize("bad", [[-1.0], [0.0], [float("nan")], []])
+def test_scope_lengths_rejects_bad_perfs(bad):
+    with pytest.raises(ValueError):
+        scope_lengths(10, bad)
+
+
+# ---------------------------------------------------- homogenization invariant
+@settings(max_examples=200, deadline=None)
+@given(perfs=perfs_st, scale=st.integers(min_value=100, max_value=10_000))
+def test_equal_finish_time_invariant(perfs, scale):
+    """The homogenization line: proportional allotment => all workers finish
+    within rounding error of each other."""
+    total = scale * len(perfs)
+    shares = scope_lengths(total, perfs)
+    ft = finish_times(shares, perfs)
+    ideal = total / sum(perfs)
+    # Each worker's finish time deviates from ideal by < 1 unit / P_i.
+    for t, p, s in zip(ft, perfs, shares, strict=True):
+        assert abs(t - ideal) <= 1.0 / p + 1e-9, (t, ideal, p, s)
+
+
+def test_homogenization_quality_perfect_when_divisible():
+    shares = scope_lengths(70, [4.0, 2.0, 1.0])
+    assert shares == [40, 20, 10]
+    assert homogenization_quality(shares, [4.0, 2.0, 1.0]) == pytest.approx(1.0)
+
+
+def test_equal_split_quality_worse_for_heterogeneous():
+    perfs = [1.0, 1.0, 0.25]
+    hom = homogenization_quality(scope_lengths(90, perfs), perfs)
+    het = homogenization_quality(equal_split(90, 3), perfs)
+    assert het > hom * 2  # slow worker takes 4x as long under equal split
+
+
+# -------------------------------------------------------------- Eq. 4-8 model
+def test_virtual_machine_count_eq4():
+    assert virtual_machine_count([1.0, 1.0, 1.0], 1.0) == pytest.approx(3.0)
+    assert virtual_machine_count([0.5, 0.25], 1.0) == pytest.approx(0.75)
+
+
+@settings(max_examples=100, deadline=None)
+@given(perfs=perfs_st)
+def test_speedup_reaches_nh_without_overhead(perfs):
+    """Eq. 8: with O(L)=0, S_NH = N_H exactly."""
+    p_s = max(perfs)
+    s = predicted_speedup(1000.0, perfs, p_s, load=0.0)
+    assert s == pytest.approx(virtual_machine_count(perfs, p_s))
+
+
+def test_overhead_reduces_speedup_eq6():
+    perfs = [1.0] * 4
+    fast = predicted_speedup(100.0, perfs, 1.0, load=0.0)
+    slow = predicted_speedup(
+        100.0, perfs, 1.0, load=200.0, overhead=OverheadModel(m=20.0)
+    )
+    assert fast == pytest.approx(4.0)
+    assert slow < fast
+    # T_NH = 100/4 + 200/20 = 35 -> S = 100/35
+    assert slow == pytest.approx(100.0 / 35.0)
+
+
+def test_predicted_time_eq5():
+    t = predicted_time(120.0, [2.0, 1.0], 1.0, load=60.0, overhead=OverheadModel(m=20.0))
+    assert t == pytest.approx(120.0 / 3.0 + 3.0)
+
+
+def test_overhead_model_paper_slope():
+    o = OverheadModel(m=20.0)
+    assert o(800) == pytest.approx(40.0)  # paper's network, size-800 job
+    assert o(0) == 0.0
+    with pytest.raises(ValueError):
+        o(-1)
+
+
+def test_overhead_slope_fit_recovers_m():
+    loads = [200.0, 400.0, 600.0, 800.0, 1000.0]
+    m = 20.0
+    ovh = [l / m for l in loads]
+    assert overhead_slope_fit(loads, ovh) == pytest.approx(m)
+
+
+@settings(max_examples=50, deadline=None)
+@given(
+    m=st.floats(min_value=1.0, max_value=500.0),
+    noise=st.floats(min_value=0.0, max_value=0.01),
+)
+def test_overhead_fit_robust_to_noise(m, noise):
+    rng = np.random.default_rng(0)
+    loads = np.linspace(100, 1000, 10)
+    ovh = loads / m * (1 + noise * rng.standard_normal(10))
+    fit = overhead_slope_fit(loads, ovh)
+    assert math.isfinite(fit)
+    assert fit == pytest.approx(m, rel=0.05)

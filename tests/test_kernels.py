@@ -1,0 +1,199 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs jnp oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels.flash_attention.ops import mha
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.matmul.ops import matmul
+from repro.kernels.matmul.ref import matmul_ref
+from repro.kernels.mamba_scan.ops import ssd, ssd_chunked_jnp
+from repro.kernels.mamba_scan.ref import ssd_scan_ref
+
+RNG = np.random.default_rng(42)
+
+
+def _tol(dtype):
+    # fp32: reduction-order differences between blocked and monolithic
+    # accumulation bound the error; bf16: storage rounding dominates.
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=5e-4, atol=5e-5)
+
+
+def _assert_close(out, ref, dtype):
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+    )
+
+
+# ---------------------------------------------------------------------- matmul
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "m,k,n", [(8, 128, 128), (256, 512, 256), (100, 70, 36), (1, 1, 1), (513, 129, 257)]
+)
+def test_matmul_kernel_matches_ref(m, k, n, dtype):
+    x = jnp.asarray(RNG.standard_normal((m, k)), dtype)
+    y = jnp.asarray(RNG.standard_normal((k, n)), dtype)
+    out = matmul(x, y, use_pallas=True, interpret=True, block_m=64, block_n=128, block_k=128)
+    _assert_close(out, matmul_ref(x, y), dtype)
+
+
+@pytest.mark.parametrize("blocks", [(8, 128, 128), (32, 256, 64), (64, 128, 512)])
+def test_matmul_block_shape_sweep(blocks):
+    bm, bn, bk = blocks
+    x = jnp.asarray(RNG.standard_normal((96, 160)), jnp.float32)
+    y = jnp.asarray(RNG.standard_normal((160, 192)), jnp.float32)
+    out = matmul(x, y, use_pallas=True, interpret=True, block_m=bm, block_n=bn, block_k=bk)
+    _assert_close(out, matmul_ref(x, y), jnp.float32)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 96), k=st.integers(1, 96), n=st.integers(1, 96),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_property_any_shape(m, k, n, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((m, k)), jnp.float32)
+    y = jnp.asarray(r.standard_normal((k, n)), jnp.float32)
+    out = matmul(x, y, use_pallas=True, interpret=True, block_m=32, block_n=128, block_k=128)
+    _assert_close(out, matmul_ref(x, y), jnp.float32)
+
+
+# ------------------------------------------------------------- flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize(
+    "b,sq,hq,hkv,d", [(2, 128, 4, 2, 64), (1, 256, 2, 2, 32), (2, 64, 4, 1, 16)]
+)
+def test_flash_attention_matches_ref(b, sq, hq, hkv, d, causal, dtype):
+    q = jnp.asarray(RNG.standard_normal((b, sq, hq, d)), dtype)
+    k = jnp.asarray(RNG.standard_normal((b, sq, hkv, d)), dtype)
+    v = jnp.asarray(RNG.standard_normal((b, sq, hkv, d)), dtype)
+    out = mha(q, k, v, causal=causal, use_pallas=True, interpret=True, block_q=32, block_k=32)
+    ref = mha(q, k, v, causal=causal, use_pallas=False)
+    _assert_close(out, ref, dtype)
+
+
+def test_flash_attention_block_sweep():
+    q = jnp.asarray(RNG.standard_normal((1, 128, 2, 32)), jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 128, 2, 32)), jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 128, 2, 32)), jnp.float32)
+    ref = mha(q, k, v, use_pallas=False)
+    for bq, bk in [(16, 16), (32, 64), (128, 128), (64, 16)]:
+        out = mha(q, k, v, use_pallas=True, interpret=True, block_q=bq, block_k=bk)
+        _assert_close(out, ref, jnp.float32)
+
+
+def test_flash_attention_long_context_numerics():
+    """Large-magnitude logits must not overflow the online softmax."""
+    q = jnp.asarray(RNG.standard_normal((1, 64, 1, 16)) * 30, jnp.float32)
+    k = jnp.asarray(RNG.standard_normal((1, 64, 1, 16)) * 30, jnp.float32)
+    v = jnp.asarray(RNG.standard_normal((1, 64, 1, 16)), jnp.float32)
+    out = mha(q, k, v, use_pallas=True, interpret=True, block_q=16, block_k=16)
+    ref = mha(q, k, v, use_pallas=False)
+    assert not np.any(np.isnan(np.asarray(out)))
+    _assert_close(out, ref, jnp.float32)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    sq=st.sampled_from([32, 64, 96]), hq=st.sampled_from([1, 2, 4]),
+    group=st.sampled_from([1, 2]), seed=st.integers(0, 2**31),
+)
+def test_flash_attention_property(sq, hq, group, seed):
+    if hq % group:
+        group = 1
+    r = np.random.default_rng(seed)
+    q = jnp.asarray(r.standard_normal((1, sq, hq, 16)), jnp.float32)
+    k = jnp.asarray(r.standard_normal((1, sq, hq // group, 16)), jnp.float32)
+    v = jnp.asarray(r.standard_normal((1, sq, hq // group, 16)), jnp.float32)
+    out = mha(q, k, v, use_pallas=True, interpret=True, block_q=16, block_k=16)
+    _assert_close(out, mha(q, k, v, use_pallas=False), jnp.float32)
+
+
+# ------------------------------------------------------------------- SSD scan
+def _ssd_inputs(b, s, h, p, g, n, dtype=jnp.float32, seed=0):
+    r = np.random.default_rng(seed)
+    return (
+        jnp.asarray(r.standard_normal((b, s, h, p)), dtype),
+        jnp.asarray(np.abs(r.standard_normal((b, s, h))) * 0.1 + 0.01, dtype),
+        jnp.asarray(-np.abs(r.standard_normal(h)) - 0.1, jnp.float32),
+        jnp.asarray(r.standard_normal((b, s, g, n)), dtype),
+        jnp.asarray(r.standard_normal((b, s, g, n)), dtype),
+        jnp.asarray(r.standard_normal(h), jnp.float32),
+    )
+
+
+def _ssd_gold(x, dt, a, bm, cm, d):
+    b, s, h, p = x.shape
+    g, n = bm.shape[2], bm.shape[3]
+    rep = h // g
+    bb, cc = jnp.repeat(bm, rep, axis=2), jnp.repeat(cm, rep, axis=2)
+    xdt = (x * dt[..., None]).transpose(0, 2, 1, 3).reshape(b * h, s, p)
+    la = (dt * a[None, None, :]).transpose(0, 2, 1).reshape(b * h, s)
+    bf = bb.transpose(0, 2, 1, 3).reshape(b * h, s, n)
+    cf = cc.transpose(0, 2, 1, 3).reshape(b * h, s, n)
+    y, hf = ssd_scan_ref(xdt, la, bf, cf)
+    y = y.reshape(b, h, s, p).transpose(0, 2, 1, 3) + x * d[None, None, :, None]
+    return y, hf.reshape(b, h, p, n)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("b,s,h,p,g,n", [(2, 96, 4, 16, 2, 8), (1, 64, 2, 8, 1, 16)])
+def test_ssd_matches_naive_scan(b, s, h, p, g, n, use_pallas, dtype):
+    x, dt, a, bm, cm, d = _ssd_inputs(b, s, h, p, g, n, dtype)
+    y_gold, h_gold = _ssd_gold(x, dt, a, bm, cm, d)
+    y, hf = ssd(x, dt, a, bm, cm, d, chunk=32, use_pallas=use_pallas,
+                interpret=True if use_pallas else None)
+    _assert_close(y, y_gold, dtype)
+    _assert_close(hf, h_gold, dtype)
+
+
+@pytest.mark.parametrize("chunk", [16, 32, 64, 96])
+def test_ssd_chunk_size_invariance(chunk):
+    x, dt, a, bm, cm, d = _ssd_inputs(1, 96, 2, 8, 1, 4)
+    y_gold, _ = _ssd_gold(x, dt, a, bm, cm, d)
+    y, _ = ssd(x, dt, a, bm, cm, d, chunk=chunk, use_pallas=True, interpret=True)
+    _assert_close(y, y_gold, jnp.float32)
+
+
+def test_ssd_nondivisible_seq_padding():
+    x, dt, a, bm, cm, d = _ssd_inputs(1, 90, 2, 8, 1, 4)
+    y_gold, _ = _ssd_gold(x, dt, a, bm, cm, d)
+    y, _ = ssd(x, dt, a, bm, cm, d, chunk=32, use_pallas=True, interpret=True)
+    _assert_close(y, y_gold, jnp.float32)
+
+
+def test_ssd_state_continuation():
+    """Splitting a sequence and carrying h0 must equal the unsplit scan."""
+    x, dt, a, bm, cm, d = _ssd_inputs(1, 64, 2, 8, 1, 4)
+    y_gold, h_gold = _ssd_gold(x, dt, a, bm, cm, d)
+    y1, h1 = ssd(x[:, :32], dt[:, :32], a, bm[:, :32], cm[:, :32], d,
+                 chunk=16, use_pallas=False)
+    y2, h2 = ssd(x[:, 32:], dt[:, 32:], a, bm[:, 32:], cm[:, 32:], d,
+                 chunk=16, use_pallas=False, h0=h1)
+    _assert_close(jnp.concatenate([y1, y2], axis=1), y_gold, jnp.float32)
+    _assert_close(h2, h_gold, jnp.float32)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([33, 48, 64, 100]), seed=st.integers(0, 2**31))
+def test_ssd_property_chunked_equals_sequential(s, seed):
+    x, dt, a, bm, cm, d = _ssd_inputs(1, s, 2, 8, 2, 4, seed=seed)
+    y_gold, _ = _ssd_gold(x, dt, a, bm, cm, d)
+    y, _ = ssd(x, dt, a, bm, cm, d, chunk=32, use_pallas=False)
+    _assert_close(y, y_gold, jnp.float32)
+
+
+def test_ssd_decay_stability():
+    """Long sequences with strong decay must stay finite."""
+    x, dt, a, bm, cm, d = _ssd_inputs(1, 256, 2, 8, 1, 4)
+    dt = dt * 100.0  # extreme decay
+    y, h = ssd(x, dt, a, bm, cm, d, chunk=64, use_pallas=True, interpret=True)
+    assert np.all(np.isfinite(np.asarray(y, np.float32)))
+    assert np.all(np.isfinite(np.asarray(h)))

@@ -1,0 +1,57 @@
+"""Launcher CLI smoke tests (subprocess, real entry points)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(args, timeout=420):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    return subprocess.run(
+        [sys.executable, "-m", *args], capture_output=True, text=True,
+        env=env, cwd=ROOT, timeout=timeout,
+    )
+
+
+def test_train_cli_single():
+    out = _run(["repro.launch.train", "--arch", "qwen2-1.5b", "--steps", "6",
+                "--batch", "2", "--seq", "16"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "done: loss" in out.stdout
+
+
+def test_train_cli_hdp():
+    out = _run(["repro.launch.train", "--mode", "hdp", "--arch", "qwen2-1.5b",
+                "--steps", "6", "--seq", "16", "--grains", "4",
+                "--pods", "3:1"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "plan[" in out.stdout
+
+
+def test_serve_cli():
+    out = _run(["repro.launch.serve", "--arch", "qwen2-1.5b", "--requests", "3",
+                "--max-new", "3", "--max-seq", "32"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "served 3 requests" in out.stdout
+    assert "makespan" in out.stdout
+
+
+@pytest.mark.parametrize("arch,shape", [("qwen2-1.5b", "decode_32k")])
+def test_dryrun_cli_cell(arch, shape, tmp_path):
+    out = _run(["repro.launch.dryrun", "--arch", arch, "--shape", shape,
+                "--mesh", "single", "--out", str(tmp_path), "--no-extrapolate"],
+               timeout=540)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "all cells green" in out.stdout
+    import json, glob
+
+    files = glob.glob(str(tmp_path / "*.json"))
+    assert len(files) == 1
+    cell = json.load(open(files[0]))
+    assert cell["status"] == "run" and cell["n_devices"] == 256

@@ -1,0 +1,124 @@
+"""MoE routing invariants + homogenized expert capacity (the paper's technique
+at expert granularity)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.models import LayerSpec, ModelConfig, MoEConfig
+from repro.models.moe import (
+    apply_moe,
+    apply_moe_dense,
+    capacity_per_expert,
+    init_moe,
+)
+
+
+def mk_cfg(e=8, k=2, cap=4.0, shared=0) -> ModelConfig:
+    return ModelConfig(
+        name="moe-test", n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+        d_ff=64, vocab_size=64, head_dim=16,
+        layer_pattern=(LayerSpec("attn", "moe"),),
+        moe=MoEConfig(n_routed=e, top_k=k, d_expert=32, capacity_factor=cap,
+                      n_shared=shared, d_shared=64 if shared else 0),
+        param_dtype="float32", compute_dtype="float32", use_pallas=False,
+    )
+
+
+def _x(b=2, s=16, d=32, seed=0):
+    return jnp.asarray(
+        np.random.default_rng(seed).standard_normal((b, s, d)) * 0.5, jnp.float32
+    )
+
+
+def test_capacity_vs_dense_parity_no_drops():
+    """With generous capacity, the capacity-routed path equals the dense sweep."""
+    cfg = mk_cfg(cap=8.0)
+    p = init_moe(jax.random.key(0), cfg)
+    x = _x()
+    out_cap, _ = apply_moe(p, cfg, x)
+    out_dense, _ = apply_moe_dense(p, cfg, x)
+    np.testing.assert_allclose(
+        np.asarray(out_cap), np.asarray(out_dense), rtol=2e-4, atol=2e-5
+    )
+
+
+def test_drops_under_tight_capacity():
+    cfg = mk_cfg(cap=0.25)
+    p = init_moe(jax.random.key(0), cfg)
+    x = _x()
+    out_tight, _ = apply_moe(p, cfg, x)
+    out_dense, _ = apply_moe_dense(p, cfg, x)
+    assert float(jnp.max(jnp.abs(out_tight - out_dense))) > 1e-4
+
+
+def test_aux_loss_positive_and_bounded():
+    cfg = mk_cfg()
+    p = init_moe(jax.random.key(0), cfg)
+    _, aux = apply_moe(p, cfg, _x())
+    assert 0 <= float(aux) < 1.0
+
+
+def test_shared_expert_contributes():
+    cfg = mk_cfg(shared=1)
+    p = init_moe(jax.random.key(0), cfg)
+    x = _x()
+    out, _ = apply_moe(p, cfg, x)
+    p2 = dict(p)
+    p2["shared"] = jax.tree.map(jnp.zeros_like, p["shared"])
+    out2, _ = apply_moe(p2, cfg, x)
+    assert float(jnp.max(jnp.abs(out - out2))) > 1e-5
+
+
+# ------------------------------------------------- homogenized capacities
+def test_capacity_per_expert_uniform():
+    cfg = mk_cfg(e=8, k=2, cap=1.0)
+    caps = capacity_per_expert(256, cfg.moe)
+    assert (caps == caps[0]).all()
+    assert caps.sum() >= 256 * 2
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    perfs=st.lists(st.floats(min_value=0.2, max_value=4.0), min_size=4, max_size=16),
+    tokens=st.integers(min_value=64, max_value=4096),
+)
+def test_capacity_proportional_to_perf(perfs, tokens):
+    cfg = mk_cfg(e=len(perfs), k=2, cap=1.0)
+    caps = capacity_per_expert(tokens, cfg.moe, expert_perfs=perfs, round_to=1)
+    budget = int(cfg.moe.capacity_factor * tokens * cfg.moe.top_k)
+    exact = np.asarray(perfs) / np.sum(perfs) * budget
+    assert np.all(np.abs(caps - np.maximum(exact, 1)) <= np.maximum(exact, 1) + 1)
+
+
+def test_homogenized_capacity_equalizes_finish_time():
+    cfg = mk_cfg(e=4, k=2, cap=1.0)
+    perfs = [4.0, 2.0, 1.0, 0.5]
+    caps = capacity_per_expert(512, cfg.moe, expert_perfs=perfs, round_to=1)
+    ft = [c / p for c, p in zip(caps, perfs, strict=True)]
+    assert max(ft) / min(ft) < 1.15, (caps, ft)
+
+
+def test_homogenized_capacities_run_through_layer():
+    cfg = mk_cfg(e=4, k=2, cap=1.0)
+    p = init_moe(jax.random.key(1), cfg)
+    caps = capacity_per_expert(32, cfg.moe, expert_perfs=[4.0, 2.0, 1.0, 0.5])
+    out, aux = apply_moe(p, cfg, _x(b=2, s=16), jnp.asarray(caps, jnp.int32))
+    assert np.isfinite(np.asarray(out)).all()
+
+
+def test_router_gradient_flows():
+    cfg = mk_cfg()
+    p = init_moe(jax.random.key(0), cfg)
+    x = _x()
+
+    def loss(params):
+        out, aux = apply_moe(params, cfg, x)
+        return jnp.sum(out**2) + aux
+
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["router"]).sum()) > 0
+    assert float(jnp.abs(g["w_down"]).sum()) > 0

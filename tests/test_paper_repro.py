@@ -1,0 +1,166 @@
+"""Validate the simulator + TDA against the paper's own experimental claims.
+
+Paper §3 (Figs 3-6):
+  F1. Equal allotment ('heterogeneous behavior'): speedup *degrades* when the
+      slow 6th and 9th service-providers join.
+  F2. Homogenized speedup is monotonically non-decreasing in workers.
+  F3. Size 800: homogenized max beats heterogeneous max (paper: 3.6 vs 2.8).
+  F4. Across sizes 200..1000: homogenized max / heterogeneous max >= ~1.4
+      (paper: 5.5 vs 3.5 => 1.57; '55% increase in speedup').
+  F5. Size 200 is overhead-dominated: speedup < 1 with the full fleet.
+  F6. Larger loads => closer to the ideal line (Eq. 8 linearity).
+  F7. Measured homogenized speedup matches Eq. 6 prediction (Fig 4).
+  F8. Overhead is linear in load with recoverable slope M (Fig 5).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    PAPER_MACHINES,
+    ClusterSim,
+    OverheadModel,
+    PerformanceTracker,
+    ServiceProvider,
+    TDAServer,
+    ThinClient,
+    overhead_slope_fit,
+    predicted_speedup,
+    virtual_machine_count,
+)
+
+
+@pytest.fixture(scope="module")
+def sim():
+    return ClusterSim(perfs=PAPER_MACHINES, overhead=OverheadModel(m=20.0))
+
+
+def test_f1_heterogeneous_speedup_dips_on_slow_workers(sim):
+    s = sim.speedup_curve(800, homogenize=False)
+    assert s[5] < s[4], "6th (slow) worker must degrade equal-split speedup"
+    assert s[8] < s[7], "9th (slow) worker must degrade equal-split speedup"
+
+
+def test_f2_homogenized_speedup_monotone(sim):
+    s = sim.speedup_curve(800, homogenize=True)
+    assert all(b >= a - 1e-9 for a, b in zip(s, s[1:], strict=False)), s
+
+
+def test_f3_homogenized_beats_heterogeneous_at_800(sim):
+    het = max(sim.speedup_curve(800, homogenize=False))
+    hom = max(sim.speedup_curve(800, homogenize=True))
+    assert hom > 1.2 * het, (hom, het)
+    # Same qualitative magnitudes as the paper (2.8 vs 3.6).
+    assert 2.0 < het < 4.0
+    assert 3.0 < hom < 6.0
+
+
+def test_f4_55pct_gain_across_sizes(sim):
+    het = max(
+        max(sim.speedup_curve(n, homogenize=False)) for n in (200, 400, 600, 800, 1000)
+    )
+    hom = max(
+        max(sim.speedup_curve(n, homogenize=True)) for n in (200, 400, 600, 800, 1000)
+    )
+    assert hom / het >= 1.4, (hom, het)
+
+
+def test_f5_small_load_overhead_dominated(sim):
+    # Fig 6(a): at size 200 the equal-split fleet is slower than standalone.
+    s = sim.run_job(200, homogenize=False).speedup
+    assert s < 1.0, f"size-200 equal-split job should not speed up (got {s})"
+    # Homogenization barely rescues it (overhead still dominates).
+    s_h = sim.run_job(200, homogenize=True).speedup
+    assert s_h < 1.2
+
+
+def test_f6_larger_loads_more_linear(sim):
+    """Ratio of achieved to ideal (N_H) speedup grows with load size."""
+    p_s = sim.p_standalone
+    ratios = []
+    for n in (200, 600, 1000):
+        nh = virtual_machine_count(PAPER_MACHINES, p_s)
+        ratios.append(sim.run_job(n, homogenize=True).speedup / nh)
+    assert ratios[0] < ratios[1] < ratios[2]
+
+
+def test_f7_formula_matches_simulation(sim):
+    """Fig 4: measured homogenized speedup == Eq. 6 prediction (exact here,
+    because the simulator implements the paper's cost model)."""
+    for n in (400, 800, 1000):
+        res = sim.run_job(n, homogenize=True)
+        pred = predicted_speedup(
+            sim.standalone_time(n),
+            PAPER_MACHINES,
+            sim.p_standalone,
+            load=n,
+            overhead=sim.overhead,
+        )
+        assert res.speedup == pytest.approx(pred, rel=0.02), (n, res.speedup, pred)
+
+
+def test_f8_overhead_linear_slope_recoverable(sim):
+    loads = [200, 400, 600, 800, 1000]
+    ovh = [sim.run_job(n).overhead for n in loads]
+    assert overhead_slope_fit(loads, ovh) == pytest.approx(20.0, rel=1e-6)
+
+
+# ----------------------------------------------------------- adaptive closed loop
+def test_adaptive_learning_converges_to_oracle():
+    """Starting from equal priors, heartbeat-driven homogenization converges to
+    the oracle-perf allotment within a few jobs."""
+    sim = ClusterSim(perfs=PAPER_MACHINES)
+    results = sim.run_adaptive(800, n_jobs=8)
+    oracle = sim.run_job(800, homogenize=True).speedup
+    assert results[-1].speedup == pytest.approx(oracle, rel=0.05)
+    assert results[-1].speedup >= results[0].speedup - 1e-9
+
+
+def test_adaptive_handles_jitter():
+    sim = ClusterSim(perfs=PAPER_MACHINES, jitter=0.05, seed=1)
+    results = sim.run_adaptive(800, n_jobs=12)
+    oracle = ClusterSim(perfs=PAPER_MACHINES).run_job(800).speedup
+    assert results[-1].speedup > 0.8 * oracle
+
+
+# ----------------------------------------------------------------- real TDA run
+def test_tda_distributed_matmul_is_exact():
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((96, 64)).astype(np.float32)
+    b = rng.standard_normal((64, 48)).astype(np.float32)
+    providers = [ServiceProvider(f"sp{i}", p) for i, p in enumerate(PAPER_MACHINES[:5])]
+    client = ThinClient(TDAServer(providers))
+    out, sim_time = client.matmul(a, b)
+    np.testing.assert_allclose(out, a @ b, rtol=1e-6)
+    assert sim_time > 0
+
+
+def test_tda_homogenized_beats_equal_split_timing():
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((200, 32)).astype(np.float32)
+    b = rng.standard_normal((32, 32)).astype(np.float32)
+
+    def run(homogenize):
+        providers = [
+            ServiceProvider(f"sp{i}", p) for i, p in enumerate(PAPER_MACHINES)
+        ]
+        server = TDAServer(providers, homogenize=homogenize)
+        client = ThinClient(server)
+        # Warm-up jobs let heartbeats teach the server the true perfs.
+        for _ in range(4):
+            out, t = client.matmul(a, b)
+        return out, t
+
+    out_h, t_h = run(True)
+    out_e, t_e = run(False)
+    np.testing.assert_allclose(out_h, out_e, rtol=1e-6)
+    assert t_h < t_e, (t_h, t_e)
+
+
+def test_tda_granulation_covers_rows_exactly():
+    providers = [ServiceProvider(f"sp{i}", p) for i, p in enumerate([3.0, 2.0, 1.0])]
+    server = TDAServer(providers)
+    _, reqs, plan = server.granulize(120)
+    covered = sorted(r for req in reqs for r in range(req.row_start, req.row_stop))
+    assert covered == list(range(120))
+    assert sum(plan.shares) == 120

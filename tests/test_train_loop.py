@@ -1,0 +1,167 @@
+"""End-to-end training: loss decreases; HDP homogenization, stragglers,
+elasticity, checkpoint/restart recovery."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import OverheadModel
+from repro.data import GrainSpec, SyntheticSource, batch_from_grains
+from repro.models import LayerSpec, Model, ModelConfig
+from repro.optim import AdamWConfig
+from repro.train import HDPConfig, HDPTrainer, Pod, train_single
+
+
+def tiny_cfg(**kw) -> ModelConfig:
+    base = dict(
+        name="tiny", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+        d_ff=64, vocab_size=64, head_dim=16,
+        layer_pattern=(LayerSpec("attn", "dense"),),
+        param_dtype="float32", compute_dtype="float32", use_pallas=False,
+        rope_theta=1e4,
+    )
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def _memorize_batch(seq=8, batch=8, vocab=64):
+    """A fixed batch the model can memorize — loss must fall fast."""
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, vocab, (batch, seq + 1))
+    return {
+        "tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+        "targets": jnp.asarray(toks[:, 1:], jnp.int32),
+        "loss_mask": jnp.ones((batch, seq), jnp.float32),
+    }
+
+
+OPT = AdamWConfig(peak_lr=3e-3, min_lr=3e-4, warmup_steps=5, decay_steps=500,
+                  weight_decay=0.0)
+
+
+def test_single_worker_loss_decreases():
+    model = Model(tiny_cfg())
+    batch = _memorize_batch()
+    state, hist = train_single(
+        model, 60, lambda s: batch, opt_cfg=OPT, log_every=1
+    )
+    assert hist[-1]["loss"] < hist[0]["loss"] * 0.7, (hist[0], hist[-1])
+    assert np.isfinite(hist[-1]["loss"])
+
+
+def test_single_worker_checkpoint_restart_exact(tmp_path):
+    model = Model(tiny_cfg())
+    batch = _memorize_batch()
+    d = str(tmp_path / "ck")
+    # run 20 steps with checkpoint every 10
+    state_a, _ = train_single(model, 20, lambda s: batch, opt_cfg=OPT,
+                              ckpt_dir=d, ckpt_every=10, log_every=5)
+    # "crash" after step 20, resume to 30
+    state_b, _ = train_single(model, 30, lambda s: batch, opt_cfg=OPT,
+                              ckpt_dir=d, ckpt_every=10, log_every=5)
+    # independent run straight to 30 must match exactly (same batches, same seed)
+    state_c, _ = train_single(model, 30, lambda s: batch, opt_cfg=OPT, log_every=5)
+    for b, c in zip(jax.tree.leaves(state_b.params), jax.tree.leaves(state_c.params), strict=True):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(c), rtol=1e-5, atol=1e-6)
+
+
+# ------------------------------------------------------------------------- HDP
+def _hdp(pods, homogenize=True, **kw):
+    model = Model(tiny_cfg())
+    spec = GrainSpec(grain_size=1, seq_len=8, vocab_size=64)
+    cfg = HDPConfig(
+        total_grains=8, grain_spec=spec, homogenize=homogenize,
+        overhead=OverheadModel(m=2.0), **kw,
+    )
+    return HDPTrainer(model, pods, cfg, opt_cfg=OPT)
+
+
+def test_hdp_loss_decreases_and_plans_proportional():
+    tr = _hdp([Pod("fast", 4.0), Pod("slow", 1.0)])
+    hist = tr.run(25)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+    plan = hist[-1]["plan"]
+    # After heartbeats converge, fast pod carries ~4x the grains.
+    assert plan["fast"] >= 3 * plan["slow"], plan
+
+
+def test_hdp_homogenized_faster_than_equal_split():
+    h = _hdp([Pod("a", 4.0), Pod("b", 1.0)], homogenize=True).run(20)
+    e = _hdp([Pod("a", 4.0), Pod("b", 1.0)], homogenize=False).run(20)
+    t_h = sum(r["step_time"] for r in h[5:])   # skip learning transient
+    t_e = sum(r["step_time"] for r in e[5:])
+    assert t_h < t_e, (t_h, t_e)
+
+
+def test_hdp_equal_perf_equal_plan():
+    tr = _hdp([Pod("a", 2.0), Pod("b", 2.0)])
+    hist = tr.run(10)
+    plan = hist[-1]["plan"]
+    assert plan["a"] == plan["b"]
+
+
+def test_hdp_straggler_mitigation():
+    """A pod that slows mid-run must lose grains within a few steps."""
+    tr = _hdp([Pod("a", 2.0), Pod("b", 2.0)])
+    tr.run(10)
+    assert tr.history[-1]["plan"]["a"] == tr.history[-1]["plan"]["b"]
+    tr.set_perf("a", 0.4)  # 5x slowdown (thermal throttle / noisy neighbor)
+    for s in range(10, 22):
+        tr.step(s)
+    plan = tr.history[-1]["plan"]
+    assert plan["a"] < plan["b"], plan
+
+
+def test_hdp_elastic_pod_death():
+    tr = _hdp([Pod("a", 2.0), Pod("b", 2.0), Pod("c", 2.0)])
+    tr.run(5)
+    tr.kill("c")
+    for s in range(5, 10):
+        tr.step(s)
+    plan = tr.history[-1]["plan"]
+    assert "c" not in plan
+    assert sum(plan.values()) == 8  # all grains redistributed
+    assert np.isfinite(tr.history[-1]["loss"])
+
+
+def test_hdp_checkpoint_restart(tmp_path):
+    d = str(tmp_path / "hdp")
+    tr1 = _hdp([Pod("a", 3.0), Pod("b", 1.0)], ckpt_dir=d, ckpt_every=5)
+    tr1.run(10)
+    # new trainer (fresh process) resumes from step 10
+    tr2 = _hdp([Pod("a", 3.0), Pod("b", 1.0)], ckpt_dir=d, ckpt_every=5)
+    assert tr2.start_step == 10
+    tr2.run(15)
+    assert len(tr2.history) == 5
+
+
+def test_hdp_grad_compression_still_learns():
+    tr = _hdp([Pod("a", 2.0), Pod("b", 1.0)], compress_grads=True)
+    hist = tr.run(25)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_hdp_weighted_combine_matches_single_worker():
+    """With equal perfs and no compression, HDP over 2 pods must equal a
+    single-worker run over the concatenated batch (weighted-combine check)."""
+    model = Model(tiny_cfg())
+    spec = GrainSpec(grain_size=1, seq_len=8, vocab_size=64)
+    cfg = HDPConfig(total_grains=4, grain_spec=spec,
+                    overhead=OverheadModel(m=2.0))
+    tr = HDPTrainer(model, [Pod("a", 1.0), Pod("b", 1.0)], cfg, opt_cfg=OPT)
+    tr.step(0)
+    # single-worker equivalent: all 4 grains in one batch
+    src = SyntheticSource(spec, seed=cfg.seed)
+    batch = batch_from_grains(src, 0, [0, 1, 2, 3], spec)
+    model2 = Model(tiny_cfg())
+    from repro.train import init_train_state
+    from repro.optim import adamw_update
+
+    state = init_train_state(model2.init(jax.random.key(cfg.seed)))
+    (loss, _), grads = jax.value_and_grad(
+        lambda p, b: model2.loss(p, b), has_aux=True
+    )(state.params, batch)
+    new_params, _, _ = adamw_update(grads, state.opt, state.params, OPT)
+    for a, b in zip(jax.tree.leaves(tr.state.params), jax.tree.leaves(new_params), strict=True):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-5)
