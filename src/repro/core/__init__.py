@@ -4,11 +4,14 @@ Control-plane (pure Python, coordinator-side):
   homogenization  — scope lengths, N_H, overhead model, speedup (Eqs. 1-9)
   performance     — heartbeat EMA tracker producing homogenized performance
   scheduler       — grain plans with hysteresis + elastic replan
+  runtime         — async event loop: per-worker grain queues, completion-
+                    event heartbeats, mid-job re-homogenization + stealing
   tda             — client/server/service-provider triangle, real execution
   simulate        — discrete-event heterogeneous cluster (paper §3 testbed)
 """
 
 from .homogenization import (
+    MAX_OVERHEAD_SLOPE,
     OverheadModel,
     equal_split,
     finish_times,
@@ -20,11 +23,19 @@ from .homogenization import (
     virtual_machine_count,
 )
 from .performance import PerformanceTracker, PerfReport, WorkerState
-from .scheduler import GrainPlan, HomogenizedScheduler
+from .runtime import (
+    AsyncRuntime,
+    GrainRecord,
+    RuntimeResult,
+    SimWorker,
+    TimelineEvent,
+)
+from .scheduler import GrainPlan, HomogenizedScheduler, should_replan
 from .simulate import PAPER_MACHINES, REF_SIZE, ClusterSim, JobResult, Machine
 from .tda import ServiceProvider, TDAServer, ThinClient
 
 __all__ = [
+    "MAX_OVERHEAD_SLOPE",
     "OverheadModel",
     "equal_split",
     "finish_times",
@@ -39,6 +50,12 @@ __all__ = [
     "WorkerState",
     "GrainPlan",
     "HomogenizedScheduler",
+    "should_replan",
+    "AsyncRuntime",
+    "GrainRecord",
+    "RuntimeResult",
+    "SimWorker",
+    "TimelineEvent",
     "PAPER_MACHINES",
     "REF_SIZE",
     "ClusterSim",

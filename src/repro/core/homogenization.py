@@ -16,12 +16,12 @@ control-plane logic (the "TDA server"), never traced into XLA programs.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Sequence
 
 import numpy as np
 
 __all__ = [
+    "MAX_OVERHEAD_SLOPE",
     "OverheadModel",
     "scope_lengths",
     "virtual_machine_count",
@@ -155,14 +155,29 @@ def homogenization_quality(shares: Sequence[int], perfs: Sequence[float]) -> flo
     return max(ft) / min(ft)
 
 
+#: Largest slope ``overhead_slope_fit`` will report.  A calibration run that
+#: measures zero (or, through noise, negative) total overhead means M is
+#: unidentifiable — "no measurable overhead" — and used to come back as
+#: ``math.inf``, silently poisoning any ``OverheadModel(m=inf)`` built from it
+#: (non-serializable, breaks slope comparisons).  We clamp instead: at M=1e9
+#: the modelled overhead of any realistic load is sub-nanosecond, i.e. zero
+#: for scheduling purposes, while staying a well-behaved finite float.
+MAX_OVERHEAD_SLOPE = 1e9
+
+
 def overhead_slope_fit(loads: Sequence[float], overheads: Sequence[float]) -> float:
     """Least-squares fit of M in O(L) = L/M (used to calibrate the fleet model,
-    mirroring the paper's measurement of M=20 for its Ethernet)."""
+    mirroring the paper's measurement of M=20 for its Ethernet).
+
+    Contract: always returns a finite slope in (0, MAX_OVERHEAD_SLOPE].
+    Degenerate calibrations (all-zero or net-negative measured overhead)
+    return MAX_OVERHEAD_SLOPE rather than ``inf`` — see its docstring.
+    """
     l = np.asarray(loads, dtype=np.float64)
     o = np.asarray(overheads, dtype=np.float64)
     if l.shape != o.shape or l.size < 2:
         raise ValueError("need >= 2 (load, overhead) samples")
     denom = float(l @ o)
     if denom <= 0:
-        return math.inf
-    return float(l @ l) / denom
+        return MAX_OVERHEAD_SLOPE
+    return float(min(max(float(l @ l) / denom, 1e-9), MAX_OVERHEAD_SLOPE))

@@ -1,0 +1,451 @@
+"""Event-driven async TDA runtime: mid-job re-homogenization + work-stealing.
+
+The paper's TDA plans a job *once* from the homogenized performance vector.
+That is exactly the failure mode dynamic-load-balancing surveys show static
+schemes losing to: a service-provider that slows down (or dies, or joins)
+mid-job breaks the homogenization-line invariant, and the job finishes at the
+straggler's pace.  This module closes the loop at *grain* granularity.
+
+Substrate
+---------
+A discrete event loop over a logical clock:
+
+  - every worker owns a queue of unstarted grains plus at most one in-flight
+    grain (a grain is the schedulable work unit: a matrix row, a request, a
+    microbatch),
+  - each grain completion is an event: the observed grain latency is fed to
+    the ``PerformanceTracker`` as a heartbeat (the paper's background
+    process), so the homogenized perf vector tracks *current* speed,
+  - after each completion the runtime re-homogenizes: when predicted
+    worker finish times (ETAs) diverge past the hysteresis threshold, it
+    migrates *unstarted* grains from the latest-finishing queue to the
+    earliest-finishing one (in-flight grains never move, so no grain is ever
+    executed twice),
+  - a worker whose queue drains steals the tail of the worst-ETA queue,
+    split proportionally to homogenized perf (``scope_lengths`` over
+    {victim, thief} — stealing *is* re-homogenization of the remainder),
+  - scripted ``TimelineEvent``s inject mid-job perf shifts, deaths and
+    joins; a dead worker's in-flight grain is re-queued (it never completed,
+    so re-execution is safe and exactly-once per *completed* grain holds).
+
+Real compute is optional: ``execute`` runs at completion time (never for
+aborted grains), so values are exact while timing comes from the cost model.
+``TDAServer``/``ThinClient``, ``HomogenizedDispatcher``, ``ClusterSim`` and
+``ElasticFleet`` are all thin clients of this loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from collections import deque
+from typing import Any, Callable
+
+from .homogenization import scope_lengths
+from .performance import PerformanceTracker, PerfReport
+from .scheduler import GrainPlan, HomogenizedScheduler, should_replan
+
+__all__ = [
+    "SimWorker",
+    "TimelineEvent",
+    "GrainRecord",
+    "RuntimeResult",
+    "AsyncRuntime",
+]
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass
+class SimWorker:
+    """Minimal runtime worker: a name and a *true* instantaneous perf
+    (work-units/sec).  ``perf`` is mutable so timeline events can degrade or
+    restore it mid-job; the tracker only ever sees it through observed grain
+    latencies."""
+
+    name: str
+    perf: float
+
+
+@dataclasses.dataclass(frozen=True)
+class TimelineEvent:
+    """Scripted mid-job fleet change, in absolute simulated seconds.
+
+    kind = "perf":  worker's true perf becomes ``perf`` (tracker finds out
+                    only through subsequent heartbeats),
+    kind = "kill":  worker dies; its in-flight grain aborts and re-queues,
+    kind = "join":  ``worker`` is a new worker object; ``perf`` is the prior
+                    reported to the tracker (defaults to the worker's true
+                    perf).
+    """
+
+    time_s: float
+    kind: str
+    worker: Any                     # worker name (perf/kill) or object (join)
+    perf: float | None = None
+
+    def __post_init__(self):
+        if self.kind not in ("perf", "kill", "join"):
+            raise ValueError(f"unknown timeline kind {self.kind!r}")
+        if self.kind == "perf" and (self.perf is None or self.perf <= 0):
+            raise ValueError("perf event needs perf > 0")
+
+
+@dataclasses.dataclass(frozen=True)
+class GrainRecord:
+    grain: int
+    worker: str
+    start_s: float
+    end_s: float
+    cost: float
+
+
+@dataclasses.dataclass
+class RuntimeResult:
+    makespan: float                  # last completion relative to job start
+    records: list[GrainRecord]
+    values: dict[int, Any]           # grain -> execute() result (or None)
+    executed_by: dict[int, str]      # grain -> completing worker (exactly one)
+    worker_finish: dict[str, float]  # last completion time per worker (abs)
+    worker_busy: dict[str, float]    # total compute seconds per worker
+    n_replans: int
+    n_migrated: int
+    n_steals: int
+    end_s: float                     # absolute clock at job end
+
+    def shares(self) -> dict[str, int]:
+        counts: dict[str, int] = {}
+        for w in self.executed_by.values():
+            counts[w] = counts.get(w, 0) + 1
+        return counts
+
+    def homogenization_quality(self, workers: list[str] | None = None) -> float:
+        """Max/min last-completion spread across workers that did work
+        (1.0 = everyone crossed the homogenization line together)."""
+        names = workers if workers is not None else list(self.worker_finish)
+        start = self.end_s - self.makespan
+        spans = [
+            self.worker_finish[w] - start
+            for w in names
+            if self.worker_finish.get(w, 0.0) > start
+        ]
+        if len(spans) < 2:
+            return 1.0
+        return max(spans) / max(min(spans), _EPS)
+
+
+@dataclasses.dataclass
+class _Inflight:
+    grain: int
+    start_s: float
+    end_s: float
+    cost: float
+
+
+class AsyncRuntime:
+    """The event-loop substrate.  One instance can run many jobs against the
+    same tracker (heartbeat state persists, so later jobs start from learned
+    perfs — the closed loop of the paper's background process)."""
+
+    def __init__(
+        self,
+        workers: list[Any],
+        tracker: PerformanceTracker | None = None,
+        *,
+        homogenize: bool = True,
+        rehomogenize: bool = True,
+        steal: bool = True,
+        replan_threshold: float = 0.05,
+    ):
+        self.tracker = tracker or PerformanceTracker(alpha=0.5)
+        self.workers: dict[str, Any] = {}
+        self.homogenize = homogenize
+        self.rehomogenize = rehomogenize
+        self.steal = steal
+        self.replan_threshold = replan_threshold
+        self.clock = 0.0
+        # Timeline events scheduled past a job's last completion don't fire in
+        # that job; they carry over and fire during a later job's window.
+        self._pending: list[TimelineEvent] = []
+        for w in workers:
+            self._register(w, now_s=0.0)
+
+    # -- fleet -------------------------------------------------------------
+    def _register(self, worker: Any, now_s: float, perf_prior: float | None = None):
+        if not hasattr(worker, "name") or not hasattr(worker, "perf"):
+            raise TypeError("runtime workers need .name and .perf")
+        self.workers[worker.name] = worker
+        if worker.name not in self.tracker.workers():
+            # Neutral prior until real heartbeats arrive.
+            self.tracker.observe(
+                PerfReport(worker.name, perf_prior or 1.0, 1.0, now_s)
+            )
+
+    # -- job ---------------------------------------------------------------
+    def run(
+        self,
+        n_grains: int,
+        *,
+        grain_cost: float | Callable[[int], float] = 1.0,
+        execute: Callable[[Any, int], Any] | None = None,
+        duration_fn: Callable[[Any, float, float], float] | None = None,
+        timeline: tuple[TimelineEvent, ...] | list[TimelineEvent] = (),
+        timeline_relative: bool = False,
+        initial_plan: GrainPlan | None = None,
+        start_s: float | None = None,
+    ) -> RuntimeResult:
+        """Run one job of ``n_grains`` grains to completion.
+
+        ``grain_cost``  — work units per grain (scalar or per-grain callable).
+        ``execute``     — real compute, called exactly once per completed
+                          grain, at completion time: ``execute(worker, grain)``.
+        ``duration_fn`` — simulated seconds for (worker, cost, now); defaults
+                          to ``cost / worker.perf`` (jitter hooks in here).
+        ``timeline``    — scripted perf shifts / deaths / joins, in absolute
+                          simulated time, or relative to this job's start when
+                          ``timeline_relative=True``.  Events landing past the
+                          job's last completion carry over to the next job.
+        ``initial_plan``— caller-provided allotment (e.g. ``TDAServer``'s);
+                          otherwise planned from the tracker's perf vector.
+        """
+        if n_grains < 0:
+            raise ValueError("n_grains must be >= 0")
+        now = self.clock if start_s is None else max(start_s, self.clock)
+        uniform = None if callable(grain_cost) else float(grain_cost)
+        cost_of = grain_cost if callable(grain_cost) else (lambda g: uniform)
+        dur_of = duration_fn or (
+            lambda w, cost, t: cost / max(getattr(w, "perf", _EPS), _EPS)
+        )
+
+        events = [
+            dataclasses.replace(ev, time_s=ev.time_s + now) for ev in timeline
+        ] if timeline_relative else list(timeline)
+        events.extend(self._pending)
+        self._pending = []
+
+        res = RuntimeResult(
+            makespan=0.0, records=[], values={}, executed_by={},
+            worker_finish={}, worker_busy={}, n_replans=0, n_migrated=0,
+            n_steals=0, end_s=now,
+        )
+        if n_grains == 0:
+            self._pending = events
+            self.clock = now
+            return res
+
+        queues = self._initial_queues(n_grains, now, initial_plan)
+        inflight: dict[str, _Inflight] = {}
+        dead: set[str] = set()
+        heap: list[tuple[float, int, int, Any]] = []   # (t, priority, seq, payload)
+        seq = itertools.count()
+        start_clock = now
+
+        for ev in sorted(events, key=lambda e: e.time_s):
+            heapq.heappush(heap, (max(ev.time_s, now), 0, next(seq), ev))
+
+        def alive() -> list[str]:
+            return [w for w in self.workers if w not in dead]
+
+        def est_perf(w: str) -> float:
+            try:
+                return max(self.tracker.perf(w, now), _EPS)
+            except KeyError:
+                return _EPS
+
+        def eta(w: str) -> float:
+            """Predicted seconds until worker w's queue drains (from `now`),
+            using the tracker's *estimated* perf — the scheduler never peeks
+            at true perf."""
+            t = inflight[w].end_s - now if w in inflight else 0.0
+            q = queues.get(w)
+            if q:
+                qcost = len(q) * uniform if uniform is not None else sum(
+                    cost_of(g) for g in q
+                )
+                t += qcost / est_perf(w)
+            return t
+
+        def start_next(w: str) -> None:
+            if w in dead or w in inflight:
+                return
+            q = queues[w]
+            if not q and self.steal:
+                self._steal_into(w, queues, eta, est_perf, res)
+            if not q:
+                return
+            g = q.popleft()
+            c = cost_of(g)
+            d = max(dur_of(self.workers[w], c, now), _EPS)
+            inflight[w] = _Inflight(g, now, now + d, c)
+            heapq.heappush(heap, (now + d, 1, next(seq), w))
+
+        def kick_idle() -> None:
+            for w in alive():
+                start_next(w)
+
+        kick_idle()
+        while len(res.values) < n_grains:
+            if not heap:
+                if not alive():
+                    raise RuntimeError("all workers dead with grains pending")
+                raise RuntimeError("runtime stalled with grains pending")
+            now, prio, _, payload = heapq.heappop(heap)
+
+            if prio == 0:  # timeline event
+                self._apply_timeline(
+                    payload, now, queues, inflight, dead, eta, res
+                )
+                if self.rehomogenize:
+                    self._rebalance(queues, inflight, dead, eta, cost_of,
+                                    est_perf, res)
+                kick_idle()
+                continue
+
+            w = payload
+            fl = inflight.get(w)
+            if fl is None or w in dead or abs(fl.end_s - now) > 1e-9:
+                continue  # stale event (worker died or grain was aborted)
+            del inflight[w]
+            dur = now - fl.start_s
+            res.records.append(GrainRecord(fl.grain, w, fl.start_s, now, fl.cost))
+            if fl.grain in res.executed_by:
+                raise RuntimeError(f"grain {fl.grain} double-executed")
+            res.executed_by[fl.grain] = w
+            res.values[fl.grain] = (
+                execute(self.workers[w], fl.grain) if execute else None
+            )
+            res.worker_finish[w] = now
+            res.worker_busy[w] = res.worker_busy.get(w, 0.0) + dur
+            # Heartbeat: the background process reports observed throughput.
+            self.tracker.observe(PerfReport(w, fl.cost, max(dur, _EPS), now))
+            if self.rehomogenize:
+                self._rebalance(queues, inflight, dead, eta, cost_of,
+                                est_perf, res)
+            kick_idle()
+
+        # Unfired timeline events (scheduled past the last completion) carry
+        # over so a later job on this runtime still sees them.
+        self._pending = [p for _, prio, _, p in heap if prio == 0]
+        self.clock = now
+        res.end_s = now
+        res.makespan = now - start_clock
+        return res
+
+    # -- internals ---------------------------------------------------------
+    def _initial_queues(
+        self, n_grains: int, now: float, plan: GrainPlan | None
+    ) -> dict[str, deque[int]]:
+        if plan is None:
+            sched = HomogenizedScheduler(
+                self.tracker, total_grains=n_grains,
+                replan_threshold=self.replan_threshold,
+                homogenize=self.homogenize,
+            )
+            plan = sched.plan(now_s=now, force=True)
+        elif plan.total_grains != n_grains:
+            raise ValueError(
+                f"initial_plan covers {plan.total_grains} grains, job has {n_grains}"
+            )
+        unknown = set(plan.workers) - set(self.workers)
+        if unknown:
+            raise ValueError(f"plan names unknown workers {sorted(unknown)}")
+        queues = {w: deque() for w in self.workers}
+        start = 0
+        for w, share in zip(plan.workers, plan.shares, strict=True):
+            queues[w].extend(range(start, start + share))
+            start += share
+        return queues
+
+    def _steal_into(self, thief, queues, eta, est_perf, res):
+        """Idle worker steals the tail of the worst-ETA queue, split by
+        scope_lengths over {victim, thief} — proportional re-homogenization
+        of the victim's remainder."""
+        victims = [w for w, q in queues.items() if q and w != thief]
+        if not victims:
+            return
+        victim = max(victims, key=eta)
+        q = queues[victim]
+        shares = scope_lengths(len(q), [est_perf(victim), est_perf(thief)])
+        take = shares[1]
+        if take <= 0 and len(q) > 1:
+            take = 1  # a slow-estimated thief still beats an idle one
+        if take <= 0:
+            return
+        stolen = [q.pop() for _ in range(take)]
+        queues[thief].extend(reversed(stolen))
+        res.n_steals += 1
+        res.n_migrated += take
+
+    def _rebalance(self, queues, inflight, dead, eta, cost_of, est_perf, res):
+        """Hysteresis-gated migration of unstarted grains from the
+        latest-finishing worker to the earliest-finishing one.  Each move must
+        strictly reduce the fleet's max predicted finish time, so the loop
+        terminates and never thrashes."""
+        live = [w for w in self.workers if w not in dead]
+        if len(live) < 2:
+            return
+        etas = {w: eta(w) for w in live}
+        if not should_replan(list(etas.values()), self.replan_threshold):
+            return
+        moved = 0
+        budget = sum(len(q) for q in queues.values()) + 1
+        while budget > 0:
+            budget -= 1
+            donors = [w for w in live if queues[w]]
+            if not donors:
+                break
+            hi = max(donors, key=lambda w: etas[w])
+            lo = min(live, key=lambda w: etas[w])
+            if hi == lo:
+                break
+            g = queues[hi][-1]
+            c = cost_of(g)
+            new_lo = etas[lo] + c / est_perf(lo)
+            if new_lo >= etas[hi] - _EPS:
+                break  # no strict improvement left
+            queues[hi].pop()
+            queues[lo].append(g)
+            etas[hi] -= c / est_perf(hi)
+            etas[lo] = new_lo
+            moved += 1
+        if moved:
+            res.n_replans += 1
+            res.n_migrated += moved
+
+    def _apply_timeline(self, ev: TimelineEvent, now, queues, inflight, dead,
+                        eta, res):
+        if ev.kind == "perf":
+            # Stale scripts (unknown or already-dead worker) are no-ops, same
+            # as the kill branch below.
+            if ev.worker in self.workers and ev.worker not in dead:
+                self.workers[ev.worker].perf = ev.perf
+            return
+        if ev.kind == "join":
+            worker = ev.worker
+            self._register(worker, now_s=now,
+                           perf_prior=ev.perf or getattr(worker, "perf", 1.0))
+            dead.discard(worker.name)
+            queues.setdefault(worker.name, deque())
+            return
+        # kill
+        name = ev.worker
+        if name not in self.workers or name in dead:
+            return
+        dead.add(name)
+        # Remove from the fleet so later jobs on this runtime don't treat the
+        # dead worker as alive (a stolen-grain heartbeat would silently
+        # resurrect it in the tracker).  A rejoin re-registers it.
+        self.workers.pop(name)
+        self.tracker.mark_dead(name)
+        orphans = list(queues.get(name, ()))
+        queues[name] = deque()
+        fl = inflight.pop(name, None)
+        if fl is not None:
+            orphans.insert(0, fl.grain)  # aborted, never completed: re-queue
+        live = [w for w in self.workers if w not in dead]
+        if not live and orphans:
+            raise RuntimeError("all workers dead with grains pending")
+        if orphans:
+            heir = min(live, key=eta)
+            queues[heir].extend(orphans)

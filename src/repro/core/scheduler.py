@@ -33,7 +33,22 @@ from .homogenization import (
 )
 from .performance import PerformanceTracker
 
-__all__ = ["GrainPlan", "HomogenizedScheduler"]
+__all__ = ["GrainPlan", "HomogenizedScheduler", "should_replan"]
+
+
+def should_replan(predicted_finish_s: list[float], threshold: float) -> bool:
+    """Spread-based hysteresis gate used by the async runtime's mid-job
+    re-homogenizer: migrating grains is worth a queue-shuffle only when the
+    predicted finish-time spread exceeds ``threshold`` relative to the
+    earliest finisher.  (``HomogenizedScheduler.plan`` keeps its own
+    *improvement*-based criterion — replan when the candidate plan beats the
+    current one by ``replan_threshold`` — because a step-level replan costs an
+    XLA recompile, which a mere spread doesn't justify if no better plan
+    exists.)"""
+    if len(predicted_finish_s) < 2:
+        return False
+    lo, hi = min(predicted_finish_s), max(predicted_finish_s)
+    return hi > lo * (1.0 + threshold) + 1e-12
 
 
 @dataclasses.dataclass(frozen=True)

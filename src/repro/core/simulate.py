@@ -27,8 +27,7 @@ from typing import Sequence
 import numpy as np
 
 from .homogenization import OverheadModel, equal_split, scope_lengths
-from .performance import PerformanceTracker, PerfReport
-from .scheduler import HomogenizedScheduler
+from .performance import PerformanceTracker
 
 __all__ = [
     "Machine",
@@ -160,33 +159,50 @@ class ClusterSim:
         n: int,
         n_jobs: int,
         tracker: PerformanceTracker | None = None,
-        scheduler: HomogenizedScheduler | None = None,
+        adaptive: bool = True,
+        timelines: dict[int, tuple] | None = None,
     ) -> list[JobResult]:
-        """Closed-loop homogenization: allotments come from the tracker's
-        *learned* perf vector; each job's per-worker timings are fed back as
-        heartbeat reports (the paper's background process).  Starting from an
-        all-equal prior, speedup converges to the oracle-perf value."""
+        """Closed-loop homogenization, now a thin client of the async runtime
+        (``core/runtime.py``): each size-n job streams row-grains through the
+        event loop, every grain completion is a heartbeat into the tracker,
+        and the runtime re-homogenizes/steals mid-job.  Starting from an
+        all-equal prior, speedup converges to the oracle-perf value.
+
+        ``adaptive=False`` freezes each job to its initial plan (the static
+        one-shot baseline the paper — and our regression tests — compare
+        against).  ``timelines`` optionally maps job index -> TimelineEvents
+        (times relative to that job's start) for mid-job perf shifts."""
+        from .runtime import AsyncRuntime, SimWorker  # runtime is layered above
+
         tracker = tracker or PerformanceTracker(alpha=0.5)
-        now = 0.0
-        # Bootstrap: every worker reports a neutral heartbeat.
-        for m in self.machines:
-            tracker.observe(PerfReport(m.name, 1.0, 1.0, now))
-        scheduler = scheduler or HomogenizedScheduler(
-            tracker, total_grains=n, replan_threshold=0.02
+        # SimWorker is the mutable runtime-facing view: timeline events shift
+        # its perf without touching the frozen Machine spec.
+        workers = [SimWorker(m.name, m.perf) for m in self.machines]
+        rt = AsyncRuntime(
+            workers, tracker=tracker,
+            rehomogenize=adaptive, steal=adaptive, replan_threshold=0.02,
         )
+        unit = self.unit_cost(n)
+
+        def duration(worker, cost, now_s):
+            return self._worker_time(cost / unit, worker.perf, n)
+
         results: list[JobResult] = []
-        for _ in range(n_jobs):
-            plan = scheduler.plan(now_s=now)
-            est = [dict(tracker.perf_vector(now))[m.name] for m in self.machines]
-            res = self.run_job(n, homogenize=True, perf_estimates=est)
-            results.append(res)
-            # Heartbeats: each worker reports (rows done, elapsed).
-            for m, share in zip(self.machines, res.shares, strict=True):
-                if share > 0:
-                    t = self._worker_time(share, m.perf, n)
-                    tracker.observe(
-                        PerfReport(m.name, share * self.unit_cost(n), max(t, 1e-9), now)
-                    )
-            now += res.total_time
-            del plan
+        for job in range(n_jobs):
+            run = rt.run(n, grain_cost=unit, duration_fn=duration,
+                         timeline=(timelines or {}).get(job, ()),
+                         timeline_relative=True)
+            counts = run.shares()
+            ovh = self.overhead(n)
+            results.append(JobResult(
+                n=n,
+                n_workers=len(self.machines),
+                homogenized=True,
+                shares=tuple(counts.get(m.name, 0) for m in self.machines),
+                compute_time=run.makespan,
+                overhead=ovh,
+                total_time=run.makespan + ovh,
+                standalone_time=self.standalone_time(n),
+            ))
+            rt.clock += ovh  # distribution overhead advances the fleet clock
         return results

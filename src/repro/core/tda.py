@@ -5,12 +5,19 @@ the server granulizes it into sub-requests sized by homogenization and sends
 them to service-providers; each provider computes its part and returns it
 *directly to the client*, which combines the parts.
 
-This module runs the triangle in-process with real numerics: the default
-workload is the paper's row-granulized matrix multiplication (optionally via
-the Pallas matmul kernel), so tests can assert that the distributed product is
-exactly the single-machine product.  Wall-clock on this 1-core container is
-sequential, so *timing* comes from the ClusterSim cost model while *values*
-are computed for real.
+Execution now rides the async event-loop runtime (``core/runtime.py``): the
+runtime plans row-block grains (2 rows each) from the server's homogenized
+perf vector and streams them through the providers, feeding every observed
+grain latency back to the server's PerformanceTracker and re-homogenizing
+mid-job — so a provider that slows down, dies or joins *during* a request
+still converges to equal finish times.  ``TDAServer.granulize`` remains the
+inspectable one-shot row-level plan (same tracker, same allotment math), but
+the executed assignment is the runtime's and shifts as grains migrate.  The default workload is the paper's
+row-granulized matrix multiplication (optionally via the Pallas matmul
+kernel), so tests can assert that the distributed product is exactly the
+single-machine product.  Wall-clock on this 1-core container is sequential,
+so *timing* comes from the ClusterSim cost model while *values* are computed
+for real.
 """
 
 from __future__ import annotations
@@ -21,6 +28,7 @@ from typing import Callable
 import numpy as np
 
 from .performance import PerformanceTracker, PerfReport
+from .runtime import AsyncRuntime, RuntimeResult, TimelineEvent
 from .scheduler import GrainPlan, HomogenizedScheduler
 from .simulate import ClusterSim
 
@@ -48,7 +56,10 @@ class SubResult:
 class ServiceProvider:
     """Executes sub-requests; reports heartbeats to the server (background
     process).  ``matmul_fn`` defaults to numpy; examples swap in the Pallas
-    kernel wrapper."""
+    kernel wrapper.  ``perf`` is the *true* instantaneous speed — mutable, so
+    mid-job degradation scenarios just assign to it (or script a
+    ``TimelineEvent``); the server only learns of the change through observed
+    grain latencies."""
 
     def __init__(
         self,
@@ -77,8 +88,6 @@ class TDAServer:
         self.tracker = PerformanceTracker(alpha=0.5)
         self.clock = 0.0
         for p in providers:
-            #
-
             # Neutral prior until heartbeats arrive.
             self.tracker.observe(PerfReport(p.name, 1.0, 1.0, self.clock))
         self.homogenize = homogenize
@@ -104,38 +113,82 @@ class TDAServer:
 
 
 class ThinClient:
-    """Sends the request, receives parts directly from providers, combines."""
+    """Sends the request, receives parts directly from providers, combines.
+
+    A thin client of the async runtime: grains are 2-row result blocks,
+    queues are planned by the runtime from the server's tracker, and the
+    runtime's completion events are the provider->server heartbeats.
+    ``homogenize=False`` on the server degrades to the paper's static
+    equal-split baseline (no re-homogenization, no stealing)."""
 
     def __init__(self, server: TDAServer, sim: ClusterSim | None = None):
         self.server = server
         self.sim = sim or ClusterSim(
             perfs=[p.perf for p in server.providers]
         )
+        self.runtime = AsyncRuntime(
+            server.providers,
+            tracker=server.tracker,
+            homogenize=server.homogenize,
+            rehomogenize=server.homogenize,
+            steal=server.homogenize,
+        )
+        self.last_result: RuntimeResult | None = None
 
-    def matmul(self, a: np.ndarray, b: np.ndarray) -> tuple[np.ndarray, float]:
-        """Distributed a @ b.  Returns (product, simulated_total_time)."""
+    def matmul(
+        self,
+        a: np.ndarray,
+        b: np.ndarray,
+        timeline: tuple[TimelineEvent, ...] = (),
+        block_rows: int = 2,
+    ) -> tuple[np.ndarray, float]:
+        """Distributed a @ b.  Returns (product, simulated_total_time).
+
+        Grains are ``block_rows``-row blocks (2 by default: single-row numpy
+        matmuls take the gemv path, whose accumulation order differs from the
+        full product — >=2-row gemm blocks are bitwise identical to the
+        single-machine result, which the exactness tests rely on).
+
+        ``timeline`` scripts mid-job fleet changes (perf shifts / deaths),
+        with times relative to the start of this job."""
         if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
             raise ValueError(f"bad matmul shapes {a.shape} x {b.shape}")
-        _, reqs, _ = self.server.granulize(a.shape[0])
-        by_name = {p.name: p for p in self.server.providers}
-        parts: list[SubResult] = []
-        for req in reqs:
-            provider = by_name[req.worker]
-            res = provider.execute(req, a, b, self.sim)
-            parts.append(res)
-            # Provider -> server heartbeat (the background process).
-            self.server.heartbeat(
-                PerfReport(
-                    worker=req.worker,
-                    work_done=(req.row_stop - req.row_start)
-                    * self.sim.unit_cost(a.shape[0]),
-                    elapsed_s=max(res.elapsed_s, 1e-9),
-                    time_s=self.server.clock + res.elapsed_s,
-                )
-            )
+        n = a.shape[0]
+        n_grains = -(-n // block_rows)
+        rows_of = lambda g: (g * block_rows, min(n, (g + 1) * block_rows))
+        unit = self.sim.unit_cost(n)
+        self.runtime.clock = max(self.runtime.clock, self.server.clock)
+        res = self.runtime.run(
+            n_grains,
+            grain_cost=lambda g: (rows_of(g)[1] - rows_of(g)[0]) * unit,
+            execute=lambda p, g: self.matmul_block(p, a, b, *rows_of(g)),
+            # Route timing through the sim's cost model so its jitter term
+            # (runtime performance varying during operation, paper §3) applies.
+            duration_fn=lambda p, cost, t: self.sim._worker_time(
+                cost / unit, p.perf, n
+            ),
+            timeline=timeline,
+            timeline_relative=True,
+        )
+        self.last_result = res
+        self.server.clock = max(self.server.clock, res.end_s)
         # Client-side combine (triangle edge: provider -> client).
-        out = np.zeros((a.shape[0], b.shape[1]), dtype=parts[0].value.dtype)
-        for part in parts:
-            out[part.row_start : part.row_stop] = part.value
-        sim_time = max(p.elapsed_s for p in parts) + self.sim.overhead(a.shape[0])
+        out = np.zeros((n, b.shape[1]), dtype=np.result_type(a.dtype, b.dtype))
+        for g, value in res.values.items():
+            lo, hi = rows_of(g)
+            out[lo:hi] = value
+        sim_time = res.makespan + self.sim.overhead(n)
         return out, sim_time
+
+    @staticmethod
+    def matmul_block(
+        provider: ServiceProvider, a, b, lo: int, hi: int
+    ) -> np.ndarray:
+        """Compute rows [lo, hi) of a @ b on one provider.  A stray 1-row tail
+        block is widened to 2 rows and sliced, keeping every real matmul on
+        the (bitwise-reproducible) gemm path."""
+        if hi - lo == 1 and a.shape[0] > 1:
+            if lo > 0:
+                return np.asarray(provider.matmul_fn(a[lo - 1 : hi], b))[1:]
+            return np.asarray(provider.matmul_fn(a[lo : hi + 1], b))[:1]
+        return np.asarray(provider.matmul_fn(a[lo:hi], b))

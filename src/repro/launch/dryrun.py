@@ -56,6 +56,21 @@ _COLLECTIVES = (
 )
 
 
+def cost_dict(cost_analysis) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns a dict; newer JAX returns ``list[dict]`` (one entry per
+    executable program — the first is the main program); some backends return
+    None.  Always returns a plain dict (empty when unavailable)."""
+    if cost_analysis is None:
+        return {}
+    if isinstance(cost_analysis, dict):
+        return cost_analysis
+    if isinstance(cost_analysis, (list, tuple)):
+        return cost_analysis[0] if cost_analysis else {}
+    raise TypeError(f"unexpected cost_analysis type {type(cost_analysis)!r}")
+
+
 def _shape_bytes(text: str) -> int:
     total = 0
     for dt, dims in _SHAPE_RE.findall(text):
@@ -218,7 +233,7 @@ def _measure(cfg, shape, mesh, n_dev) -> dict:
             fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate
         ).lower(*args)
         compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled.cost_analysis())
     coll = collective_stats(compiled.as_text(), n_dev)
     return {
         "flops": float(cost.get("flops", 0.0)),
@@ -320,7 +335,7 @@ def run_cell(
         compiled = lowered.compile()
         t_compile = time.time() - t0
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_dict(compiled.cost_analysis())
     hlo = compiled.as_text()
     coll = collective_stats(hlo, n_dev)
 

@@ -23,7 +23,8 @@ from __future__ import annotations
 import dataclasses
 
 from ..core.homogenization import scope_lengths
-from ..core.performance import PerformanceTracker
+from ..core.performance import PerformanceTracker, PerfReport
+from ..core.runtime import AsyncRuntime, RuntimeResult, SimWorker
 from ..core.scheduler import GrainPlan
 
 __all__ = ["PodSpec", "RemeshPlan", "ElasticFleet"]
@@ -77,12 +78,27 @@ class ElasticFleet:
                     last_ckpt_step: int) -> RemeshPlan:
         """A (repaired or new) pod joins; it starts with a prior perf and the
         tracker refines it from real heartbeats."""
-        from ..core.performance import PerfReport
-
         self.pods[pod.name] = pod
         self._lost.discard(pod.name)
         self.tracker.observe(PerfReport(pod.name, perf_prior, 1.0, now_s))
         return self._plan(last_ckpt_step)
+
+    def rehearse(self, plan: RemeshPlan) -> RuntimeResult:
+        """Dry-run a remesh plan through the async runtime before committing:
+        survivors execute the redistributed grains in simulation (perfs = the
+        tracker's learned view), predicting the post-recovery makespan and
+        homogenization quality.  Uses a throwaway tracker so rehearsal
+        heartbeats never pollute the live one."""
+        perfs = self.tracker.perf_vector()
+        shadow = PerformanceTracker(alpha=0.5)
+        workers = []
+        for name in plan.survivors:
+            p = max(perfs.get(name, 1e-9), 1e-9)
+            workers.append(SimWorker(name, p))
+            shadow.observe(PerfReport(name, p, 1.0, 0.0))
+        rt = AsyncRuntime(workers, tracker=shadow)
+        return rt.run(plan.grain_plan.total_grains,
+                      initial_plan=plan.grain_plan)
 
     def _plan(self, resume_step: int) -> RemeshPlan:
         alive = self.alive()

@@ -3,9 +3,15 @@
 The paper's scope-length allotment applied at the serving tier: replicas are
 service-providers, a request bundle is the linearly-divisible load, and the
 dispatcher (TDA server) assigns each replica a share proportional to its
-homogenized performance (EMA of measured tokens/sec heartbeats).  All
-replicas drain their queues at the same moment — the homogenization line —
-which minimizes the bundle's completion time (makespan).
+homogenized performance (EMA of measured tokens/sec heartbeats).  Dispatch
+now rides the async event-loop runtime (``core/runtime.py``): every request
+completion is a heartbeat, and unstarted requests migrate off stragglers
+mid-bundle — so all replicas drain their queues at the same moment (the
+homogenization line) even when a replica degrades *during* the bundle.
+
+``dispatch_to_engines`` drives *real* ``DecodeEngine`` replicas through the
+same loop: each grain is one request executed for real (exactly once), while
+bundle timing comes from the simulated replica perfs.
 """
 
 from __future__ import annotations
@@ -13,8 +19,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Sequence
 
-from ..core.homogenization import equal_split, scope_lengths
-from ..core.performance import PerformanceTracker, PerfReport
+from ..core.performance import PerformanceTracker
+from ..core.runtime import AsyncRuntime, RuntimeResult, TimelineEvent
 
 __all__ = ["Replica", "DispatchResult", "HomogenizedDispatcher"]
 
@@ -30,6 +36,8 @@ class DispatchResult:
     shares: dict[str, int]
     makespan: float        # simulated: max replica drain time
     per_replica_time: dict[str, float]
+    n_migrated: int = 0    # requests re-homogenized/stolen mid-bundle
+    quality: float = 1.0   # drain-time spread (1.0 = homogenization line)
 
 
 class HomogenizedDispatcher:
@@ -38,35 +46,94 @@ class HomogenizedDispatcher:
         self.replicas = {r.name: r for r in replicas}
         self.homogenize = homogenize
         self.tracker = PerformanceTracker(alpha=alpha, dead_after_s=1e9)
-        self.clock = 0.0
-        for r in replicas:
-            self.tracker.observe(PerfReport(r.name, 1.0, 1.0, 0.0))
+        self.runtime = AsyncRuntime(
+            list(replicas),
+            tracker=self.tracker,
+            homogenize=homogenize,
+            rehomogenize=homogenize,
+            steal=homogenize,
+        )
 
-    def dispatch(self, n_requests: int, tokens_per_request: float = 1.0) -> DispatchResult:
+    @property
+    def clock(self) -> float:
+        return self.runtime.clock
+
+    def dispatch(
+        self,
+        n_requests: int,
+        tokens_per_request: float = 1.0,
+        timeline: tuple[TimelineEvent, ...] = (),
+        execute=None,
+    ) -> DispatchResult:
+        """Dispatch a bundle of ``n_requests`` through the runtime.
+
+        ``timeline`` events use times relative to the start of this bundle
+        (mid-bundle degradation/death scenarios).  ``execute(replica, i)``
+        optionally runs real per-request work at completion time."""
+        run = self.runtime.run(
+            n_requests,
+            grain_cost=tokens_per_request,
+            timeline=timeline,
+            timeline_relative=True,
+            execute=execute,
+        )
         names = self.tracker.workers()
-        perfs = [self.tracker.perf(n, self.clock) for n in names]
-        shares = (
-            scope_lengths(n_requests, perfs)
-            if self.homogenize
-            else equal_split(n_requests, len(names))
-        )
-        times = {}
-        for name, share in zip(names, shares, strict=True):
-            r = self.replicas[name]
-            t = share * tokens_per_request / r.perf if share else 0.0
-            times[name] = t
-            if share:
-                self.tracker.observe(
-                    PerfReport(name, share * tokens_per_request, max(t, 1e-9),
-                               self.clock + t)
-                )
-        makespan = max(times.values()) if times else 0.0
-        self.clock += makespan
+        counts = run.shares()
         return DispatchResult(
-            shares=dict(zip(names, shares, strict=True)),
-            makespan=makespan,
-            per_replica_time=times,
+            shares={n: counts.get(n, 0) for n in names},
+            makespan=run.makespan,
+            per_replica_time={n: run.worker_busy.get(n, 0.0) for n in names},
+            n_migrated=run.n_migrated,
+            quality=run.homogenization_quality(names),
         )
+
+    def dispatch_to_engines(
+        self,
+        engines: dict[str, object],
+        requests: list,
+        timeline: tuple[TimelineEvent, ...] = (),
+    ) -> tuple[DispatchResult, RuntimeResult | None]:
+        """Real-execution path: route ``requests`` (serve.engine.Request) to
+        named DecodeEngines via the runtime.  Cost model: a request costs
+        prompt+max_new tokens; each engine runs its requests for real at
+        completion time, so every request is decoded exactly once even when
+        it migrates between queues mid-bundle."""
+        unknown = set(engines) - set(self.replicas)
+        if unknown:
+            raise ValueError(f"engines for unknown replicas {sorted(unknown)}")
+        unbacked = set(self.tracker.workers()) - set(engines)
+        if unbacked:
+            # A live replica with no engine would be scheduled grains it
+            # cannot execute (KeyError mid-bundle after partial decode).
+            raise ValueError(f"live replicas without engines {sorted(unbacked)}")
+
+        def execute(replica, i):
+            eng = engines[replica.name]
+            req = requests[i]
+            eng.submit(req)
+            done = eng.run_until_drained()
+            return done[-1] if done else None
+
+        cost = lambda i: float(len(requests[i].prompt) + requests[i].max_new_tokens)
+        run = self.runtime.run(
+            len(requests), grain_cost=cost, execute=execute,
+            timeline=timeline, timeline_relative=True,
+        )
+        names = self.tracker.workers()
+        counts = run.shares()
+        return DispatchResult(
+            shares={n: counts.get(n, 0) for n in names},
+            makespan=run.makespan,
+            per_replica_time={n: run.worker_busy.get(n, 0.0) for n in names},
+            n_migrated=run.n_migrated,
+            quality=run.homogenization_quality(names),
+        ), run
+
+    def degrade(self, name: str, perf: float) -> None:
+        """True-perf shift outside a bundle (the tracker learns it from the
+        next bundle's heartbeats)."""
+        self.replicas[name].perf = perf
 
     def kill(self, name: str) -> None:
         self.tracker.mark_dead(name)
+        self.runtime.workers.pop(name, None)

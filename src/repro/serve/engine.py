@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..core.performance import PerfReport
 from ..models.model import Model
 
 
@@ -45,6 +46,7 @@ class DecodeEngine:
     def __init__(
         self, model: Model, params, max_batch: int = 4, max_seq: int = 128,
         eos_id: int | None = None, greedy: bool = True, seed: int = 0,
+        name: str = "engine0",
     ):
         if model.cfg.input_mode == "embeds" and not model.cfg.is_enc_dec:
             raise ValueError("DecodeEngine drives token-input models")
@@ -52,6 +54,7 @@ class DecodeEngine:
             raise ValueError("use the enc-dec serving path (examples) instead")
         self.model = model
         self.params = params
+        self.name = name
         self.max_batch = max_batch
         self.max_seq = max_seq
         self.eos_id = eos_id
@@ -63,6 +66,8 @@ class DecodeEngine:
         self._decode = jax.jit(model.decode_step, donate_argnums=1)
         self.steps = 0
         self.tokens_out = 0
+        self._hb_steps = 0
+        self._hb_tokens = 0
 
     # ----------------------------------------------------------------- admin
     def submit(self, req: Request) -> None:
@@ -148,3 +153,21 @@ class DecodeEngine:
     @property
     def throughput(self) -> float:
         return self.tokens_out / max(self.steps, 1)
+
+    def heartbeat(self, now_s: float, seconds_per_step: float = 1.0) -> PerfReport | None:
+        """Tokens/sec since the last heartbeat, as a PerfReport for the
+        homogenized dispatcher's tracker (the paper's background process).
+        Returns None when no engine steps ran since the last call."""
+        steps = self.steps - self._hb_steps
+        tokens = self.tokens_out - self._hb_tokens
+        if steps <= 0 or tokens <= 0:
+            # tokens==0 happens mid-prompt-feed: a zero-throughput report
+            # would poison the tracker's perf EMA for a perfectly live engine.
+            return None
+        self._hb_steps, self._hb_tokens = self.steps, self.tokens_out
+        return PerfReport(
+            worker=self.name,
+            work_done=float(tokens),
+            elapsed_s=steps * seconds_per_step,
+            time_s=now_s,
+        )

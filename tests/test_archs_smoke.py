@@ -6,6 +6,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# Every-arch forward/train/decode compile sweep (~1 min of jit): out of the
+# tier-1 default run, exercised via `pytest -m slow` (see pytest.ini).
+pytestmark = pytest.mark.slow
+
 from repro.configs import ARCH_IDS, get_config
 from repro.configs.shapes import (
     decode_input_specs,

@@ -5,10 +5,13 @@ the compile path itself is exercised by the dryrun CLI and results JSONs)."""
 import jax
 
 from repro.configs import SHAPES, cell_status, get_config
+import pytest
+
 from repro.launch.dryrun import (
     _shape_bytes,
     _small_cfg,
     collective_stats,
+    cost_dict,
     model_flops,
 )
 from repro.models import Model
@@ -19,6 +22,35 @@ def test_shape_bytes():
     assert _shape_bytes("f32[2,2]{1,0}") == 16
     assert _shape_bytes("(bf16[4,4], f32[4])") == 32 + 16
     assert _shape_bytes("pred[]") == 0 or _shape_bytes("pred[]") == 1  # scalar
+
+
+def test_cost_dict_normalizes_all_jax_shapes():
+    """compiled.cost_analysis() is a dict on older JAX, list[dict] on newer
+    (one entry per program, main first), None on some backends."""
+    d = {"flops": 7.0, "bytes accessed": 3.0}
+    assert cost_dict(d) is d
+    assert cost_dict([d, {"flops": 1.0}]) is d        # first program wins
+    assert cost_dict((d,)) is d
+    assert cost_dict(None) == {}
+    assert cost_dict([]) == {}
+    assert cost_dict(()) == {}
+    with pytest.raises(TypeError):
+        cost_dict(42.0)
+    # the consumer pattern used by dryrun/_measure keeps working on all shapes
+    for ca in (d, [d], None):
+        c = cost_dict(ca)
+        assert isinstance(c.get("flops", 0.0), float)
+
+
+def test_cost_dict_on_live_compile():
+    """End-to-end on this JAX version: whatever shape cost_analysis returns,
+    the normalizer yields a dict with the roofline keys."""
+    import jax.numpy as jnp
+
+    compiled = jax.jit(lambda x: x @ x).lower(jnp.ones((8, 8))).compile()
+    c = cost_dict(compiled.cost_analysis())
+    assert isinstance(c, dict)
+    assert c.get("flops", 0.0) > 0
 
 
 def test_collective_stats_ring_model():

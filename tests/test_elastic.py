@@ -75,6 +75,37 @@ def test_degraded_pod_rejoins_smaller():
     assert shares["pod3"] >= 1
 
 
+def test_rehearse_predicts_recovery_makespan():
+    """A remesh plan can be dry-run through the async runtime before
+    committing: survivors drain the redistributed grains in simulation and
+    the predicted finish times sit on the homogenization line."""
+    fleet, tracker = _fleet()
+    for i in range(3):
+        tracker.observe(PerfReport(f"pod{i}", 4.0, 1.0, 100.0))
+    plan = fleet.handle_failures(now_s=100.0, last_ckpt_step=80)
+    res = fleet.rehearse(plan)
+    assert sorted(res.executed_by) == list(range(64))
+    assert set(res.shares()) == {"pod0", "pod1", "pod2"}
+    # 64 grains over 3 survivors at learned perf 4.0
+    assert res.makespan == pytest.approx(64 / 12.0, rel=0.1)
+    assert res.homogenization_quality() <= 1.1
+    # rehearsal must not touch the live tracker
+    assert tracker.workers() == ["pod0", "pod1", "pod2"]
+    assert tracker.perf("pod0") == pytest.approx(4.0)
+
+
+def test_rehearse_degraded_survivor_gets_less_work():
+    fleet, tracker = _fleet()
+    for i in range(3):
+        perf = 1.0 if i == 2 else 4.0
+        tracker.observe(PerfReport(f"pod{i}", perf, 1.0, 100.0))
+    plan = fleet.handle_failures(now_s=100.0, last_ckpt_step=80)
+    res = fleet.rehearse(plan)
+    shares = res.shares()
+    assert shares["pod2"] < shares["pod0"]
+    assert res.homogenization_quality() <= 1.25
+
+
 def test_all_pods_lost_raises():
     fleet, tracker = _fleet(n=1)
     plan_or_err = None

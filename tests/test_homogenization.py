@@ -1,13 +1,18 @@
-"""Unit + property tests for the paper's homogenization math (Eqs. 1-9)."""
+"""Unit + property tests for the paper's homogenization math (Eqs. 1-9).
+
+Property sweeps use deterministic seeded rng draws (hypothesis is not
+installable in the offline CI image): each case regenerates the same inputs
+from its seed, covering the same min/max/size envelopes the old strategies
+did, plus the boundary cases appended explicitly.
+"""
 
 import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import (
+    MAX_OVERHEAD_SLOPE,
     OverheadModel,
     equal_split,
     finish_times,
@@ -19,14 +24,32 @@ from repro.core import (
     virtual_machine_count,
 )
 
-perfs_st = st.lists(
-    st.floats(min_value=0.05, max_value=100.0, allow_nan=False), min_size=1, max_size=32
-)
+PERF_LO, PERF_HI, MAX_WORKERS = 0.05, 100.0, 32
+
+
+def rand_perfs(seed: int, min_size: int = 1, max_size: int = MAX_WORKERS) -> list[float]:
+    """Log-uniform perf vector in [PERF_LO, PERF_HI], deterministic in seed."""
+    rng = np.random.default_rng(seed)
+    size = int(rng.integers(min_size, max_size + 1))
+    return np.exp(
+        rng.uniform(np.log(PERF_LO), np.log(PERF_HI), size)
+    ).tolist()
+
+
+# Envelope corners the random sweep must always include.
+EDGE_PERFS = [
+    [PERF_LO],
+    [PERF_HI],
+    [PERF_LO, PERF_HI],               # extreme 2000:1 spread
+    [1.0] * MAX_WORKERS,              # max width, all equal
+    [PERF_LO] * 3 + [PERF_HI] * 3,
+]
+PERF_CASES = [rand_perfs(s) for s in range(40)] + EDGE_PERFS
 
 
 # ---------------------------------------------------------------- scope lengths
-@settings(max_examples=200, deadline=None)
-@given(total=st.integers(min_value=0, max_value=100_000), perfs=perfs_st)
+@pytest.mark.parametrize("total", [0, 1, 7, 100, 99_991, 100_000])
+@pytest.mark.parametrize("perfs", PERF_CASES)
 def test_scope_lengths_sum_and_bounds(total, perfs):
     shares = scope_lengths(total, perfs)
     assert sum(shares) == total
@@ -37,9 +60,11 @@ def test_scope_lengths_sum_and_bounds(total, perfs):
     assert all(abs(s - e) < 1.0 for s, e in zip(shares, exact, strict=True))
 
 
-@settings(max_examples=100, deadline=None)
-@given(total=st.integers(min_value=1, max_value=10_000), perfs=perfs_st)
-def test_scope_lengths_deterministic(total, perfs):
+@pytest.mark.parametrize("seed", range(20))
+def test_scope_lengths_deterministic(seed):
+    rng = np.random.default_rng(seed)
+    total = int(rng.integers(1, 10_001))
+    perfs = rand_perfs(seed + 1000)
     assert scope_lengths(total, perfs) == scope_lengths(total, perfs)
 
 
@@ -66,8 +91,8 @@ def test_scope_lengths_rejects_bad_perfs(bad):
 
 
 # ---------------------------------------------------- homogenization invariant
-@settings(max_examples=200, deadline=None)
-@given(perfs=perfs_st, scale=st.integers(min_value=100, max_value=10_000))
+@pytest.mark.parametrize("scale", [100, 1000, 10_000])
+@pytest.mark.parametrize("perfs", PERF_CASES[::2])
 def test_equal_finish_time_invariant(perfs, scale):
     """The homogenization line: proportional allotment => all workers finish
     within rounding error of each other."""
@@ -99,8 +124,7 @@ def test_virtual_machine_count_eq4():
     assert virtual_machine_count([0.5, 0.25], 1.0) == pytest.approx(0.75)
 
 
-@settings(max_examples=100, deadline=None)
-@given(perfs=perfs_st)
+@pytest.mark.parametrize("perfs", PERF_CASES[::2])
 def test_speedup_reaches_nh_without_overhead(perfs):
     """Eq. 8: with O(L)=0, S_NH = N_H exactly."""
     p_s = max(perfs)
@@ -140,10 +164,10 @@ def test_overhead_slope_fit_recovers_m():
     assert overhead_slope_fit(loads, ovh) == pytest.approx(m)
 
 
-@settings(max_examples=50, deadline=None)
-@given(
-    m=st.floats(min_value=1.0, max_value=500.0),
-    noise=st.floats(min_value=0.0, max_value=0.01),
+@pytest.mark.parametrize(
+    "m,noise",
+    [(1.0, 0.0), (1.0, 0.01), (20.0, 0.005), (137.5, 0.01), (500.0, 0.0),
+     (500.0, 0.01), (42.0, 0.002), (250.0, 0.008)],
 )
 def test_overhead_fit_robust_to_noise(m, noise):
     rng = np.random.default_rng(0)
@@ -152,3 +176,19 @@ def test_overhead_fit_robust_to_noise(m, noise):
     fit = overhead_slope_fit(loads, ovh)
     assert math.isfinite(fit)
     assert fit == pytest.approx(m, rel=0.05)
+
+
+def test_overhead_fit_zero_overhead_clamped_finite():
+    """An all-zero-overhead calibration run (M effectively infinite) must not
+    poison the model with inf: the fit clamps to MAX_OVERHEAD_SLOPE and the
+    resulting OverheadModel behaves as 'no measurable overhead'."""
+    loads = [200.0, 400.0, 600.0, 800.0]
+    fit = overhead_slope_fit(loads, [0.0, 0.0, 0.0, 0.0])
+    assert math.isfinite(fit)
+    assert fit == MAX_OVERHEAD_SLOPE
+    model = OverheadModel(m=fit)
+    assert model(1000.0) == pytest.approx(0.0, abs=1e-5)
+    # Net-negative measurements (pure noise) hit the same clamp...
+    assert overhead_slope_fit(loads, [0.0, -1.0, 0.0, -2.0]) == MAX_OVERHEAD_SLOPE
+    # ...and the clamped slope still serializes / compares like a float.
+    assert fit < float("inf") and fit * 2 > fit

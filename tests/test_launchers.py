@@ -1,10 +1,18 @@
-"""Launcher CLI smoke tests (subprocess, real entry points)."""
+"""Launcher CLI smoke tests (subprocess, real entry points).
+
+Marked ``slow``: each test boots a fresh interpreter + JAX (the dryrun cell
+additionally compiles against a 512-device host mesh), so the module is
+excluded from the default tier-1 run (see pytest.ini) and exercised with
+``pytest -m slow``.
+"""
 
 import os
 import subprocess
 import sys
 
 import pytest
+
+pytestmark = pytest.mark.slow
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -1,10 +1,16 @@
-"""Perf-iteration knobs must preserve exact (or bounded-drift) semantics."""
+"""Perf-iteration knobs must preserve exact (or bounded-drift) semantics.
+
+Compile-heavy (~30s of jit across knob variants): out of the tier-1 default
+run, exercised via `pytest -m slow` (see pytest.ini)."""
 
 import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.models import LayerSpec, Model, ModelConfig
 

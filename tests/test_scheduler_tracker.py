@@ -1,16 +1,20 @@
-"""Tracker (heartbeat EMA) + scheduler (plans, hysteresis, elasticity) tests."""
+"""Tracker (heartbeat EMA) + scheduler (plans, hysteresis, elasticity) tests.
+
+Property sweeps are deterministic seeded rng draws (no hypothesis offline);
+same envelopes as the old strategies, corners included explicitly.
+"""
 
 import math
 
+import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.core import (
     GrainPlan,
     HomogenizedScheduler,
     PerformanceTracker,
     PerfReport,
+    should_replan,
 )
 
 
@@ -52,8 +56,17 @@ def test_tracker_straggler_flagging():
     assert t.stragglers() == ["slow"]
 
 
-@settings(max_examples=50, deadline=None)
-@given(tputs=st.lists(st.floats(min_value=0.1, max_value=100), min_size=3, max_size=8))
+def _rand_tputs(seed: int, lo=0.1, hi=100.0, min_size=3, max_size=8) -> list[float]:
+    rng = np.random.default_rng(seed)
+    size = int(rng.integers(min_size, max_size + 1))
+    return np.exp(rng.uniform(np.log(lo), np.log(hi), size)).tolist()
+
+
+@pytest.mark.parametrize(
+    "tputs",
+    [_rand_tputs(s) for s in range(12)]
+    + [[0.1] * 3, [100.0] * 8, [0.1, 100.0, 0.1]],   # envelope corners
+)
 def test_tracker_perf_vector_positive(tputs):
     t = mk_tracker({f"w{i}": p for i, p in enumerate(tputs)})
     pv = t.perf_vector()
@@ -134,11 +147,26 @@ def test_scheduler_elastic_worker_join():
     assert set(p.workers) == {"a", "b"}
 
 
-@settings(max_examples=100, deadline=None)
-@given(
-    # within the scheduler's documented 20:1 (1/perf_quantum) dynamic range
-    perfs=st.lists(st.floats(min_value=0.5, max_value=5.0), min_size=1, max_size=12),
-    grains=st.integers(min_value=1, max_value=4096),
+def _rand_sched_case(seed: int) -> tuple[list[float], int]:
+    """Perfs within the scheduler's documented 20:1 (1/perf_quantum) dynamic
+    range; grain counts across the full [1, 4096] envelope."""
+    rng = np.random.default_rng(seed)
+    size = int(rng.integers(1, 13))
+    perfs = rng.uniform(0.5, 5.0, size).tolist()
+    grains = int(rng.integers(1, 4097))
+    return perfs, grains
+
+
+@pytest.mark.parametrize(
+    "perfs,grains",
+    [_rand_sched_case(s) for s in range(25)]
+    + [
+        ([0.5], 1),                   # smallest everything
+        ([5.0] * 12, 4096),           # widest fleet, most grains
+        ([0.5, 5.0], 1),              # fewer grains than workers, 10:1 spread
+        ([0.5] * 12, 11),             # grains < workers
+        ([5.0, 0.5, 2.5], 4096),
+    ],
 )
 def test_scheduler_plan_always_covers_all_grains(perfs, grains):
     t = mk_tracker({f"w{i}": p for i, p in enumerate(perfs)})
@@ -154,6 +182,17 @@ def test_scheduler_plan_always_covers_all_grains(perfs, grains):
     assert q <= (1.0 + sum_p / (min_p * grains) + 1e-6) * rel_quant, (
         q, perfs, grains
     )
+
+
+def test_should_replan_hysteresis_gate():
+    """The shared spread gate used by both the scheduler and the async
+    runtime's mid-job re-homogenizer."""
+    assert not should_replan([], 0.05)
+    assert not should_replan([10.0], 0.05)            # one worker: nothing to balance
+    assert not should_replan([10.0, 10.2], 0.05)      # 2% wobble: inside hysteresis
+    assert should_replan([10.0, 10.6], 0.05)          # 6% spread: replan
+    assert should_replan([10.0, 10.0, 50.0], 0.05)    # straggler
+    assert not should_replan([0.0, 0.0], 0.05)        # all drained: no-op
 
 
 def test_scheduler_quantum_floor_limits_dynamic_range():

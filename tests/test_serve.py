@@ -125,3 +125,52 @@ def test_dispatch_replica_failure():
     d.kill("b")
     res = d.dispatch(64)
     assert res.shares == {"a": 64}
+
+
+def test_dispatch_midbundle_degradation_rehomogenizes():
+    """A replica degrading *during* a bundle: the runtime migrates its queued
+    requests, so the bundle still drains near the homogenization line."""
+    from repro.core import TimelineEvent
+
+    d = HomogenizedDispatcher([Replica("a", 4.0), Replica("b", 4.0)])
+    for _ in range(3):
+        d.dispatch(160)  # learn true perfs
+    res = d.dispatch(
+        400, timeline=(TimelineEvent(5.0, "perf", "b", perf=1.0),)
+    )
+    assert res.n_migrated > 0
+    assert res.quality <= 1.1, res
+    assert res.shares["a"] > res.shares["b"]
+
+
+@pytest.mark.slow  # compiles two engines (~7s); covered by the slow tier
+def test_dispatch_to_real_engines_exactly_once():
+    """Real DecodeEngines behind the runtime: every request decoded exactly
+    once with outputs equal to the single-engine greedy reference, even
+    though requests migrate between replica queues."""
+    model, params = tiny_model()
+    engines = {
+        "fast": DecodeEngine(model, params, max_batch=2, max_seq=32, name="fast"),
+        "slow": DecodeEngine(model, params, max_batch=2, max_seq=32, name="slow"),
+    }
+    d = HomogenizedDispatcher([Replica("fast", 8.0), Replica("slow", 2.0)])
+    reqs = [Request(rid=i, prompt=[1 + i, 7, 2], max_new_tokens=4) for i in range(8)]
+    res, run = d.dispatch_to_engines(engines, reqs)
+    assert sum(res.shares.values()) == 8
+    assert res.shares["fast"] > res.shares["slow"]
+    for r in reqs:
+        assert len(r.out_tokens) == 4
+        ref = _greedy_reference(model, params, r.prompt, 4, 32)
+        assert r.out_tokens == ref, (r.rid, r.out_tokens, ref)
+
+
+def test_engine_heartbeat_reports_throughput():
+    model, params = tiny_model()
+    eng = DecodeEngine(model, params, max_batch=2, max_seq=32, name="e0")
+    assert eng.heartbeat(0.0) is None          # no steps yet
+    eng.submit(Request(rid=0, prompt=[3, 4], max_new_tokens=5))
+    eng.run_until_drained()
+    hb = eng.heartbeat(1.0)
+    assert hb is not None and hb.worker == "e0"
+    assert hb.throughput == pytest.approx(eng.throughput)
+    assert eng.heartbeat(2.0) is None          # nothing new since last report

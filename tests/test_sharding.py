@@ -171,6 +171,7 @@ _SUBPROCESS_SCRIPT = textwrap.dedent(
 )
 
 
+@pytest.mark.slow  # fresh-interpreter 8-device compile per arch: ~40s total
 @pytest.mark.parametrize("arch", ["qwen3-8b", "jamba-v0.1-52b", "deepseek-v2-236b"])
 def test_sharded_execution_on_8_devices(arch):
     env = dict(os.environ)

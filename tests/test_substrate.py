@@ -1,4 +1,7 @@
-"""Substrate tests: optimizer, checkpoint, data pipeline, grad compression."""
+"""Substrate tests: optimizer, checkpoint, data pipeline, grad compression.
+
+Property sweeps use deterministic seeded rng draws (no hypothesis offline),
+covering the same seed envelope the old integer strategy did."""
 
 import os
 
@@ -6,8 +9,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
 
 from repro.checkpoint import AsyncCheckpointer, available_steps, prune, restore, save
 from repro.data import GrainSpec, SyntheticSource, batch_from_grains, worker_batch
@@ -191,8 +192,12 @@ def test_compress_roundtrip_small_error():
     assert err <= float(jnp.max(jnp.abs(g["w"]))) / 127 + 1e-9
 
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 2**31))
+@pytest.mark.parametrize(
+    "seed",
+    # Deterministic sweep over the old [0, 2**31] strategy envelope: both
+    # endpoints plus seeds scattered across the range.
+    [0, 1, 17, 4242, 99991, 2**20, 2**27 + 5, 2**30, 2**31 - 1, 2**31],
+)
 def test_error_feedback_accumulates_to_truth(seed):
     """Summed dequantized grads + final residual == summed true grads."""
     rng = np.random.default_rng(seed)

@@ -1,10 +1,15 @@
 """End-to-end training: loss decreases; HDP homogenization, stragglers,
-elasticity, checkpoint/restart recovery."""
+elasticity, checkpoint/restart recovery.
+
+Compile-heavy integration (~35s of jit): out of the tier-1 default run,
+exercised via `pytest -m slow` (see pytest.ini)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.core import OverheadModel
 from repro.data import GrainSpec, SyntheticSource, batch_from_grains
