@@ -1,0 +1,136 @@
+"""HDP step-time benchmark: homogenized runtime vs static per-step plan.
+
+Measures the tentpole claim with the same event-loop substrate the trainer
+uses (``core/runtime.py``), timing-only (no model compile, so the bench runs
+in milliseconds at any scale): a fleet of pods runs per-step grain jobs, and
+mid-way through one step a scripted fault fires —
+
+  perf_halving  one pod's true perf halves 25% into the step,
+  kill          one pod dies 25% into the step (its queue + in-flight grain
+                re-home to survivors).
+
+For each scenario we run the **adaptive** runtime (mid-step migration +
+stealing armed, exactly ``HDPConfig.adaptive=True``) and the **static**
+baseline (each step frozen to its initial plan) over the *same* timeline, and
+record the simulated step time and homogenization quality of the fault step
+plus steady-state steps.  Output: ``BENCH_hdp.json``.
+
+Run:   PYTHONPATH=src python -m benchmarks.bench_hdp
+Toy:   PYTHONPATH=src python -m benchmarks.bench_hdp --grains 64 --steps 4
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core import AsyncRuntime, PerformanceTracker, PerfReport, SimWorker, TimelineEvent
+
+DEFAULT_PERFS = (4.0, 3.0, 2.0, 1.0)
+SCENARIOS = ("perf_halving", "kill")
+
+
+def _mk_runtime(perfs, adaptive: bool) -> AsyncRuntime:
+    workers = [SimWorker(f"pod{i}", float(p)) for i, p in enumerate(perfs)]
+    tracker = PerformanceTracker(alpha=0.5, dead_after_s=1e9)
+    for w in workers:  # oracle-seeded: isolate the mid-step effect
+        tracker.observe(PerfReport(w.name, w.perf, 1.0, 0.0))
+    return AsyncRuntime(workers, tracker=tracker,
+                        rehomogenize=adaptive, steal=adaptive)
+
+
+def run_scenario(
+    scenario: str, adaptive: bool, *, perfs=DEFAULT_PERFS,
+    n_grains: int = 512, n_steps: int = 8, fault_step: int = 3,
+    fault_frac: float = 0.25,
+) -> dict:
+    """Per-step jobs on one runtime; the fault fires mid-way through
+    ``fault_step``.  Returns per-step times/qualities + wall-clock of the
+    event loop itself."""
+    if scenario not in SCENARIOS:
+        raise ValueError(f"unknown scenario {scenario!r}")
+    rt = _mk_runtime(perfs, adaptive)
+    est_makespan = n_grains / sum(perfs)
+    step_times, qualities = [], []
+    wall0 = time.perf_counter()
+    for s in range(n_steps):
+        timeline = ()
+        if s == fault_step:
+            t_ev = fault_frac * est_makespan
+            timeline = (
+                TimelineEvent(t_ev, "perf", "pod0", perf=perfs[0] / 2)
+                if scenario == "perf_halving"
+                else TimelineEvent(t_ev, "kill", "pod0"),
+            )
+        res = rt.run(n_grains, timeline=timeline, timeline_relative=True)
+        step_times.append(res.makespan)
+        qualities.append(res.homogenization_quality())
+    wall_s = time.perf_counter() - wall0
+    return {
+        "adaptive": adaptive,
+        "scenario": scenario,
+        "step_times": step_times,
+        "qualities": qualities,
+        "fault_step_time": step_times[fault_step],
+        "fault_step_quality": qualities[fault_step],
+        "steady_step_time": step_times[-1],
+        "loop_wall_s": wall_s,
+        "grains_per_wall_s": n_grains * n_steps / max(wall_s, 1e-9),
+    }
+
+
+def run_bench(n_grains: int, n_steps: int, perfs=DEFAULT_PERFS,
+              fault_step: int = 3) -> dict:
+    out = {
+        "config": {
+            "perfs": list(perfs), "n_grains": n_grains, "n_steps": n_steps,
+            "fault_step": fault_step,
+        },
+        "scenarios": {},
+    }
+    for scenario in SCENARIOS:
+        ad = run_scenario(scenario, True, perfs=perfs, n_grains=n_grains,
+                          n_steps=n_steps, fault_step=fault_step)
+        st = run_scenario(scenario, False, perfs=perfs, n_grains=n_grains,
+                          n_steps=n_steps, fault_step=fault_step)
+        out["scenarios"][scenario] = {
+            "adaptive": ad,
+            "static": st,
+            # >1 means the homogenized runtime beat the static plan on the
+            # step where the fault fired (the tentpole number).
+            "fault_step_speedup": st["fault_step_time"] / ad["fault_step_time"],
+        }
+    return out
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grains", type=int, default=512)
+    ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--fault-step", type=int, default=3)
+    ap.add_argument("--perfs", default="4:3:2:1",
+                    help="colon-separated true pod perfs")
+    ap.add_argument("--out", default="BENCH_hdp.json")
+    args = ap.parse_args(argv)
+
+    perfs = tuple(float(p) for p in args.perfs.split(":"))
+    result = run_bench(args.grains, args.steps, perfs=perfs,
+                       fault_step=args.fault_step)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    for name, sc in result["scenarios"].items():
+        ad, st = sc["adaptive"], sc["static"]
+        print(
+            f"{name:14s} fault-step time {ad['fault_step_time']:.2f}s "
+            f"(adaptive, q={ad['fault_step_quality']:.2f}) vs "
+            f"{st['fault_step_time']:.2f}s (static, "
+            f"q={st['fault_step_quality']:.2f}) -> "
+            f"speedup {sc['fault_step_speedup']:.2f}x"
+        )
+    print(f"wrote {args.out}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

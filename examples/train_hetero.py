@@ -1,11 +1,14 @@
-"""End-to-end driver: train an LM with Homogenized Data Parallelism.
+"""End-to-end driver: train an LM with runtime-driven Homogenized Data
+Parallelism.
 
-Four simulated pods with heterogeneous throughput train one model; the
-coordinator learns per-pod performance from heartbeats and re-allots grain
-scope-lengths (the paper's technique at pod granularity).  Mid-run we inject
-a straggler (pod throttles 5x) and then kill a pod outright — watch the plan
-adapt and training continue.  A checkpoint/restart at the end proves
-fault-tolerant resume.
+Four simulated pods with heterogeneous throughput train one model; each step's
+microbatch grains stream through the async runtime, every grain completion is
+a heartbeat, and the coordinator re-allots work *within* the step.  Mid-run we
+script a **mid-step** straggler (pod throttles 5x while its queue is half
+drained — watch unstarted grains migrate off it the same step) and then kill a
+pod outright (elastic replan).  A checkpoint/restart at the end proves
+fault-tolerant resume: the restarted coordinator plans from the checkpointed
+*learned* perf vector, not neutral priors.
 
 Run:      PYTHONPATH=src python examples/train_hetero.py
 Bigger:   PYTHONPATH=src python examples/train_hetero.py --d-model 768 --layers 12 \
@@ -15,7 +18,7 @@ Bigger:   PYTHONPATH=src python examples/train_hetero.py --d-model 768 --layers 
 import argparse
 import shutil
 
-from repro.core import OverheadModel
+from repro.core import OverheadModel, TimelineEvent
 from repro.data import GrainSpec
 from repro.models import LayerSpec, Model, ModelConfig
 from repro.optim import AdamWConfig
@@ -42,7 +45,7 @@ def main() -> None:
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--vocab", type=int, default=512)
     ap.add_argument("--seq", type=int, default=64)
-    ap.add_argument("--grains", type=int, default=8)
+    ap.add_argument("--grains", type=int, default=16)
     ap.add_argument("--ckpt", default="/tmp/repro_hdp_ckpt")
     args = ap.parse_args()
     shutil.rmtree(args.ckpt, ignore_errors=True)
@@ -62,7 +65,7 @@ def main() -> None:
         total_grains=args.grains,
         grain_spec=GrainSpec(grain_size=1, seq_len=args.seq, vocab_size=args.vocab),
         overhead=OverheadModel(m=4.0),
-        ckpt_dir=args.ckpt, ckpt_every=50,
+        ckpt_dir=args.ckpt, ckpt_every=min(50, max(1, args.steps // 4)),
     )
     tr = HDPTrainer(model, pods, cfg,
                     opt_cfg=AdamWConfig(peak_lr=1e-3, warmup_steps=20,
@@ -72,8 +75,13 @@ def main() -> None:
     kill_at = 2 * args.steps // 3
     for s in range(args.steps):
         if s == straggle_at:
-            print(f"--- step {s}: pod1 throttles 5x (straggler injection) ---")
-            tr.set_perf("pod1", 0.6)
+            # Mid-STEP event: pod1 throttles 5x once the step is ~30% done.
+            # Its unstarted grains migrate to faster queues the same step.
+            est = tr.history[-1]["step_time"] if tr.history else 1.0
+            t_ev = tr.clock + 0.3 * est
+            print(f"--- step {s}: pod1 throttles 5x at t={t_ev:.1f}s "
+                  f"(mid-step straggler) ---")
+            tr.schedule(TimelineEvent(t_ev, "perf", "pod1", perf=0.6))
         if s == kill_at:
             print(f"--- step {s}: pod3 dies (elastic replan) ---")
             tr.kill("pod3")
@@ -82,7 +90,8 @@ def main() -> None:
             plan = " ".join(f"{k}:{v}" for k, v in rec["plan"].items())
             print(
                 f"step {s:4d} loss={rec['loss']:.4f} "
-                f"step_time={rec['step_time']:6.2f}s plan[{plan}]"
+                f"step_time={rec['step_time']:6.2f}s q={rec['quality']:.2f} "
+                f"mig={rec['n_migrated']} plan[{plan}]"
             )
     if tr.ckpt:
         tr.ckpt.wait()
@@ -92,7 +101,9 @@ def main() -> None:
                      cfg, opt_cfg=AdamWConfig(peak_lr=1e-3, warmup_steps=20,
                                               decay_steps=args.steps,
                                               weight_decay=0.0))
-    print(f"resumed at step {tr2.start_step}")
+    p = tr2.plan_preview()
+    print(f"resumed at step {tr2.start_step}; first plan from LEARNED perfs: "
+          + " ".join(f"{w}:{s}" for w, s in zip(p.workers, p.shares)))
     for s in range(tr2.start_step, tr2.start_step + 10):
         rec = tr2.step(s)
     print(f"post-restart loss={rec['loss']:.4f} (finite => state intact)")

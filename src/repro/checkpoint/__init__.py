@@ -1,3 +1,11 @@
-from .checkpoint import AsyncCheckpointer, available_steps, prune, restore, save
+from .checkpoint import (
+    AsyncCheckpointer,
+    available_steps,
+    prune,
+    read_extras,
+    restore,
+    save,
+)
 
-__all__ = ["AsyncCheckpointer", "available_steps", "prune", "restore", "save"]
+__all__ = ["AsyncCheckpointer", "available_steps", "prune", "read_extras",
+           "restore", "save"]

@@ -2,7 +2,10 @@
 
 Format: one ``step_<N>/`` directory per checkpoint containing
 ``arrays.npz`` (leaves by flattened index) + ``tree.json`` (structure with
-leaf dtypes/shapes for validation).  Writes go to ``.tmp-<N>`` then
+leaf dtypes/shapes for validation) + optional ``extras.json`` (JSON-
+serializable coordinator sidecar state — e.g. the perf tracker's EMA table
+and fleet clock — written inside the same atomic rename, so model state and
+scheduler state can never tear apart).  Writes go to ``.tmp-<N>`` then
 ``os.rename`` (atomic on POSIX) so a killed worker never leaves a torn
 checkpoint; restore picks the highest complete step.  ``AsyncCheckpointer``
 snapshots leaves to host memory synchronously (cheap) and writes on a
@@ -26,13 +29,14 @@ import numpy as np
 
 _TREE_FILE = "tree.json"
 _ARR_FILE = "arrays.npz"
+_EXTRAS_FILE = "extras.json"
 
 
 def _leaf_meta(leaf) -> dict:
     return {"shape": list(leaf.shape), "dtype": str(np.dtype(leaf.dtype))}
 
 
-def save(ckpt_dir: str, step: int, tree) -> str:
+def save(ckpt_dir: str, step: int, tree, extras: dict | None = None) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     tmp = os.path.join(ckpt_dir, f".tmp-{step}")
@@ -56,6 +60,9 @@ def save(ckpt_dir: str, step: int, tree) -> str:
     }
     with open(os.path.join(tmp, _TREE_FILE), "w") as f:
         json.dump(meta, f)
+    if extras is not None:
+        with open(os.path.join(tmp, _EXTRAS_FILE), "w") as f:
+            json.dump(extras, f)
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)
@@ -74,13 +81,36 @@ def available_steps(ckpt_dir: str) -> list[int]:
     return sorted(out)
 
 
-def restore(ckpt_dir: str, like, step: int | None = None):
-    """Restore into the structure of ``like`` (validates shapes/dtypes).
-    Returns (tree, step) or (None, None) when no checkpoint exists."""
+def _resolve_step(ckpt_dir: str, step: int | None) -> int | None:
+    """Latest complete step, or validate an explicitly requested one.  An
+    explicit step that doesn't exist (never written, or pruned by keep-last)
+    raises here with the available list — not deep inside ``open``."""
     steps = available_steps(ckpt_dir)
     if not steps:
+        if step is not None:
+            raise FileNotFoundError(
+                f"no checkpoint for step {step}: {ckpt_dir!r} has no complete "
+                "checkpoints"
+            )
+        return None
+    if step is None:
+        return steps[-1]
+    if step not in steps:
+        raise FileNotFoundError(
+            f"no checkpoint for step {step} in {ckpt_dir!r}; available steps: "
+            f"{steps}"
+        )
+    return step
+
+
+def restore(ckpt_dir: str, like, step: int | None = None):
+    """Restore into the structure of ``like`` (validates shapes/dtypes).
+    Returns (tree, step) or (None, None) when no checkpoint exists.  An
+    explicit ``step`` that is missing (or was pruned) raises
+    ``FileNotFoundError`` listing what is available."""
+    step = _resolve_step(ckpt_dir, step)
+    if step is None:
         return None, None
-    step = steps[-1] if step is None else step
     path = os.path.join(ckpt_dir, f"step_{step:09d}")
     with open(os.path.join(path, _TREE_FILE)) as f:
         meta = json.load(f)
@@ -105,6 +135,20 @@ def restore(ckpt_dir: str, like, step: int | None = None):
     return jax.tree_util.tree_unflatten(treedef, restored), step
 
 
+def read_extras(ckpt_dir: str, step: int | None = None) -> dict | None:
+    """Sidecar coordinator state saved with a checkpoint (see ``save``).
+    Returns None when there is no checkpoint or the step carries no extras;
+    an explicit missing ``step`` raises like ``restore`` does."""
+    step = _resolve_step(ckpt_dir, step)
+    if step is None:
+        return None
+    path = os.path.join(ckpt_dir, f"step_{step:09d}", _EXTRAS_FILE)
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
 def prune(ckpt_dir: str, keep_last: int = 3) -> None:
     steps = available_steps(ckpt_dir)
     for s in steps[:-keep_last]:
@@ -127,13 +171,13 @@ class AsyncCheckpointer:
         if self.errors:
             raise self.errors[-1]
 
-    def save(self, step: int, tree) -> None:
+    def save(self, step: int, tree, extras: dict | None = None) -> None:
         self.wait()
         host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
 
         def work():
             try:
-                save(self.ckpt_dir, step, host_tree)
+                save(self.ckpt_dir, step, host_tree, extras=extras)
                 prune(self.ckpt_dir, self.keep_last)
             except Exception as e:  # surfaced on next wait()
                 self.errors.append(e)

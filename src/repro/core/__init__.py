@@ -25,6 +25,8 @@ from .homogenization import (
 from .performance import PerformanceTracker, PerfReport, WorkerState
 from .runtime import (
     AsyncRuntime,
+    CallableGrainExecutor,
+    GrainExecutor,
     GrainRecord,
     RuntimeResult,
     SimWorker,
@@ -52,6 +54,8 @@ __all__ = [
     "HomogenizedScheduler",
     "should_replan",
     "AsyncRuntime",
+    "CallableGrainExecutor",
+    "GrainExecutor",
     "GrainRecord",
     "RuntimeResult",
     "SimWorker",

@@ -11,7 +11,13 @@ We realize the fold as an exponential moving average over observed throughput
   - staleness decay: a worker that stops reporting is progressively distrusted,
   - straggler flagging: perf below ``straggler_fraction`` of the fleet median,
   - liveness: workers missing ``dead_after`` heartbeats are declared dead
-    (feeds the elastic replan path).
+    (feeds the elastic replan path).  Death is sticky: a late heartbeat from a
+    dead worker is *rejected*, not folded in — only the explicit ``rejoin``
+    API brings a worker back (with a fresh prior, since its old EMA describes
+    a machine state that no longer exists),
+  - persistence: ``state_dict``/``load_state_dict`` round-trip the whole table
+    through JSON, so checkpoints carry learned perfs across coordinator
+    restarts.
 
 Pure Python control-plane code (runs on the coordinator host, never traced).
 """
@@ -67,15 +73,22 @@ class PerformanceTracker:
         self.dead_after_s = dead_after_s
         self.straggler_fraction = straggler_fraction
         self._workers: dict[str, WorkerState] = {}
+        self.n_rejected = 0   # heartbeats dropped because the worker was dead
 
     # -- ingest ------------------------------------------------------------
     def observe(self, report: PerfReport) -> None:
         tput = report.throughput
         st = self._workers.get(report.worker)
-        if st is None or not st.alive:
+        if st is None:
             self._workers[report.worker] = WorkerState(
                 perf=tput, last_report_s=report.time_s, n_reports=1
             )
+            return
+        if not st.alive:
+            # Kills persist: a stale/late heartbeat must not resurrect a dead
+            # worker (the scheduler would allot grains to a ghost).  rejoin()
+            # is the explicit path back into the fleet.
+            self.n_rejected += 1
             return
         st.perf = self.alpha * tput + (1 - self.alpha) * st.perf
         st.last_report_s = max(st.last_report_s, report.time_s)
@@ -89,6 +102,17 @@ class PerformanceTracker:
     def mark_dead(self, worker: str) -> None:
         if worker in self._workers:
             self._workers[worker].alive = False
+
+    def rejoin(self, worker: str, perf_prior: float = 1.0,
+               now_s: float = 0.0) -> None:
+        """Explicitly (re)admit a worker with a fresh prior.  The only way
+        back after mark_dead/sweep — the old EMA is discarded because it
+        describes the pre-failure machine."""
+        if perf_prior <= 0:
+            raise ValueError("perf_prior must be > 0")
+        self._workers[worker] = WorkerState(
+            perf=float(perf_prior), last_report_s=now_s, n_reports=1
+        )
 
     def sweep(self, now_s: float) -> list[str]:
         """Declare workers dead after ``dead_after_s`` without a heartbeat.
@@ -124,3 +148,48 @@ class PerformanceTracker:
             return []
         med = float(np.median(list(pv.values())))
         return sorted(w for w, p in pv.items() if p < self.straggler_fraction * med)
+
+    # -- persistence ---------------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-serializable snapshot (config + per-worker EMA table).
+        Python floats round-trip exactly through json, so a restored tracker
+        plans bitwise-identically to the one that was checkpointed."""
+        return {
+            "config": {
+                "alpha": self.alpha,
+                "staleness_half_life_s": self.staleness_half_life_s,
+                "dead_after_s": self.dead_after_s,
+                "straggler_fraction": self.straggler_fraction,
+            },
+            "workers": {
+                name: {
+                    "perf": st.perf,
+                    "last_report_s": st.last_report_s,
+                    "n_reports": st.n_reports,
+                    "alive": st.alive,
+                }
+                for name, st in self._workers.items()
+            },
+        }
+
+    def load_state_dict(self, state: dict) -> None:
+        cfg = state.get("config", {})
+        for key in ("alpha", "staleness_half_life_s", "dead_after_s",
+                    "straggler_fraction"):
+            if key in cfg:
+                setattr(self, key, float(cfg[key]))
+        self._workers = {
+            name: WorkerState(
+                perf=float(st["perf"]),
+                last_report_s=float(st["last_report_s"]),
+                n_reports=int(st.get("n_reports", 1)),
+                alive=bool(st.get("alive", True)),
+            )
+            for name, st in state.get("workers", {}).items()
+        }
+
+    @classmethod
+    def from_state_dict(cls, state: dict) -> "PerformanceTracker":
+        t = cls()
+        t.load_state_dict(state)
+        return t

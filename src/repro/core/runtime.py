@@ -28,10 +28,14 @@ A discrete event loop over a logical clock:
     joins; a dead worker's in-flight grain is re-queued (it never completed,
     so re-execution is safe and exactly-once per *completed* grain holds).
 
-Real compute is optional: ``execute`` runs at completion time (never for
-aborted grains), so values are exact while timing comes from the cost model.
-``TDAServer``/``ThinClient``, ``HomogenizedDispatcher``, ``ClusterSim`` and
-``ElasticFleet`` are all thin clients of this loop.
+What a grain *is* is the ``GrainExecutor`` seam: one object answers the three
+questions the loop asks — what a grain costs, how long a given worker needs
+for it, and what real compute happens at completion (never for aborted
+grains), so values are exact while timing comes from the cost model.  Sim
+row-blocks, serve request bundles and HDP training microbatches are three
+executors of the same loop.  ``TDAServer``/``ThinClient``,
+``HomogenizedDispatcher``, ``ClusterSim``, ``HDPTrainer`` and ``ElasticFleet``
+are all thin clients.
 """
 
 from __future__ import annotations
@@ -50,11 +54,74 @@ __all__ = [
     "SimWorker",
     "TimelineEvent",
     "GrainRecord",
+    "GrainExecutor",
+    "CallableGrainExecutor",
     "RuntimeResult",
     "AsyncRuntime",
 ]
 
 _EPS = 1e-12
+
+
+class GrainExecutor:
+    """The seam between the event loop and what a grain *is* for one job.
+
+    Subclass (or use ``CallableGrainExecutor``) to define a workload:
+
+      cost(g)                 work units of grain ``g`` (drives allotment,
+                              ETAs and heartbeat magnitudes),
+      duration_s(w, cost, t)  simulated seconds worker ``w`` needs for
+                              ``cost`` units at time ``t`` (jitter hooks in
+                              here; defaults to cost / w.perf),
+      execute(w, g)           real compute, called exactly once per
+                              *completed* grain, at completion time — its
+                              return value lands in ``RuntimeResult.values``.
+
+    ``uniform_cost`` set to a float declares every grain equally expensive,
+    letting queue-ETA computation run in O(1) instead of O(queue).
+    """
+
+    uniform_cost: float | None = 1.0
+
+    def cost(self, grain: int) -> float:
+        return 1.0 if self.uniform_cost is None else self.uniform_cost
+
+    def duration_s(self, worker: Any, cost: float, now_s: float) -> float:
+        return cost / max(getattr(worker, "perf", _EPS), _EPS)
+
+    def execute(self, worker: Any, grain: int) -> Any:
+        return None
+
+
+class CallableGrainExecutor(GrainExecutor):
+    """Adapter for the kwarg form of ``AsyncRuntime.run`` (scalar/callable
+    grain cost plus bare ``execute``/``duration_fn`` callables)."""
+
+    def __init__(
+        self,
+        grain_cost: float | Callable[[int], float] = 1.0,
+        execute: Callable[[Any, int], Any] | None = None,
+        duration_fn: Callable[[Any, float, float], float] | None = None,
+    ):
+        if callable(grain_cost):
+            self.uniform_cost = None
+            self._cost = grain_cost
+        else:
+            self.uniform_cost = float(grain_cost)
+            self._cost = None
+        self._execute = execute
+        self._duration = duration_fn
+
+    def cost(self, grain: int) -> float:
+        return self.uniform_cost if self._cost is None else self._cost(grain)
+
+    def duration_s(self, worker: Any, cost: float, now_s: float) -> float:
+        if self._duration is not None:
+            return self._duration(worker, cost, now_s)
+        return super().duration_s(worker, cost, now_s)
+
+    def execute(self, worker: Any, grain: int) -> Any:
+        return self._execute(worker, grain) if self._execute else None
 
 
 @dataclasses.dataclass
@@ -177,16 +244,30 @@ class AsyncRuntime:
             raise TypeError("runtime workers need .name and .perf")
         self.workers[worker.name] = worker
         if worker.name not in self.tracker.workers():
-            # Neutral prior until real heartbeats arrive.
-            self.tracker.observe(
-                PerfReport(worker.name, perf_prior or 1.0, 1.0, now_s)
-            )
+            # Unknown worker: neutral prior until real heartbeats arrive.
+            # Previously-killed worker: this registration *is* the explicit
+            # rejoin (observe alone would be rejected — kills are sticky).
+            self.tracker.rejoin(worker.name, perf_prior or 1.0, now_s)
+
+    def add_worker(self, worker: Any, perf_prior: float | None = None) -> None:
+        """Between-job join (the ``TimelineEvent('join')`` is the mid-job
+        form): the worker enters the fleet with ``perf_prior`` (or a neutral
+        1.0) until heartbeats teach the tracker its real speed."""
+        self._register(worker, now_s=self.clock, perf_prior=perf_prior)
+
+    def remove_worker(self, name: str) -> None:
+        """Between-job kill: drop from the fleet and mark dead in the tracker
+        so no later heartbeat resurrects it (rejoining requires add_worker or
+        a 'join' timeline event)."""
+        self.workers.pop(name, None)
+        self.tracker.mark_dead(name)
 
     # -- job ---------------------------------------------------------------
     def run(
         self,
         n_grains: int,
         *,
+        executor: GrainExecutor | None = None,
         grain_cost: float | Callable[[int], float] = 1.0,
         execute: Callable[[Any, int], Any] | None = None,
         duration_fn: Callable[[Any, float, float], float] | None = None,
@@ -197,6 +278,8 @@ class AsyncRuntime:
     ) -> RuntimeResult:
         """Run one job of ``n_grains`` grains to completion.
 
+        ``executor``    — the job's ``GrainExecutor`` (cost model, timing,
+                          real compute).  Alternatively pass the kwarg form:
         ``grain_cost``  — work units per grain (scalar or per-grain callable).
         ``execute``     — real compute, called exactly once per completed
                           grain, at completion time: ``execute(worker, grain)``.
@@ -211,12 +294,18 @@ class AsyncRuntime:
         """
         if n_grains < 0:
             raise ValueError("n_grains must be >= 0")
+        if executor is None:
+            executor = CallableGrainExecutor(grain_cost, execute, duration_fn)
+        elif (execute is not None or duration_fn is not None
+              or callable(grain_cost) or grain_cost != 1.0):
+            raise ValueError(
+                "pass either executor= or the grain_cost/execute/duration_fn "
+                "kwargs, not both"
+            )
         now = self.clock if start_s is None else max(start_s, self.clock)
-        uniform = None if callable(grain_cost) else float(grain_cost)
-        cost_of = grain_cost if callable(grain_cost) else (lambda g: uniform)
-        dur_of = duration_fn or (
-            lambda w, cost, t: cost / max(getattr(w, "perf", _EPS), _EPS)
-        )
+        uniform = executor.uniform_cost
+        cost_of = executor.cost
+        dur_of = executor.duration_s
 
         events = [
             dataclasses.replace(ev, time_s=ev.time_s + now) for ev in timeline
@@ -312,9 +401,7 @@ class AsyncRuntime:
             if fl.grain in res.executed_by:
                 raise RuntimeError(f"grain {fl.grain} double-executed")
             res.executed_by[fl.grain] = w
-            res.values[fl.grain] = (
-                execute(self.workers[w], fl.grain) if execute else None
-            )
+            res.values[fl.grain] = executor.execute(self.workers[w], fl.grain)
             res.worker_finish[w] = now
             res.worker_busy[w] = res.worker_busy.get(w, 0.0) + dur
             # Heartbeat: the background process reports observed throughput.
@@ -332,17 +419,27 @@ class AsyncRuntime:
         res.makespan = now - start_clock
         return res
 
+    def plan(self, n_grains: int, now_s: float | None = None) -> GrainPlan:
+        """The allotment a job of ``n_grains`` would start from — a pure
+        function of the tracker's perf vector at ``now_s`` (default: the
+        current clock).  This is exactly what ``run`` executes when no
+        ``initial_plan`` is passed, so callers can preview/verify plans
+        (e.g. restart-continuity assertions) against one implementation."""
+        sched = HomogenizedScheduler(
+            self.tracker, total_grains=n_grains,
+            replan_threshold=self.replan_threshold,
+            homogenize=self.homogenize,
+        )
+        return sched.plan(
+            now_s=self.clock if now_s is None else now_s, force=True
+        )
+
     # -- internals ---------------------------------------------------------
     def _initial_queues(
         self, n_grains: int, now: float, plan: GrainPlan | None
     ) -> dict[str, deque[int]]:
         if plan is None:
-            sched = HomogenizedScheduler(
-                self.tracker, total_grains=n_grains,
-                replan_threshold=self.replan_threshold,
-                homogenize=self.homogenize,
-            )
-            plan = sched.plan(now_s=now, force=True)
+            plan = self.plan(n_grains, now_s=now)
         elif plan.total_grains != n_grains:
             raise ValueError(
                 f"initial_plan covers {plan.total_grains} grains, job has {n_grains}"

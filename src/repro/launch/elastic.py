@@ -77,11 +77,47 @@ class ElasticFleet:
     def handle_join(self, pod: PodSpec, perf_prior: float, now_s: float,
                     last_ckpt_step: int) -> RemeshPlan:
         """A (repaired or new) pod joins; it starts with a prior perf and the
-        tracker refines it from real heartbeats."""
+        tracker refines it from real heartbeats.  This is the *explicit*
+        rejoin path — a mere late heartbeat from a swept-dead pod is rejected
+        by the tracker and cannot resurrect it."""
         self.pods[pod.name] = pod
         self._lost.discard(pod.name)
-        self.tracker.observe(PerfReport(pod.name, perf_prior, 1.0, now_s))
+        self.tracker.rejoin(pod.name, perf_prior, now_s)
         return self._plan(last_ckpt_step)
+
+    @classmethod
+    def from_checkpoint(
+        cls, pods: list[PodSpec], ckpt_dir: str, total_grains: int,
+        step: int | None = None, **tracker_kw,
+    ) -> "ElasticFleet":
+        """Rebuild the coordinator's fleet view from a checkpoint's sidecar
+        extras: the tracker resumes from *learned* perfs instead of neutral
+        priors.  Checkpointed workers absent from ``pods`` are marked dead;
+        pods the checkpoint never saw get a neutral prior.  Explicit
+        ``tracker_kw`` (alpha, dead_after_s, ...) win over the checkpointed
+        tracker config — only the EMA table itself is taken from the
+        checkpoint."""
+        from ..checkpoint.checkpoint import read_extras
+
+        tracker = PerformanceTracker(**tracker_kw)
+        extras = read_extras(ckpt_dir, step)
+        now_s = 0.0
+        if extras is not None:
+            if "tracker" in extras:
+                tracker.load_state_dict(extras["tracker"])
+                for key, val in tracker_kw.items():
+                    setattr(tracker, key, val)   # caller tuning wins
+            now_s = float(extras.get("clock", 0.0))
+        names = {p.name for p in pods}
+        for name in tracker.workers():
+            if name not in names:
+                tracker.mark_dead(name)
+        for p in pods:
+            # Passing a pod in ``pods`` is the explicit (re)join: dead-in-
+            # checkpoint or never-seen pods enter with a neutral prior.
+            if p.name not in tracker.workers():
+                tracker.rejoin(p.name, 1.0, now_s)
+        return cls(pods, tracker, total_grains)
 
     def rehearse(self, plan: RemeshPlan) -> RuntimeResult:
         """Dry-run a remesh plan through the async runtime before committing:

@@ -4,9 +4,11 @@ Two modes:
   --mode single   one-worker training of an assigned arch's *reduced* config
                   (CPU-runnable) or full config (TPU fleet).
   --mode hdp      Homogenized Data Parallel across simulated heterogeneous
-                  pods (the paper's technique at pod granularity): heartbeat
-                  tracking, scope-length plans, straggler mitigation, elastic
-                  membership, async checkpoints.
+                  pods (the paper's technique at pod granularity), runtime-
+                  driven: per-grain heartbeats, mid-step grain migration off
+                  stragglers, elastic membership, async checkpoints that carry
+                  the learned perf vector.  ``--static`` freezes each step to
+                  its initial plan (the non-adaptive baseline).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --steps 50
@@ -38,6 +40,9 @@ def main() -> None:
     ap.add_argument("--grains", type=int, default=8)
     ap.add_argument("--pods", default="4:3:2:1",
                     help="colon-separated relative pod perfs (hdp mode)")
+    ap.add_argument("--static", action="store_true",
+                    help="hdp: disable mid-step migration/stealing (each step "
+                         "runs its initial plan to completion)")
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--peak-lr", type=float, default=1e-3)
     ap.add_argument("--compress-grads", action="store_true")
@@ -79,6 +84,7 @@ def main() -> None:
             overhead=OverheadModel(m=4.0),
             ckpt_dir=args.ckpt,
             compress_grads=args.compress_grads,
+            adaptive=not args.static,
         ),
         opt_cfg=opt,
     )
@@ -87,7 +93,8 @@ def main() -> None:
         if s % 10 == 0 or s == args.steps - 1:
             plan = " ".join(f"{k}:{v}" for k, v in rec["plan"].items())
             print(f"step {s:5d} loss={rec['loss']:.4f} "
-                  f"t={rec['step_time']:.2f}s plan[{plan}]")
+                  f"t={rec['step_time']:.2f}s q={rec['quality']:.2f} "
+                  f"mig={rec['n_migrated']} plan[{plan}]")
     if hdp.ckpt:
         hdp.ckpt.wait()
 

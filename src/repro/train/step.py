@@ -22,6 +22,17 @@ from ..optim.adamw import AdamWConfig, adamw_update
 from .train_state import TrainState
 
 
+def make_grain_grad_fn(model: Model) -> Callable:
+    """Per-grain ``(params, batch) -> ((loss, metrics), grads)`` — the unit
+    the HDP combine sums.  Every grain batch has the same fixed
+    (grain_size, seq_len) shape, so one jit compile serves every allotment the
+    homogenized runtime can produce: grain→pod migration never recompiles."""
+    grad_fn = jax.value_and_grad(
+        lambda p, b: model.loss(p, b), has_aux=True
+    )
+    return jax.jit(grad_fn)
+
+
 def make_train_step(
     model: Model, opt_cfg: AdamWConfig | None = None, n_micro: int = 1,
     capacities=None,

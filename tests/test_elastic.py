@@ -1,7 +1,9 @@
-"""Elastic fleet: failure detection, remesh plans, rejoin."""
+"""Elastic fleet: failure detection, remesh plans, rejoin, tracker restore."""
 
+import numpy as np
 import pytest
 
+from repro.checkpoint import save
 from repro.core import PerformanceTracker, PerfReport
 from repro.launch.elastic import ElasticFleet, PodSpec, RemeshPlan
 
@@ -104,6 +106,70 @@ def test_rehearse_degraded_survivor_gets_less_work():
     shares = res.shares()
     assert shares["pod2"] < shares["pod0"]
     assert res.homogenization_quality() <= 1.25
+
+
+def test_swept_pod_cannot_heartbeat_back_without_join():
+    """Death is sticky: the swept pod's late heartbeats are rejected; only
+    handle_join (the explicit rejoin) readmits it."""
+    fleet, tracker = _fleet()
+    for i in range(3):
+        tracker.observe(PerfReport(f"pod{i}", 4.0, 1.0, 100.0))
+    fleet.handle_failures(now_s=100.0, last_ckpt_step=80)
+    tracker.observe(PerfReport("pod3", 4.0, 1.0, 101.0))   # late heartbeat
+    assert "pod3" not in tracker.workers()
+    assert tracker.n_rejected == 1
+    plan = fleet.handle_join(PodSpec("pod3", 256, (16, 16)), perf_prior=4.0,
+                             now_s=120.0, last_ckpt_step=110)
+    assert "pod3" in plan.survivors
+
+
+def test_from_checkpoint_restores_learned_perfs(tmp_path):
+    """A restarted coordinator plans from the checkpointed perf vector, not
+    neutral priors; checkpointed workers missing from the new pod list are
+    dropped, and brand-new pods get a neutral prior."""
+    d = str(tmp_path / "ck")
+    live = PerformanceTracker(alpha=1.0)
+    for name, p in {"pod0": 8.0, "pod1": 2.0, "gone": 4.0}.items():
+        live.observe(PerfReport(name, p, 1.0, 50.0))
+    save(d, 7, {"x": np.zeros((2,), np.float32)},
+         extras={"tracker": live.state_dict(), "clock": 50.0})
+
+    pods = [PodSpec("pod0", 256, (16, 16)), PodSpec("pod1", 256, (16, 16)),
+            PodSpec("fresh", 256, (16, 16))]
+    fleet = ElasticFleet.from_checkpoint(pods, d, total_grains=64, alpha=1.0)
+    pv = fleet.tracker.perf_vector(50.0)
+    assert pv["pod0"] == pytest.approx(8.0)        # learned, not neutral
+    assert pv["pod1"] == pytest.approx(2.0)
+    assert pv["fresh"] == pytest.approx(1.0)       # neutral prior
+    assert "gone" not in fleet.tracker.workers()
+    plan = fleet._plan(resume_step=7)
+    shares = dict(zip(plan.grain_plan.workers, plan.grain_plan.shares,
+                      strict=True))
+    assert shares["pod0"] > shares["pod1"] > 0
+
+
+def test_from_checkpoint_explicit_kwargs_win_over_saved_config(tmp_path):
+    """Caller-supplied tracker tuning (alpha, dead_after_s, ...) survives the
+    checkpoint restore; only the EMA table comes from the checkpoint."""
+    d = str(tmp_path / "ck")
+    live = PerformanceTracker(alpha=1.0, dead_after_s=300.0)
+    live.observe(PerfReport("pod0", 6.0, 1.0, 10.0))
+    save(d, 3, {"x": np.zeros((2,), np.float32)},
+         extras={"tracker": live.state_dict(), "clock": 10.0})
+    fleet = ElasticFleet.from_checkpoint(
+        [PodSpec("pod0", 256, (16, 16))], d, total_grains=16,
+        alpha=0.9, dead_after_s=30.0,
+    )
+    assert fleet.tracker.alpha == 0.9
+    assert fleet.tracker.dead_after_s == 30.0
+    assert fleet.tracker.perf_vector(10.0)["pod0"] == pytest.approx(6.0)
+
+
+def test_from_checkpoint_without_checkpoint_is_neutral(tmp_path):
+    pods = [PodSpec("pod0", 256, (16, 16)), PodSpec("pod1", 256, (16, 16))]
+    fleet = ElasticFleet.from_checkpoint(pods, str(tmp_path / "none"),
+                                         total_grains=16)
+    assert fleet.tracker.perf_vector() == {"pod0": 1.0, "pod1": 1.0}
 
 
 def test_all_pods_lost_raises():

@@ -1,0 +1,330 @@
+"""GrainExecutor seam + tracker persistence + checkpoint edge cases (fast).
+
+The tentpole invariants that don't need a compiled model:
+
+  - the runtime treats sim workers and custom executors as the same loop
+    (cost / duration_s / execute are the only seam),
+  - an HDP-shaped mid-step perf-halving holds the acceptance numbers
+    (adaptive quality <= 1.2, static >= 1.6) on pure timing,
+  - tracker state survives a JSON round-trip bitwise (the checkpoint path),
+  - dead workers stay dead through observe(); only rejoin() resurrects,
+  - checkpoint restore of an explicit missing/pruned step fails loudly at
+    restore() — not deep inside open() — and extras ride the atomic rename.
+"""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (
+    AsyncCheckpointer,
+    available_steps,
+    prune,
+    read_extras,
+    restore,
+    save,
+)
+from repro.core import (
+    AsyncRuntime,
+    CallableGrainExecutor,
+    GrainExecutor,
+    PerformanceTracker,
+    PerfReport,
+    SimWorker,
+    TimelineEvent,
+)
+
+
+def mk_fleet(perfs, **rt_kw):
+    workers = [SimWorker(f"p{i}", float(p)) for i, p in enumerate(perfs)]
+    tracker = PerformanceTracker(alpha=0.5)
+    for w in workers:
+        tracker.observe(PerfReport(w.name, w.perf, 1.0, 0.0))
+    return workers, AsyncRuntime(workers, tracker=tracker, **rt_kw)
+
+
+# --------------------------------------------------------------- executor seam
+class _RecordingExecutor(GrainExecutor):
+    """Costs rise with grain id; execute records (worker, grain)."""
+
+    uniform_cost = None
+
+    def __init__(self):
+        self.calls = []
+
+    def cost(self, grain):
+        return 1.0 + (grain % 3)
+
+    def execute(self, worker, grain):
+        self.calls.append((worker.name, grain))
+        return grain * 10
+
+
+def test_custom_executor_drives_the_loop():
+    _, rt = mk_fleet([2.0, 1.0])
+    ex = _RecordingExecutor()
+    res = rt.run(30, executor=ex)
+    assert sorted(res.executed_by) == list(range(30))
+    assert sorted(g for _, g in ex.calls) == list(range(30))
+    assert res.values[7] == 70
+    # non-uniform costs still balance: the fast worker does ~2x the work units
+    busy = res.worker_busy
+    assert busy["p0"] == pytest.approx(busy["p1"], rel=0.35)
+
+
+def test_executor_duration_hook_controls_timing():
+    class Slow2x(GrainExecutor):
+        def duration_s(self, worker, cost, now_s):
+            return 2.0 * cost / worker.perf
+
+    _, rt = mk_fleet([1.0, 1.0])
+    res = rt.run(10, executor=Slow2x())
+    assert res.makespan == pytest.approx(10.0)  # 10 grains / 2 workers * 2s
+
+
+def test_executor_and_kwargs_are_mutually_exclusive():
+    _, rt = mk_fleet([1.0])
+    with pytest.raises(ValueError):
+        rt.run(4, executor=GrainExecutor(), execute=lambda w, g: g)
+    with pytest.raises(ValueError):
+        rt.run(4, executor=GrainExecutor(), grain_cost=2.0)
+    with pytest.raises(ValueError):
+        rt.run(4, executor=GrainExecutor(), duration_fn=lambda w, c, t: c)
+
+
+def test_callable_executor_matches_kwarg_form():
+    cost = lambda g: 1.0 + (g % 2)
+    _, rt1 = mk_fleet([3.0, 1.0])
+    r1 = rt1.run(40, grain_cost=cost)
+    _, rt2 = mk_fleet([3.0, 1.0])
+    r2 = rt2.run(40, executor=CallableGrainExecutor(grain_cost=cost))
+    assert r1.makespan == r2.makespan
+    assert r1.shares() == r2.shares()
+
+
+def test_fleet_add_remove_worker_between_jobs():
+    _, rt = mk_fleet([1.0, 1.0])
+    rt.remove_worker("p1")
+    res = rt.run(10)
+    assert res.shares() == {"p0": 10}
+    assert "p1" not in rt.tracker.workers()
+    # late heartbeat from the removed worker is rejected, not resurrected
+    rt.tracker.observe(PerfReport("p1", 5.0, 1.0, rt.clock))
+    assert "p1" not in rt.tracker.workers()
+    # explicit re-add brings it back with a prior
+    rt.add_worker(SimWorker("p1", 3.0), perf_prior=3.0)
+    res2 = rt.run(40)
+    assert res2.shares().get("p1", 0) > res2.shares().get("p0", 0)
+
+
+# ----------------------------------------- HDP-shaped acceptance, timing-only
+def _hdp_shaped(adaptive: bool, n_grains=32, perfs=(2.0, 2.0, 2.0, 2.0)):
+    """Mirror of HDPTrainer's per-step job: uniform grains, warm tracker,
+    perf-halving of one pod 25% into the measured step."""
+    _, rt = mk_fleet(perfs, rehomogenize=adaptive, steal=adaptive)
+    rt.run(n_grains)  # warm step: heartbeats converge
+    est = n_grains / sum(perfs)
+    ev = TimelineEvent(0.25 * est, "perf", "p0", perf=perfs[0] / 2)
+    return rt.run(n_grains, timeline=(ev,), timeline_relative=True)
+
+
+def test_midstep_halving_acceptance_quality():
+    """The ISSUE acceptance numbers on the training-step shape: adaptive
+    quality <= 1.2, static >= 1.6, same timeline."""
+    ad = _hdp_shaped(adaptive=True)
+    st = _hdp_shaped(adaptive=False)
+    assert ad.homogenization_quality() <= 1.2, ad.worker_finish
+    assert st.homogenization_quality() >= 1.6, st.worker_finish
+    assert ad.makespan < st.makespan
+    assert sorted(ad.executed_by) == list(range(32))
+    assert sorted(st.executed_by) == list(range(32))
+
+
+# -------------------------------------------------- tracker: death is sticky
+def test_observe_cannot_resurrect_dead_worker():
+    t = PerformanceTracker(alpha=0.5)
+    t.observe(PerfReport("w", 4.0, 1.0, 0.0))
+    t.mark_dead("w")
+    t.observe(PerfReport("w", 9.0, 1.0, 1.0))  # late heartbeat: dropped
+    assert t.workers() == []
+    assert t.n_rejected == 1
+    assert t.workers(alive_only=False) == ["w"]
+
+
+def test_sweep_death_is_sticky_too():
+    t = PerformanceTracker(alpha=1.0, dead_after_s=10.0)
+    t.observe(PerfReport("w", 4.0, 1.0, 0.0))
+    assert t.sweep(now_s=20.0) == ["w"]
+    t.observe(PerfReport("w", 4.0, 1.0, 21.0))  # was just slow, but too late
+    assert t.workers() == []
+
+
+def test_rejoin_is_the_explicit_path_back():
+    t = PerformanceTracker(alpha=0.5)
+    t.observe(PerfReport("w", 8.0, 1.0, 0.0))
+    t.mark_dead("w")
+    t.rejoin("w", perf_prior=2.0, now_s=5.0)
+    assert t.workers() == ["w"]
+    # fresh prior, not the pre-failure EMA
+    assert t.perf("w") == pytest.approx(2.0)
+    with pytest.raises(ValueError):
+        t.rejoin("w", perf_prior=0.0)
+
+
+# ------------------------------------------------------- tracker persistence
+def test_tracker_state_dict_json_roundtrip_exact():
+    t = PerformanceTracker(alpha=0.3, staleness_half_life_s=45.0,
+                           dead_after_s=500.0, straggler_fraction=0.4)
+    rng = np.random.default_rng(3)
+    for i in range(6):
+        for k in range(4):
+            t.observe(PerfReport(f"w{i}", float(rng.uniform(0.1, 9.0)),
+                                 1.0, float(k)))
+    t.mark_dead("w5")
+    blob = json.dumps(t.state_dict())          # the checkpoint wire format
+    t2 = PerformanceTracker.from_state_dict(json.loads(blob))
+    assert t2.alpha == t.alpha
+    assert t2.dead_after_s == t.dead_after_s
+    assert t2.workers() == t.workers()
+    assert t2.workers(alive_only=False) == t.workers(alive_only=False)
+    # bitwise: python floats round-trip exactly through json
+    for now in (None, 10.0, 1000.0):
+        assert t2.perf_vector(now) == t.perf_vector(now)
+    # death survives the round-trip and stays sticky
+    t2.observe(PerfReport("w5", 1.0, 1.0, 99.0))
+    assert "w5" not in t2.workers()
+
+
+def test_restored_tracker_plans_identically():
+    t = PerformanceTracker(alpha=0.5)
+    for i, p in enumerate([4.0, 2.0, 1.0]):
+        for k in range(3):
+            t.observe(PerfReport(f"w{i}", p, 1.0, float(k)))
+    from repro.core import HomogenizedScheduler
+
+    t2 = PerformanceTracker.from_state_dict(
+        json.loads(json.dumps(t.state_dict()))
+    )
+    p1 = HomogenizedScheduler(t, 70).plan(now_s=10.0, force=True)
+    p2 = HomogenizedScheduler(t2, 70).plan(now_s=10.0, force=True)
+    assert p1 == p2
+
+
+# ------------------------------------------------------- checkpoint edge cases
+def _tree():
+    return {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": {"c": np.ones((4,), np.float32)}}
+
+
+def test_restore_explicit_missing_step_raises_cleanly(tmp_path):
+    d = str(tmp_path / "ck")
+    save(d, 10, _tree())
+    with pytest.raises(FileNotFoundError, match=r"step 7.*available.*10"):
+        restore(d, _tree(), step=7)
+    # empty dir + explicit step: same clean failure
+    with pytest.raises(FileNotFoundError, match="step 3"):
+        restore(str(tmp_path / "none"), _tree(), step=3)
+    # implicit latest still works
+    _, step = restore(d, _tree())
+    assert step == 10
+
+
+def test_prune_then_restore_pruned_step(tmp_path):
+    """keep_last can remove the step a caller pinned; the failure must name
+    what is still available."""
+    d = str(tmp_path / "ck")
+    for s in (1, 2, 3, 4):
+        save(d, s, _tree())
+    prune(d, keep_last=2)
+    assert available_steps(d) == [3, 4]
+    with pytest.raises(FileNotFoundError, match=r"step 1.*\[3, 4\]"):
+        restore(d, _tree(), step=1)
+    restored, step = restore(d, _tree(), step=3)   # surviving pinned step: fine
+    assert step == 3 and restored is not None
+
+
+def test_extras_roundtrip_and_atomicity(tmp_path):
+    d = str(tmp_path / "ck")
+    extras = {"tracker": {"workers": {"w": {"perf": 3.5}}}, "clock": 12.25}
+    save(d, 5, _tree(), extras=extras)
+    assert read_extras(d) == extras
+    assert read_extras(d, step=5) == extras
+    # a step saved without extras reads as None (not an error)
+    save(d, 6, _tree())
+    assert read_extras(d, step=6) is None
+    assert read_extras(d) is None          # latest (6) has none
+    assert read_extras(d, step=5) == extras
+    with pytest.raises(FileNotFoundError):
+        read_extras(d, step=99)
+    assert read_extras(str(tmp_path / "none")) is None
+
+
+def test_async_checkpointer_carries_extras(tmp_path):
+    d = str(tmp_path / "ck")
+    ck = AsyncCheckpointer(d, keep_last=2)
+    for s in (2, 4, 6):
+        ck.save(s, _tree(), extras={"clock": float(s)})
+    ck.wait()
+    assert available_steps(d) == [4, 6]
+    assert read_extras(d) == {"clock": 6.0}
+    assert read_extras(d, step=4) == {"clock": 4.0}
+
+
+# ------------------------------------------------- combine order (trainer)
+def test_prefix_combine_is_arrival_order_independent():
+    """The HDP combine folds per-grain grads in grain-id order no matter the
+    completion order, buffering only the non-contiguous suffix — the bitwise
+    'timing never changes numerics' invariant at unit scale."""
+    from repro.train.loop import _PrefixCombine
+
+    def fold(order):
+        comb = _PrefixCombine(False, None)
+        for g in order:
+            comb.add(g, loss=float(g), tokens=2.0,
+                     grads={"w": np.full((3,), 0.1 * g, np.float32)})
+        out = comb.grads(6)
+        assert comb.pending == {}           # fully drained, nothing retained
+        return np.asarray(out["w"]), comb.loss_sum, comb.tok_sum
+
+    a = fold([0, 1, 2, 3, 4, 5])
+    b = fold([5, 3, 0, 1, 4, 2])
+    assert np.array_equal(a[0], b[0])       # bitwise
+    assert a[1] == b[1] and a[2] == b[2]
+
+    # buffering tracks the missing prefix, not the whole job
+    comb = _PrefixCombine(False, None)
+    for g in (1, 2, 3):
+        comb.add(g, 0.0, 1.0, {"w": np.zeros((1,), np.float32)})
+    assert len(comb.pending) == 3           # grain 0 still outstanding
+    comb.add(0, 0.0, 1.0, {"w": np.zeros((1,), np.float32)})
+    assert comb.pending == {}               # prefix arrived: all folded
+    with pytest.raises(RuntimeError, match="4/5"):
+        comb.grads(5)
+
+
+# ------------------------------------------------- jitter convention (trainer)
+def test_hdp_jitter_is_two_sided_and_clamped():
+    """The trainer's duration model follows ClusterSim's two-sided jitter
+    (a pod can run *faster* than nominal) and its multiplier never goes
+    non-positive even at absurd jitter."""
+    from types import SimpleNamespace
+
+    from repro.train.loop import _GrainGradExecutor
+
+    stub = SimpleNamespace(
+        cfg=SimpleNamespace(jitter=0.3),
+        rng=np.random.default_rng(0),
+    )
+    ex = _GrainGradExecutor(stub, 0, combine=None)
+    pod = SimWorker("p", 2.0)
+    durs = [ex.duration_s(pod, 1.0, 0.0) for _ in range(400)]
+    nominal = 0.5
+    assert all(d > 0 and math.isfinite(d) for d in durs)
+    assert sum(d < nominal for d in durs) > 100    # two-sided: some faster
+    assert sum(d > nominal for d in durs) > 100
+
+    stub.cfg.jitter = 50.0                          # pathological spread
+    durs = [ex.duration_s(pod, 1.0, 0.0) for _ in range(200)]
+    assert all(d > 0 for d in durs)                 # clamp keeps time positive

@@ -42,6 +42,34 @@ def test_train_cli_hdp():
     assert "plan[" in out.stdout
 
 
+def test_train_cli_hdp_static_baseline():
+    out = _run(["repro.launch.train", "--mode", "hdp", "--arch", "qwen2-1.5b",
+                "--steps", "4", "--seq", "16", "--grains", "4",
+                "--pods", "3:1", "--static"])
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "plan[" in out.stdout
+
+
+def test_bench_hdp_cli(tmp_path):
+    """Toy-scale smoke of the HDP benchmark: JSON emitted, both scenarios
+    present, and the homogenized runtime beats the static plan on the step
+    where the fault fires."""
+    import json
+
+    out_path = str(tmp_path / "BENCH_hdp.json")
+    out = _run(["benchmarks.bench_hdp", "--grains", "64", "--steps", "4",
+                "--fault-step", "2", "--out", out_path], timeout=120)
+    assert out.returncode == 0, out.stderr[-2000:]
+    with open(out_path) as f:
+        data = json.load(f)
+    assert set(data["scenarios"]) == {"perf_halving", "kill"}
+    for sc in data["scenarios"].values():
+        assert sc["fault_step_speedup"] > 1.0
+    halving = data["scenarios"]["perf_halving"]
+    assert halving["adaptive"]["fault_step_quality"] <= 1.2
+    assert halving["static"]["fault_step_quality"] >= 1.6
+
+
 def test_serve_cli():
     out = _run(["repro.launch.serve", "--arch", "qwen2-1.5b", "--requests", "3",
                 "--max-new", "3", "--max-seq", "32"])

@@ -11,7 +11,7 @@ import pytest
 
 pytestmark = pytest.mark.slow
 
-from repro.core import OverheadModel
+from repro.core import OverheadModel, TimelineEvent
 from repro.data import GrainSpec, SyntheticSource, batch_from_grains
 from repro.models import LayerSpec, Model, ModelConfig
 from repro.optim import AdamWConfig
@@ -72,11 +72,11 @@ def test_single_worker_checkpoint_restart_exact(tmp_path):
 
 
 # ------------------------------------------------------------------------- HDP
-def _hdp(pods, homogenize=True, **kw):
+def _hdp(pods, homogenize=True, total_grains=8, **kw):
     model = Model(tiny_cfg())
     spec = GrainSpec(grain_size=1, seq_len=8, vocab_size=64)
     cfg = HDPConfig(
-        total_grains=8, grain_spec=spec, homogenize=homogenize,
+        total_grains=total_grains, grain_spec=spec, homogenize=homogenize,
         overhead=OverheadModel(m=2.0), **kw,
     )
     return HDPTrainer(model, pods, cfg, opt_cfg=OPT)
@@ -145,6 +145,96 @@ def test_hdp_grad_compression_still_learns():
     tr = _hdp([Pod("a", 2.0), Pod("b", 1.0)], compress_grads=True)
     hist = tr.run(25)
     assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_hdp_adaptive_and_static_are_bitwise_identical():
+    """The tentpole numerics invariant: grain→pod assignment only changes
+    timing, never data.  With no timeline events, the runtime-driven adaptive
+    path and the static per-step plan produce bitwise-identical loss,
+    grad_norm and parameters."""
+    a = _hdp([Pod("fast", 4.0), Pod("slow", 1.0)], adaptive=True)
+    b = _hdp([Pod("fast", 4.0), Pod("slow", 1.0)], adaptive=False)
+    for s in range(3):
+        ra, rb = a.step(s), b.step(s)
+        assert ra["loss"] == rb["loss"]            # bitwise, not approx
+        assert ra["grad_norm"] == rb["grad_norm"]
+    for x, y in zip(jax.tree.leaves(a.state.params),
+                    jax.tree.leaves(b.state.params), strict=True):
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def _midstep_halving(adaptive: bool):
+    """Scripted mid-step perf-halving on one pod (ISSUE acceptance)."""
+    tr = _hdp([Pod(f"p{i}", 2.0) for i in range(4)], adaptive=adaptive,
+              total_grains=32)
+    for s in range(2):
+        tr.step(s)                      # heartbeats converge to true perfs
+    est_makespan = 32 / 8.0
+    tr.schedule(TimelineEvent(tr.clock + 0.25 * est_makespan, "perf", "p0",
+                              perf=1.0))
+    return tr.step(2)
+
+
+def test_hdp_midstep_perf_halving_acceptance():
+    """Runtime-driven trainer holds the homogenization line through a
+    mid-step slowdown (quality <= 1.2); the static per-step plan drags at the
+    straggler's pace (>= 1.6) on the same timeline."""
+    ad = _midstep_halving(adaptive=True)
+    st = _midstep_halving(adaptive=False)
+    assert ad["quality"] <= 1.2, ad
+    assert st["quality"] >= 1.6, st
+    assert ad["step_time"] < st["step_time"]
+    assert ad["n_migrated"] > 0
+    # identical data => identical numerics even across the fault
+    assert ad["loss"] == st["loss"]
+    assert ad["grad_norm"] == st["grad_norm"]
+
+
+def test_hdp_midstep_kill_completes_step_and_stays_dead():
+    """A pod killed mid-step: its unfinished grains re-home, the step
+    completes, and the pod stays out of later plans (no resurrection)."""
+    tr = _hdp([Pod("a", 2.0), Pod("b", 2.0), Pod("c", 2.0)], total_grains=12)
+    tr.step(0)
+    tr.schedule(TimelineEvent(tr.clock + 0.5, "kill", "c"))
+    rec = tr.step(1)
+    assert rec["tokens"] == 12 * 8            # every grain exactly once
+    assert not tr.pods["c"].alive
+    rec2 = tr.step(2)
+    assert "c" not in rec2["plan"]
+    assert np.isfinite(rec2["loss"])
+
+
+def test_hdp_midstep_rejoin_replaces_killed_pod():
+    """A timeline 'join' of a previously-killed pod must replace the stale
+    dead Pod in the trainer's fleet view, so set_perf/alive hit the object
+    the runtime actually schedules."""
+    tr = _hdp([Pod("a", 2.0), Pod("b", 2.0)])
+    tr.step(0)
+    tr.kill("b")
+    tr.step(1)
+    tr.schedule(TimelineEvent(tr.clock + 0.1, "join", Pod("b", 2.0)))
+    rec = tr.step(2)
+    assert tr.pods["b"].alive
+    assert tr.pods["b"] is tr.runtime.workers["b"]
+    assert rec["plan"].get("b", 0) > 0 or tr.step(3)["plan"].get("b", 0) > 0
+    tr.set_perf("b", 0.5)                    # must mutate the live object
+    assert tr.runtime.workers["b"].perf == 0.5
+
+
+def test_hdp_restart_restores_tracker_and_plan(tmp_path):
+    """Kill the coordinator after step k; the restarted one resumes with the
+    learned perf vector — its first plan equals the plan the never-killed
+    coordinator would produce, and the next step is bitwise identical."""
+    d = str(tmp_path / "hdp")
+    A = _hdp([Pod("fast", 3.0), Pod("slow", 1.0)], ckpt_dir=d, ckpt_every=2)
+    A.run(4)
+    B = _hdp([Pod("fast", 3.0), Pod("slow", 1.0)], ckpt_dir=d, ckpt_every=2)
+    assert B.start_step == 4
+    assert B.tracker.perf_vector(B.clock) == A.tracker.perf_vector(A.clock)
+    assert B.plan_preview() == A.plan_preview()
+    ra, rb = A.step(4), B.step(4)
+    assert ra["loss"] == rb["loss"] and ra["grad_norm"] == rb["grad_norm"]
+    assert ra["plan"] == rb["plan"]
 
 
 def test_hdp_weighted_combine_matches_single_worker():
