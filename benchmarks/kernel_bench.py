@@ -17,7 +17,8 @@ from repro.kernels.matmul.ref import matmul_ref
 
 
 def _time(fn, *args, iters=5) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    out = fn(*args)
+    out[0].block_until_ready() if isinstance(out, tuple) else jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(iters):
         out = fn(*args)

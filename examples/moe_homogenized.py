@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import LayerSpec, Model, ModelConfig, MoEConfig
+from repro.models import LayerSpec, ModelConfig, MoEConfig
 from repro.models.moe import apply_moe, capacity_per_expert, init_moe
 
 

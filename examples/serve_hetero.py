@@ -1,37 +1,32 @@
-"""Serving with homogenized dispatch + a real continuous-batching engine.
+"""Serving with homogenized dispatch + a real continuous-batching fleet.
 
 Part 1 — one real DecodeEngine (continuous batching over a tiny LM): requests
 of different lengths stream through a fixed slot pool; finished sequences are
 replaced immediately.
 
-Part 2 — fleet dispatch: three replicas of unequal throughput receive request
-bundles.  The homogenized dispatcher learns replica perf from heartbeats and
-allots proportional shares; we compare makespan vs equal split and show
-failover when a replica dies.
+Part 2 — batched fleet serving: three replicas of unequal step clocks *and*
+slot counts behind ``FleetServer``.  Engines are first-class runtime
+executors (``EngineExecutor``): slots stay full, durations are measured
+engine-step counts, heartbeats are measured tokens/sec.  The same request set
+through the per-request-serial path shows what slot-level batching buys.
 
-Part 3 — the async runtime's tentpole scenario: a replica's perf *halves
-mid-bundle*.  The static one-shot plan finishes at the straggler's pace
-(homogenization quality >= 1.8); the event-driven runtime re-homogenizes on
-every request completion and holds the line (quality <= 1.1).
+Part 3 — the tentpole scenario on real engines: a replica's step clock
+*halves mid-bundle*.  The static one-shot plan finishes at the straggler's
+pace; the runtime migrates unstarted requests off the degraded replica and
+holds the homogenization line (quality <= 1.3), with every output still
+bitwise equal to the single-engine greedy decode.
 
 Run:  PYTHONPATH=src python examples/serve_hetero.py
 """
 
 import jax
 
-from repro.core import (
-    AsyncRuntime,
-    PerformanceTracker,
-    PerfReport,
-    SimWorker,
-    TimelineEvent,
-)
+from repro.core import TimelineEvent
 from repro.models import LayerSpec, Model, ModelConfig
-from repro.serve import DecodeEngine, HomogenizedDispatcher, Replica, Request
+from repro.serve import DecodeEngine, FleetServer, Replica, Request
 
 
-def main() -> None:
-    # ---------------- Part 1: continuous batching on a real engine ----------
+def demo_model():
     cfg = ModelConfig(
         name="serve-demo", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
         d_ff=128, vocab_size=128, head_dim=16,
@@ -40,7 +35,21 @@ def main() -> None:
         rope_theta=1e4,
     )
     model = Model(cfg)
-    params = model.init(jax.random.key(0))
+    return model, model.init(jax.random.key(0))
+
+
+def mk_requests(n, max_new=6):
+    return [
+        Request(rid=i, prompt=[1 + i % 9, 2, 3 + i % 5],
+                max_new_tokens=max_new)
+        for i in range(n)
+    ]
+
+
+def main() -> None:
+    model, params = demo_model()
+
+    # ---------------- Part 1: continuous batching on a real engine ----------
     eng = DecodeEngine(model, params, max_batch=4, max_seq=64)
     reqs = [
         Request(rid=i, prompt=[1 + i, 2, 3 + i % 5], max_new_tokens=4 + 3 * (i % 3))
@@ -56,52 +65,52 @@ def main() -> None:
     print(f"engine steps={eng.steps} tokens_out={eng.tokens_out} "
           f"(tokens/step={eng.throughput:.2f} — continuous batching keeps slots busy)")
 
-    # ---------------- Part 2: homogenized fleet dispatch --------------------
-    print("\n== homogenized dispatch across 3 replicas (perfs 10/5/1) ==")
-    reps = [Replica("r-fast", 10.0), Replica("r-mid", 5.0), Replica("r-slow", 1.0)]
-    hom = HomogenizedDispatcher(reps, homogenize=True)
-    equ = HomogenizedDispatcher(reps, homogenize=False)
-    print("bundle | homogenized makespan (shares) | equal-split makespan (shares)")
-    for bundle in range(5):
-        rh = hom.dispatch(160)
-        re_ = equ.dispatch(160)
-        print(f"{bundle:6d} | {rh.makespan:8.2f}s {rh.shares} | "
-              f"{re_.makespan:8.2f}s {re_.shares}")
-    print(f"steady-state speedup from homogenization: "
-          f"{re_.makespan / rh.makespan:.2f}x")
+    # ------------- Part 2: batched fleet vs per-request-serial --------------
+    print("\n== batched fleet serving (3 replicas: 8steps/s x4, 4x2, 2x1) ==")
+    specs = [("r-fast", 8.0, 4), ("r-mid", 4.0, 2), ("r-slow", 2.0, 1)]
 
-    print("\n-- replica r-mid dies; dispatcher redistributes --")
-    hom.kill("r-mid")
-    r = hom.dispatch(160)
-    print(f"post-failure shares: {r.shares} makespan={r.makespan:.2f}s")
+    def fleet(**kw):
+        # Fresh engines per fleet: reused engines would carry unconsumed
+        # step/token counters into the next fleet's first measured heartbeat.
+        engines = {
+            n: DecodeEngine(model, params, max_batch=b, max_seq=64, name=n)
+            for n, _, b in specs
+        }
+        return FleetServer([Replica(n, p) for n, p, _ in specs], engines,
+                           max_queue_depth=kw.pop("max_queue_depth", 16), **kw)
 
-    # -------- Part 3: mid-bundle degradation, async runtime vs static -------
-    print("\n== mid-job degradation: r3's perf halves 10% into an 800-request "
-          "bundle ==")
-    perfs = [8.0, 6.0, 5.0, 8.0]
+    serial = fleet().serve(mk_requests(24), batched=False)
+    batched = fleet().serve(mk_requests(24))
+    print(f"serial : {serial.tokens_per_s:7.2f} tok/s "
+          f"(one request per grain, engines drained at completion)")
+    print(f"batched: {batched.tokens_per_s:7.2f} tok/s  shares="
+          f"{batched.bundles[0].shares}")
+    print(f"slot-level continuous batching buys "
+          f"{batched.tokens_per_s / serial.tokens_per_s:.2f}x fleet tokens/sec")
 
-    def run(adaptive: bool):
-        workers = [SimWorker(f"r{i}", p) for i, p in enumerate(perfs)]
-        tracker = PerformanceTracker(alpha=0.5)
-        for w in workers:  # oracle warm start: perfs already learned
-            tracker.observe(PerfReport(w.name, w.perf, 1.0, 0.0))
-        rt = AsyncRuntime(workers, tracker=tracker,
-                          rehomogenize=adaptive, steal=adaptive)
-        drop = TimelineEvent(0.1 * 800 / sum(perfs), "perf", "r3", perf=4.0)
-        return rt.run(800, timeline=(drop,))
-
-    ada, sta = run(adaptive=True), run(adaptive=False)
-    for label, res in (("static one-shot", sta), ("async runtime", ada)):
-        print(f"{label:16s}: makespan={res.makespan:7.2f}s "
-              f"quality={res.homogenization_quality():.3f} "
-              f"shares={res.shares()} "
-              f"migrated={res.n_migrated} replans={res.n_replans}")
-    print(f"re-homogenization recovers "
-          f"{sta.makespan / ada.makespan:.2f}x of the straggler's drag "
-          f"(quality {sta.homogenization_quality():.2f} -> "
-          f"{ada.homogenization_quality():.2f})")
-    assert ada.homogenization_quality() <= 1.1
-    assert sta.homogenization_quality() >= 1.8
+    # -------- Part 3: mid-bundle degradation, adaptive vs static ------------
+    print("\n== r-fast's step clock halves mid-bundle (48 requests) ==")
+    results = {}
+    for label, homogenize in (("async runtime", True),
+                              ("equal-split static", False)):
+        srv = fleet(max_queue_depth=32, homogenize=homogenize)
+        srv.serve(mk_requests(48))        # warm wave: learn measured rates
+        reqs = mk_requests(48)
+        cost = sum(len(r.prompt) + r.max_new_tokens for r in reqs)
+        drop = TimelineEvent(0.2 * cost / 42.0, "perf", "r-fast", perf=4.0)
+        rep = srv.serve(reqs, timeline=(drop,))
+        srv.degrade("r-fast", 8.0)        # restore for the next run
+        b = rep.bundles[0]
+        results[label] = rep
+        print(f"{label:16s}: {b.tokens_per_s:7.2f} tok/s "
+              f"quality={b.quality:.3f} migrated={b.n_migrated} "
+              f"shares={b.shares}")
+        assert all(r.done for r in reqs)
+    ada = results["async runtime"].worst_quality
+    sta = results["equal-split static"].worst_quality
+    print(f"re-homogenization holds the line: quality {sta:.2f} -> {ada:.2f}")
+    assert ada <= 1.3
+    assert ada < sta
 
 
 if __name__ == "__main__":

@@ -79,9 +79,42 @@ class GrainExecutor:
 
     ``uniform_cost`` set to a float declares every grain equally expensive,
     letting queue-ETA computation run in O(1) instead of O(queue).
+
+    Incremental executors
+    ---------------------
+    ``incremental = True`` switches a job to the *tick-driven* path for
+    workloads whose real compute advances in its own small steps (a
+    continuous-batching decode engine): instead of one completion event per
+    grain at a model-predicted time, each worker holds up to
+    ``concurrency(w)`` grains in flight (its engine slots) and the loop fires
+    a *tick* per worker every ``tick_s(w)`` simulated seconds.  A tick
+    advances the worker's real compute by one step and reports which grains
+    finished — so durations are *measured* (real step counts on a profiled
+    step clock), not modeled, and slot-level batching interleaves with
+    cross-worker dispatch.  The incremental seam:
+
+      concurrency(w)          in-flight grain capacity (engine slots),
+      begin(w, g, t)          admit grain ``g`` into worker ``w``'s real
+                              compute (called once per admission),
+      tick(w, t)              advance one real step; returns the
+                              ``[(grain, value), ...]`` that finished,
+      tick_s(w, t)            simulated seconds per real step on ``w``
+                              (the worker's speed profile),
+      abort(w, g)             withdraw an admitted-but-unfinished grain (kill
+                              path) and reset it so re-execution elsewhere is
+                              exactly-once on *completed* work,
+      heartbeat(w, t)         measured-throughput ``PerfReport`` since the
+                              last call (or None); fed to the tracker in
+                              place of the modeled per-grain heartbeat,
+      remaining_cost(w, g)    unfinished work units of an in-flight grain
+                              (ETA accuracy for mid-job re-homogenization).
+
+    Unstarted grains stay in runtime-side queues and migrate/steal exactly as
+    in the modeled path; only admitted grains are pinned to their worker.
     """
 
     uniform_cost: float | None = 1.0
+    incremental: bool = False
 
     def cost(self, grain: int) -> float:
         return 1.0 if self.uniform_cost is None else self.uniform_cost
@@ -91,6 +124,28 @@ class GrainExecutor:
 
     def execute(self, worker: Any, grain: int) -> Any:
         return None
+
+    # -- incremental seam (used only when ``incremental = True``) -----------
+    def concurrency(self, worker: Any) -> int:
+        return 1
+
+    def begin(self, worker: Any, grain: int, now_s: float) -> None:
+        raise NotImplementedError("incremental executors must define begin()")
+
+    def tick(self, worker: Any, now_s: float) -> list[tuple[int, Any]]:
+        raise NotImplementedError("incremental executors must define tick()")
+
+    def tick_s(self, worker: Any, now_s: float) -> float:
+        return 1.0 / max(getattr(worker, "perf", _EPS), _EPS)
+
+    def abort(self, worker: Any, grain: int) -> None:
+        raise NotImplementedError("incremental executors must define abort()")
+
+    def heartbeat(self, worker: Any, now_s: float) -> PerfReport | None:
+        return None
+
+    def remaining_cost(self, worker: Any, grain: int) -> float:
+        return self.cost(grain)
 
 
 class CallableGrainExecutor(GrainExecutor):
@@ -324,7 +379,13 @@ class AsyncRuntime:
             return res
 
         queues = self._initial_queues(n_grains, now, initial_plan)
+        incremental = executor.incremental
         inflight: dict[str, _Inflight] = {}
+        # Incremental mode: several grains in flight per worker (engine
+        # slots), each mapped to its admission time; one pending tick per
+        # worker, remembered as (fire_s, tick_duration).
+        islots: dict[str, dict[int, float]] = {}
+        ticks: dict[str, tuple[float, float]] = {}
         dead: set[str] = set()
         heap: list[tuple[float, int, int, Any]] = []   # (t, priority, seq, payload)
         seq = itertools.count()
@@ -346,7 +407,13 @@ class AsyncRuntime:
             """Predicted seconds until worker w's queue drains (from `now`),
             using the tracker's *estimated* perf — the scheduler never peeks
             at true perf."""
-            t = inflight[w].end_s - now if w in inflight else 0.0
+            if incremental:
+                sl = islots.get(w)
+                t = sum(
+                    executor.remaining_cost(self.workers[w], g) for g in sl
+                ) / est_perf(w) if sl else 0.0
+            else:
+                t = inflight[w].end_s - now if w in inflight else 0.0
             q = queues.get(w)
             if q:
                 qcost = len(q) * uniform if uniform is not None else sum(
@@ -355,7 +422,24 @@ class AsyncRuntime:
                 t += qcost / est_perf(w)
             return t
 
+        def abort_inflight(w: str) -> list[int]:
+            """Withdraw w's never-completed in-flight work (kill path) so the
+            heir re-executes it from scratch — exactly-once on *completed*
+            grains.  Returns the orphaned grain ids in admission order."""
+            if incremental:
+                sl = islots.pop(w, {})
+                gs = sorted(sl, key=sl.get)
+                for g in gs:
+                    executor.abort(self.workers[w], g)
+                ticks.pop(w, None)
+                return gs
+            fl = inflight.pop(w, None)
+            return [fl.grain] if fl is not None else []
+
         def start_next(w: str) -> None:
+            if incremental:
+                admit(w)
+                return
             if w in dead or w in inflight:
                 return
             q = queues[w]
@@ -368,6 +452,29 @@ class AsyncRuntime:
             d = max(dur_of(self.workers[w], c, now), _EPS)
             inflight[w] = _Inflight(g, now, now + d, c)
             heapq.heappush(heap, (now + d, 1, next(seq), w))
+
+        def admit(w: str) -> None:
+            """Fill w's free slots from its queue (stealing first if the
+            queue ran dry) and make sure a tick is pending while any slot is
+            occupied — this is where request-bundle admission meets
+            continuous batching."""
+            if w in dead:
+                return
+            sl = islots.setdefault(w, {})
+            worker = self.workers[w]
+            free = executor.concurrency(worker) - len(sl)
+            q = queues[w]
+            if not q and free > 0 and self.steal:
+                self._steal_into(w, queues, eta, est_perf, res)
+            while free > 0 and q:
+                g = q.popleft()
+                executor.begin(worker, g, now)
+                sl[g] = now
+                free -= 1
+            if sl and w not in ticks:
+                d = max(executor.tick_s(worker, now), _EPS)
+                ticks[w] = (now + d, d)
+                heapq.heappush(heap, (now + d, 1, next(seq), w))
 
         def kick_idle() -> None:
             for w in alive():
@@ -383,15 +490,44 @@ class AsyncRuntime:
 
             if prio == 0:  # timeline event
                 self._apply_timeline(
-                    payload, now, queues, inflight, dead, eta, res
+                    payload, now, queues, abort_inflight, dead, eta, res
                 )
                 if self.rehomogenize:
-                    self._rebalance(queues, inflight, dead, eta, cost_of,
-                                    est_perf, res)
+                    self._rebalance(queues, dead, eta, cost_of, est_perf, res)
                 kick_idle()
                 continue
 
             w = payload
+            if incremental:
+                tk = ticks.get(w)
+                if w in dead or tk is None or abs(tk[0] - now) > 1e-9:
+                    continue  # stale tick (worker died)
+                del ticks[w]
+                worker = self.workers[w]
+                finished = executor.tick(worker, now)
+                sl = islots.get(w, {})
+                res.worker_busy[w] = res.worker_busy.get(w, 0.0) + tk[1]
+                for g, val in finished:
+                    if g not in sl:
+                        raise RuntimeError(
+                            f"worker {w} finished grain {g} it was never assigned"
+                        )
+                    if g in res.executed_by:
+                        raise RuntimeError(f"grain {g} double-executed")
+                    res.records.append(GrainRecord(g, w, sl.pop(g), now, cost_of(g)))
+                    res.executed_by[g] = w
+                    res.values[g] = val
+                    res.worker_finish[w] = now
+                # Measured heartbeat: real tokens over real steps on this
+                # worker's step clock — replaces the modeled per-grain report.
+                hb = executor.heartbeat(worker, now)
+                if hb is not None:
+                    self.tracker.observe(hb)
+                if finished and self.rehomogenize:
+                    self._rebalance(queues, dead, eta, cost_of, est_perf, res)
+                kick_idle()
+                continue
+
             fl = inflight.get(w)
             if fl is None or w in dead or abs(fl.end_s - now) > 1e-9:
                 continue  # stale event (worker died or grain was aborted)
@@ -407,8 +543,7 @@ class AsyncRuntime:
             # Heartbeat: the background process reports observed throughput.
             self.tracker.observe(PerfReport(w, fl.cost, max(dur, _EPS), now))
             if self.rehomogenize:
-                self._rebalance(queues, inflight, dead, eta, cost_of,
-                                est_perf, res)
+                self._rebalance(queues, dead, eta, cost_of, est_perf, res)
             kick_idle()
 
         # Unfired timeline events (scheduled past the last completion) carry
@@ -474,7 +609,7 @@ class AsyncRuntime:
         res.n_steals += 1
         res.n_migrated += take
 
-    def _rebalance(self, queues, inflight, dead, eta, cost_of, est_perf, res):
+    def _rebalance(self, queues, dead, eta, cost_of, est_perf, res):
         """Hysteresis-gated migration of unstarted grains from the
         latest-finishing worker to the earliest-finishing one.  Each move must
         strictly reduce the fleet's max predicted finish time, so the loop
@@ -510,8 +645,8 @@ class AsyncRuntime:
             res.n_replans += 1
             res.n_migrated += moved
 
-    def _apply_timeline(self, ev: TimelineEvent, now, queues, inflight, dead,
-                        eta, res):
+    def _apply_timeline(self, ev: TimelineEvent, now, queues, abort_inflight,
+                        dead, eta, res):
         if ev.kind == "perf":
             # Stale scripts (unknown or already-dead worker) are no-ops, same
             # as the kill branch below.
@@ -530,16 +665,15 @@ class AsyncRuntime:
         if name not in self.workers or name in dead:
             return
         dead.add(name)
+        # Aborted in-flight work first (it was admitted earliest), then the
+        # unstarted queue; both re-home to the earliest-finishing survivor.
+        orphans = abort_inflight(name) + list(queues.get(name, ()))
         # Remove from the fleet so later jobs on this runtime don't treat the
         # dead worker as alive (a stolen-grain heartbeat would silently
         # resurrect it in the tracker).  A rejoin re-registers it.
         self.workers.pop(name)
         self.tracker.mark_dead(name)
-        orphans = list(queues.get(name, ()))
         queues[name] = deque()
-        fl = inflight.pop(name, None)
-        if fl is not None:
-            orphans.insert(0, fl.grain)  # aborted, never completed: re-queue
         live = [w for w in self.workers if w not in dead]
         if not live and orphans:
             raise RuntimeError("all workers dead with grains pending")

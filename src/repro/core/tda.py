@@ -12,7 +12,8 @@ grain latency back to the server's PerformanceTracker and re-homogenizing
 mid-job — so a provider that slows down, dies or joins *during* a request
 still converges to equal finish times.  ``TDAServer.granulize`` remains the
 inspectable one-shot row-level plan (same tracker, same allotment math), but
-the executed assignment is the runtime's and shifts as grains migrate.  The default workload is the paper's
+the executed assignment is the runtime's and shifts as grains migrate.  The
+default workload is the paper's
 row-granulized matrix multiplication (optionally via the Pallas matmul
 kernel), so tests can assert that the distributed product is exactly the
 single-machine product.  Wall-clock on this 1-core container is sequential,
@@ -155,7 +156,9 @@ class ThinClient:
             raise ValueError(f"bad matmul shapes {a.shape} x {b.shape}")
         n = a.shape[0]
         n_grains = -(-n // block_rows)
-        rows_of = lambda g: (g * block_rows, min(n, (g + 1) * block_rows))
+        def rows_of(g):
+            return g * block_rows, min(n, (g + 1) * block_rows)
+
         unit = self.sim.unit_cost(n)
         self.runtime.clock = max(self.runtime.clock, self.server.clock)
         res = self.runtime.run(

@@ -1,7 +1,15 @@
-"""Serving launcher: continuous-batching engine + homogenized fleet dispatch.
+"""Serving launcher: a real continuous-batching engine fleet behind the
+homogenized dispatcher.
+
+``--replicas`` builds N *actual* ``DecodeEngine`` replicas — each item is
+``PERFxBATCH`` (step clock in engine steps/sec x slot count), so the fleet is
+heterogeneous in both speed and batch width.  Requests are served through
+``FleetServer`` in admission-controlled waves on the batched EngineExecutor
+path: slots stay full, tokens/sec heartbeats are measured, unstarted requests
+migrate off degrading replicas.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
-      --requests 20 --replicas 10:5:1
+      --requests 24 --replicas 8x4:4x2:2x1 --scenario halving --compare-serial
 """
 
 from __future__ import annotations
@@ -12,19 +20,71 @@ import jax
 import numpy as np
 
 from ..configs import ARCH_IDS, get_config
+from ..core.runtime import TimelineEvent
 from ..models.model import Model
-from ..serve.dispatch import HomogenizedDispatcher, Replica
+from ..serve.dispatch import Replica
 from ..serve.engine import DecodeEngine, Request
+from ..serve.fleet import FleetServer
+
+
+def parse_replicas(spec: str) -> list[tuple[float, int]]:
+    """'8x4:4x2:2x1' -> [(8.0, 4), (4.0, 2), (2.0, 1)] (steps/sec x slots)."""
+    out = []
+    for item in spec.split(":"):
+        perf, _, batch = item.partition("x")
+        out.append((float(perf), int(batch) if batch else 4))
+    return out
+
+
+def build_fleet(model, params, specs, max_seq: int,
+                queue_depth: int) -> FleetServer:
+    replicas = [Replica(f"r{i}", p) for i, (p, _) in enumerate(specs)]
+    engines = {
+        f"r{i}": DecodeEngine(model, params, max_batch=b, max_seq=max_seq,
+                              name=f"r{i}")
+        for i, (_, b) in enumerate(specs)
+    }
+    return FleetServer(replicas, engines, max_queue_depth=queue_depth)
+
+
+def make_requests(n: int, vocab: int, max_new: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    return [
+        Request(rid=i, prompt=list(rng.integers(0, vocab, int(rng.integers(2, 8)))),
+                max_new_tokens=max_new)
+        for i in range(n)
+    ]
+
+
+def scenario_timeline(scenario: str, specs, requests) -> tuple[TimelineEvent, ...]:
+    if scenario == "none":
+        return ()
+    cost = sum(len(r.prompt) + r.max_new_tokens for r in requests)
+    rate = sum(p * b for p, b in specs)           # fleet slot-tokens/sec
+    t = 0.25 * cost / rate                        # 25% into the first wave
+    if scenario == "halving":
+        return (TimelineEvent(t, "perf", "r0", perf=specs[0][0] / 2),)
+    return (TimelineEvent(t, "kill", "r0"),)      # scenario == "kill"
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2-1.5b")
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--replicas", default="10:5:1")
+    ap.add_argument("--replicas", default="8x4:4x2:2x1",
+                    help="colon-separated PERFxBATCH per replica "
+                         "(engine steps/sec x slot count)")
+    ap.add_argument("--queue-depth", type=int, default=8,
+                    help="admission control: max unstarted requests queued "
+                         "per replica per wave")
+    ap.add_argument("--scenario", choices=("none", "halving", "kill"),
+                    default="none",
+                    help="mid-bundle fault injected 25%% into the first wave")
+    ap.add_argument("--compare-serial", action="store_true",
+                    help="also run the per-request-serial baseline on a "
+                         "fresh fleet and report the batched speedup")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -33,25 +93,36 @@ def main() -> None:
                          "see examples/ for enc-dec/vlm paths")
     model = Model(cfg)
     params = model.init(jax.random.key(0))
-    eng = DecodeEngine(model, params, max_batch=args.max_batch,
-                       max_seq=args.max_seq)
-    rng = np.random.default_rng(0)
-    for i in range(args.requests):
-        plen = int(rng.integers(2, 8))
-        eng.submit(Request(
-            rid=i, prompt=list(rng.integers(0, cfg.vocab_size, plen)),
-            max_new_tokens=args.max_new,
-        ))
-    done = eng.run_until_drained()
-    print(f"served {len(done)} requests in {eng.steps} engine steps "
-          f"({eng.throughput:.2f} tokens/step, slots={args.max_batch})")
+    specs = parse_replicas(args.replicas)
 
-    perfs = [float(p) for p in args.replicas.split(":")]
-    disp = HomogenizedDispatcher([Replica(f"r{i}", p) for i, p in enumerate(perfs)])
-    for bundle in range(4):
-        res = disp.dispatch(args.requests * 10)
-    print(f"fleet dispatch (perfs {args.replicas}): shares={res.shares} "
-          f"makespan={res.makespan:.2f}s")
+    requests = make_requests(args.requests, cfg.vocab_size, args.max_new)
+    timeline = scenario_timeline(args.scenario, specs, requests)
+    fleet = build_fleet(model, params, specs, args.max_seq, args.queue_depth)
+    names = ", ".join(f"r{i}={p:g}steps/s x{b}slots"
+                      for i, (p, b) in enumerate(specs))
+    print(f"fleet: {names}  (queue depth {args.queue_depth}/replica, "
+          f"scenario {args.scenario})")
+    rep = fleet.serve(requests, timeline=timeline)
+    for k, b in enumerate(rep.bundles):
+        print(f"wave {k}: {b.n_requests:3d} reqs  {b.tokens_out:4d} tokens  "
+              f"{b.sim_time_s:7.2f}s  {b.tokens_per_s:7.2f} tok/s  "
+              f"quality={b.quality:.2f}  migrated={b.n_migrated}  "
+              f"shares={b.shares}")
+    print(f"served {rep.n_requests} requests: {rep.tokens_out} tokens in "
+          f"{rep.sim_time_s:.2f}s -> {rep.tokens_per_s:.2f} tok/s "
+          f"(worst quality {rep.worst_quality:.2f})")
+
+    if args.compare_serial:
+        serial_fleet = build_fleet(model, params, specs, args.max_seq,
+                                   args.queue_depth)
+        serial_reqs = make_requests(args.requests, cfg.vocab_size, args.max_new)
+        srep = serial_fleet.serve(
+            serial_reqs,
+            timeline=scenario_timeline(args.scenario, specs, serial_reqs),
+            batched=False,
+        )
+        print(f"serial baseline: {srep.tokens_per_s:.2f} tok/s -> batched "
+              f"speedup {rep.tokens_per_s / srep.tokens_per_s:.2f}x")
 
 
 if __name__ == "__main__":

@@ -19,10 +19,9 @@ Shared experts (DeepSeek/Qwen-MoE style) run densely beside the routed path.
 
 from __future__ import annotations
 
-import numpy as np
-
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..core.homogenization import scope_lengths
 from .config import ModelConfig

@@ -12,7 +12,6 @@ returns caches, one token).
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -1,4 +1,16 @@
 from .dispatch import DispatchResult, HomogenizedDispatcher, Replica
 from .engine import DecodeEngine, Request
+from .executor import EngineExecutor
+from .fleet import BundleStats, FleetReport, FleetServer
 
-__all__ = ["DispatchResult", "HomogenizedDispatcher", "Replica", "DecodeEngine", "Request"]
+__all__ = [
+    "DispatchResult",
+    "HomogenizedDispatcher",
+    "Replica",
+    "DecodeEngine",
+    "Request",
+    "EngineExecutor",
+    "BundleStats",
+    "FleetReport",
+    "FleetServer",
+]

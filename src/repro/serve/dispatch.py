@@ -4,14 +4,19 @@ The paper's scope-length allotment applied at the serving tier: replicas are
 service-providers, a request bundle is the linearly-divisible load, and the
 dispatcher (TDA server) assigns each replica a share proportional to its
 homogenized performance (EMA of measured tokens/sec heartbeats).  Dispatch
-now rides the async event-loop runtime (``core/runtime.py``): every request
+rides the async event-loop runtime (``core/runtime.py``): every request
 completion is a heartbeat, and unstarted requests migrate off stragglers
 mid-bundle — so all replicas drain their queues at the same moment (the
 homogenization line) even when a replica degrades *during* the bundle.
 
-``dispatch_to_engines`` drives *real* ``DecodeEngine`` replicas through the
-same loop: each grain is one request executed for real (exactly once), while
-bundle timing comes from the simulated replica perfs.
+``dispatch_to_engines`` drives *real* ``DecodeEngine`` replicas.  The default
+**batched** path plugs the engines into the runtime's incremental seam via
+``EngineExecutor``: every replica keeps its ``max_batch`` slots full, grain
+durations are measured engine-step counts on the replica's step clock, and
+heartbeats are the engines' own measured tokens/sec.  ``batched=False`` keeps
+the per-request-serial baseline (one request per grain, engine drained at
+completion time, modeled timing) for comparison — ``benchmarks/bench_serve.py``
+quantifies the gap.
 """
 
 from __future__ import annotations
@@ -21,6 +26,7 @@ from typing import Sequence
 
 from ..core.performance import PerformanceTracker
 from ..core.runtime import AsyncRuntime, RuntimeResult, TimelineEvent
+from .executor import EngineExecutor
 
 __all__ = ["Replica", "DispatchResult", "HomogenizedDispatcher"]
 
@@ -28,7 +34,10 @@ __all__ = ["Replica", "DispatchResult", "HomogenizedDispatcher"]
 @dataclasses.dataclass
 class Replica:
     name: str
-    perf: float            # true tokens/sec (hidden; learned via heartbeats)
+    perf: float            # true speed, hidden from the scheduler (learned
+                           # via heartbeats): tokens/sec for simulated
+                           # bundles, engine steps/sec for the batched
+                           # real-engine path
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +67,22 @@ class HomogenizedDispatcher:
     def clock(self) -> float:
         return self.runtime.clock
 
+    def _sync_replicas(self) -> None:
+        """Mirror the runtime's live fleet: timeline kills drop replicas,
+        timeline joins add them — ``self.replicas`` is never stale."""
+        self.replicas = dict(self.runtime.workers)
+
+    def _result(self, run: RuntimeResult) -> DispatchResult:
+        names = self.tracker.workers()
+        counts = run.shares()
+        return DispatchResult(
+            shares={n: counts.get(n, 0) for n in names},
+            makespan=run.makespan,
+            per_replica_time={n: run.worker_busy.get(n, 0.0) for n in names},
+            n_migrated=run.n_migrated,
+            quality=run.homogenization_quality(names),
+        )
+
     def dispatch(
         self,
         n_requests: int,
@@ -77,27 +102,31 @@ class HomogenizedDispatcher:
             timeline_relative=True,
             execute=execute,
         )
-        names = self.tracker.workers()
-        counts = run.shares()
-        return DispatchResult(
-            shares={n: counts.get(n, 0) for n in names},
-            makespan=run.makespan,
-            per_replica_time={n: run.worker_busy.get(n, 0.0) for n in names},
-            n_migrated=run.n_migrated,
-            quality=run.homogenization_quality(names),
-        )
+        self._sync_replicas()
+        return self._result(run)
 
     def dispatch_to_engines(
         self,
         engines: dict[str, object],
         requests: list,
         timeline: tuple[TimelineEvent, ...] = (),
+        batched: bool = True,
     ) -> tuple[DispatchResult, RuntimeResult | None]:
         """Real-execution path: route ``requests`` (serve.engine.Request) to
-        named DecodeEngines via the runtime.  Cost model: a request costs
-        prompt+max_new tokens; each engine runs its requests for real at
-        completion time, so every request is decoded exactly once even when
-        it migrates between queues mid-bundle."""
+        named DecodeEngines via the runtime.
+
+        ``batched=True`` (default): engines are incremental executors — a
+        replica's assigned requests are admitted into its slots as a bundle,
+        each runtime tick is one engine step, durations and tokens/sec
+        heartbeats are *measured* on the replica's step clock.
+
+        ``batched=False``: per-request-serial baseline — a request costs
+        prompt+max_new tokens, each engine drains one request at completion
+        time, timing comes from the simulated replica perfs.
+
+        Either way every request is decoded exactly once, even when it
+        migrates between replica queues (or off a killed replica) mid-bundle.
+        """
         unknown = set(engines) - set(self.replicas)
         if unknown:
             raise ValueError(f"engines for unknown replicas {sorted(unknown)}")
@@ -107,6 +136,15 @@ class HomogenizedDispatcher:
             # cannot execute (KeyError mid-bundle after partial decode).
             raise ValueError(f"live replicas without engines {sorted(unbacked)}")
 
+        if batched:
+            run = self.runtime.run(
+                len(requests),
+                executor=EngineExecutor(engines, requests),
+                timeline=timeline, timeline_relative=True,
+            )
+            self._sync_replicas()
+            return self._result(run), run
+
         def execute(replica, i):
             eng = engines[replica.name]
             req = requests[i]
@@ -114,26 +152,33 @@ class HomogenizedDispatcher:
             done = eng.run_until_drained()
             return done[-1] if done else None
 
-        cost = lambda i: float(len(requests[i].prompt) + requests[i].max_new_tokens)
+        def cost(i):
+            return float(len(requests[i].prompt) + requests[i].max_new_tokens)
+
         run = self.runtime.run(
             len(requests), grain_cost=cost, execute=execute,
             timeline=timeline, timeline_relative=True,
         )
-        names = self.tracker.workers()
-        counts = run.shares()
-        return DispatchResult(
-            shares={n: counts.get(n, 0) for n in names},
-            makespan=run.makespan,
-            per_replica_time={n: run.worker_busy.get(n, 0.0) for n in names},
-            n_migrated=run.n_migrated,
-            quality=run.homogenization_quality(names),
-        ), run
+        self._sync_replicas()
+        return self._result(run), run
 
     def degrade(self, name: str, perf: float) -> None:
         """True-perf shift outside a bundle (the tracker learns it from the
-        next bundle's heartbeats)."""
+        next bundle's heartbeats).  Consistent with sticky death: degrading
+        an unknown or dead replica fails loudly instead of silently mutating
+        a ghost."""
+        if name not in self.replicas:
+            raise KeyError(
+                f"unknown or dead replica {name!r} (kills are sticky; "
+                "rejoin it first)"
+            )
         self.replicas[name].perf = perf
 
     def kill(self, name: str) -> None:
-        self.tracker.mark_dead(name)
-        self.runtime.workers.pop(name, None)
+        """Between-bundle kill: drop the replica from the fleet *and* from
+        ``self.replicas`` (sticky-death semantics — the tracker rejects any
+        late heartbeat, and ``degrade`` on the name now raises)."""
+        if name not in self.replicas:
+            raise KeyError(f"unknown replica {name!r}")
+        self.replicas.pop(name)
+        self.runtime.remove_worker(name)

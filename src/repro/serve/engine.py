@@ -87,6 +87,29 @@ class DecodeEngine:
     def active(self) -> int:
         return sum(1 for s in self.slots if s.req is not None)
 
+    def cancel(self, rid: int) -> Request | None:
+        """Withdraw an unfinished request (queued or mid-decode in a slot)
+        and reset its decode state, so re-submitting it to another engine
+        decodes it from scratch — the exactly-once guarantee when a request
+        migrates off a killed engine mid-bundle.  Partial tokens this engine
+        already produced are discarded (the request never *completed* here).
+        Returns the request, or None if ``rid`` is unknown/already done."""
+        for i, r in enumerate(self.queue):
+            if r.rid == rid:
+                self.queue.pop(i)
+                return r
+        for slot in self.slots:
+            r = slot.req
+            if r is not None and r.rid == rid:
+                slot.req = None
+                slot.pos = 0
+                slot.fed = 0
+                r.out_tokens = []
+                r.done = False
+                r.finish_step = 0
+                return r
+        return None
+
     # ------------------------------------------------------------------ step
     def step(self) -> list[Request]:
         """Advance every active slot one token; returns finished requests.

@@ -1,0 +1,120 @@
+"""EngineExecutor: continuous-batching engines as first-class runtime executors.
+
+The serial real-execution path ran one request per grain and drained the
+engine at grain-completion time, so an engine's ``max_batch`` slots never
+held more than one live request and engine compute never overlapped
+dispatch.  This executor plugs a fleet of ``DecodeEngine`` replicas into the
+async runtime's *incremental* seam instead:
+
+  - each replica holds up to ``max_batch`` grains in flight (its slots): the
+    runtime admits a replica's assigned requests as a bundle and keeps the
+    slots topped up as sequences finish (continuous batching),
+  - the runtime fires one *tick* per engine step; a tick advances every
+    active slot one token, so slot-level batching and cross-replica dispatch
+    interleave instead of draining serially,
+  - a replica's ``perf`` is its *step clock* (engine steps per simulated
+    second); grain durations are measured step counts on that clock, not a
+    cost model,
+  - heartbeats are the engine's own measured tokens/sec
+    (``DecodeEngine.heartbeat``), so the tracker learns *effective*
+    throughput — batching efficiency included — and scope-length allotment
+    follows real engine speed,
+  - unstarted requests live in runtime-side queues and migrate off degrading
+    replicas; a killed replica's admitted requests are withdrawn via
+    ``DecodeEngine.cancel`` (decode state reset) and re-decoded from scratch
+    on the heir — exactly-once per *completed* decode.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Sequence
+
+from ..core.performance import PerfReport
+from ..core.runtime import GrainExecutor
+
+__all__ = ["EngineExecutor"]
+
+_EPS = 1e-12
+
+
+class EngineExecutor(GrainExecutor):
+    """One serving bundle: ``requests[g]`` is grain ``g``; workers are
+    replicas backed by the same-named engines.
+
+    ``engines`` may hold any object with the ``DecodeEngine`` duck type
+    (``max_batch``/``max_seq``/``queue``/``active``/``submit``/``step``/
+    ``heartbeat``/``cancel``) — tests drive the same executor with a
+    model-free stub engine at timing scale.
+    """
+
+    incremental = True
+    uniform_cost = None
+
+    def __init__(self, engines: Mapping[str, object], requests: Sequence):
+        self.engines = dict(engines)
+        self.requests = list(requests)
+        rids = [r.rid for r in self.requests]
+        if len(set(rids)) != len(rids):
+            raise ValueError("request rids must be unique within a bundle")
+        self._grain_of = {r.rid: g for g, r in enumerate(self.requests)}
+        max_fit = min(
+            (eng.max_seq for eng in self.engines.values()), default=0
+        )
+        for r in self.requests:
+            if len(r.prompt) + r.max_new_tokens > max_fit:
+                # Mid-bundle migration can land any request on any replica,
+                # so every request must fit the smallest engine.
+                raise ValueError(
+                    f"request {r.rid} needs {len(r.prompt) + r.max_new_tokens}"
+                    f" positions; smallest engine max_seq is {max_fit}"
+                )
+        for name, eng in self.engines.items():
+            if eng.active or eng.queue:
+                raise ValueError(
+                    f"engine {name!r} is not idle; one bundle per fleet at a time"
+                )
+            if eng.name != name:
+                # Heartbeats carry eng.name; a mismatch would teach the
+                # tracker a phantom worker and starve the real replica.
+                raise ValueError(
+                    f"engine for replica {name!r} reports as {eng.name!r}"
+                )
+
+    # -- cost model (drives allotment + ETAs; execution itself is measured) --
+    def cost(self, grain: int) -> float:
+        r = self.requests[grain]
+        return float(len(r.prompt) + r.max_new_tokens)
+
+    def remaining_cost(self, worker, grain: int) -> float:
+        r = self.requests[grain]
+        fed = len(r.prompt) if r.out_tokens else 0
+        return max(1.0, self.cost(grain) - fed - len(r.out_tokens))
+
+    # -- incremental seam ----------------------------------------------------
+    def concurrency(self, worker) -> int:
+        return self.engines[worker.name].max_batch
+
+    def step_seconds(self, worker) -> float:
+        """Simulated seconds per engine step: the replica's speed profile."""
+        return 1.0 / max(worker.perf, _EPS)
+
+    def tick_s(self, worker, now_s: float) -> float:
+        return self.step_seconds(worker)
+
+    def begin(self, worker, grain: int, now_s: float) -> None:
+        eng = self.engines.get(worker.name)
+        if eng is None:
+            raise KeyError(f"replica {worker.name!r} has no engine")
+        eng.submit(self.requests[grain])
+
+    def tick(self, worker, now_s: float) -> list[tuple[int, object]]:
+        finished = self.engines[worker.name].step()
+        return [(self._grain_of[r.rid], r) for r in finished]
+
+    def abort(self, worker, grain: int) -> None:
+        self.engines[worker.name].cancel(self.requests[grain].rid)
+
+    def heartbeat(self, worker, now_s: float) -> PerfReport | None:
+        return self.engines[worker.name].heartbeat(
+            now_s, seconds_per_step=self.step_seconds(worker)
+        )

@@ -1,0 +1,155 @@
+"""FleetServer: multi-bundle serving over a fleet of real decode engines.
+
+The production face of the serving tier: N heterogeneous replicas (distinct
+``max_batch`` slot counts and step clocks), one homogenized dispatcher, and a
+workload of many requests served back-to-back with **admission control** —
+each wave admits at most ``max_queue_depth`` unstarted requests per live
+replica, the rest wait in the server backlog.  Bounding the per-replica queue
+keeps requests runtime-side (hence migratable off a degrading replica) and
+keeps one replica's death from orphaning a deep queue.
+
+Each wave is one batched ``dispatch_to_engines`` bundle: engine slots stay
+full (continuous batching), tokens/sec heartbeats are measured, and the
+tracker state persists across waves, so wave k+1's allotment reflects what
+wave k actually observed.  Timeline events passed to ``serve`` are relative
+to its start; events landing past a wave's end carry over to the next wave
+(the runtime's pending-event semantics).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Sequence
+
+from ..core.runtime import TimelineEvent
+from .dispatch import HomogenizedDispatcher, Replica
+
+__all__ = ["BundleStats", "FleetReport", "FleetServer"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BundleStats:
+    """One wave: how many requests, how many measured output tokens, and how
+    well the replicas crossed the homogenization line."""
+
+    n_requests: int
+    tokens_out: int
+    sim_time_s: float
+    tokens_per_s: float
+    quality: float
+    n_migrated: int
+    shares: dict[str, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetReport:
+    bundles: tuple[BundleStats, ...]
+    n_requests: int
+    tokens_out: int
+    sim_time_s: float          # waves run back-to-back: sum of makespans
+    tokens_per_s: float
+    worst_quality: float
+
+
+class FleetServer:
+    """Admission-controlled serving of arbitrarily large workloads.
+
+    ``replicas[i].perf`` is the replica's step clock (engine steps per
+    simulated second); ``engines[name]`` backs each replica with a
+    ``DecodeEngine`` (or duck-typed equivalent).  One FleetServer owns one
+    dispatcher/tracker, so learned perfs persist across ``serve`` calls.
+    """
+
+    def __init__(
+        self,
+        replicas: Sequence[Replica],
+        engines: dict[str, object],
+        *,
+        max_queue_depth: int = 8,
+        homogenize: bool = True,
+        alpha: float = 0.5,
+    ):
+        if max_queue_depth < 1:
+            raise ValueError("max_queue_depth must be >= 1")
+        missing = {r.name for r in replicas} - set(engines)
+        if missing:
+            raise ValueError(f"replicas without engines {sorted(missing)}")
+        self.dispatcher = HomogenizedDispatcher(
+            replicas, homogenize=homogenize, alpha=alpha
+        )
+        self.engines = dict(engines)
+        self.max_queue_depth = max_queue_depth
+
+    @property
+    def tracker(self):
+        return self.dispatcher.tracker
+
+    def live_replicas(self) -> list[str]:
+        return [n for n in self.tracker.workers() if n in self.engines]
+
+    def serve(
+        self,
+        requests: Sequence,
+        timeline: tuple[TimelineEvent, ...] = (),
+        batched: bool = True,
+    ) -> FleetReport:
+        """Serve ``requests`` in admission-controlled waves; returns per-wave
+        and aggregate measured throughput.  ``batched=False`` routes every
+        wave through the per-request-serial baseline instead (same admission
+        control, no slot-level batching) — the benchmark's comparison axis."""
+        backlog = deque(requests)
+        bundles: list[BundleStats] = []
+        first = True
+        while backlog:
+            live = self.live_replicas()
+            if not live:
+                raise RuntimeError(
+                    f"no live replicas; {len(backlog)} requests stranded"
+                )
+            quota = self.max_queue_depth * len(live)
+            wave = [backlog.popleft() for _ in range(min(quota, len(backlog)))]
+            res, _ = self.dispatcher.dispatch_to_engines(
+                {n: self.engines[n] for n in live},
+                wave,
+                timeline=timeline if first else (),
+                batched=batched,
+            )
+            first = False
+            tokens = sum(len(r.out_tokens) for r in wave)
+            bundles.append(BundleStats(
+                n_requests=len(wave),
+                tokens_out=tokens,
+                sim_time_s=res.makespan,
+                tokens_per_s=tokens / max(res.makespan, 1e-12),
+                quality=res.quality,
+                n_migrated=res.n_migrated,
+                shares=res.shares,
+            ))
+        total_tokens = sum(b.tokens_out for b in bundles)
+        total_time = sum(b.sim_time_s for b in bundles)
+        return FleetReport(
+            bundles=tuple(bundles),
+            n_requests=sum(b.n_requests for b in bundles),
+            tokens_out=total_tokens,
+            sim_time_s=total_time,
+            tokens_per_s=total_tokens / max(total_time, 1e-12),
+            worst_quality=max((b.quality for b in bundles), default=1.0),
+        )
+
+    # -- fleet management (between waves) ------------------------------------
+    def degrade(self, name: str, perf: float) -> None:
+        self.dispatcher.degrade(name, perf)
+
+    def kill(self, name: str) -> None:
+        self.dispatcher.kill(name)
+
+    def rejoin(self, replica: Replica, engine: object,
+               perf_prior: float | None = None) -> None:
+        """Bring a (new or previously killed) replica into the fleet with its
+        backing engine — the explicit path back after sticky death."""
+        if engine.active or engine.queue:
+            raise ValueError(f"engine for {replica.name!r} is not idle")
+        self.engines[replica.name] = engine
+        self.dispatcher.runtime.add_worker(replica, perf_prior=perf_prior)
+        self.dispatcher._sync_replicas()

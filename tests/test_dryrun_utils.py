@@ -3,10 +3,9 @@ small-config construction.  Pure-function tests (no 512-device mesh here;
 the compile path itself is exercised by the dryrun CLI and results JSONs)."""
 
 import jax
-
-from repro.configs import SHAPES, cell_status, get_config
 import pytest
 
+from repro.configs import SHAPES, cell_status, get_config
 from repro.launch.dryrun import (
     _shape_bytes,
     _small_cfg,

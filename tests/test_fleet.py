@@ -1,0 +1,323 @@
+"""Batched fleet serving at timing scale: EngineExecutor + FleetServer.
+
+A model-free stub engine reproduces DecodeEngine's slot/step/heartbeat/cancel
+bookkeeping (deterministic token function instead of a forward pass), so the
+ISSUE acceptance numbers run in milliseconds in tier-1:
+
+  - the batched EngineExecutor path is >= 2x tokens/sec over the
+    per-request-serial path on the same request set,
+  - homogenization quality <= 1.3 under a mid-bundle perf-halving timeline,
+  - exactly-once decode when requests migrate off a killed engine mid-bundle
+    (partial tokens discarded, outputs equal the reference decode),
+  - FleetServer admission control bounds per-replica queue depth per wave.
+
+``tests/test_serve.py`` asserts the same invariants against real compiled
+DecodeEngines in the slow tier.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.core import TimelineEvent
+from repro.serve import (
+    EngineExecutor,
+    FleetServer,
+    HomogenizedDispatcher,
+    Replica,
+    Request,
+)
+
+
+def stub_token(rid: int, k: int) -> int:
+    """Deterministic 'decode': token k of request rid."""
+    return (rid * 31 + k * 7) % 97
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request | None = None
+    pos: int = 0
+    fed: int = 0
+
+
+class StubEngine:
+    """DecodeEngine's continuous-batching bookkeeping without the model:
+    same submit/step/cancel/heartbeat surface, token k of request rid is
+    ``stub_token(rid, k)``."""
+
+    def __init__(self, max_batch=4, max_seq=128, name="stub"):
+        self.name = name
+        self.max_batch = max_batch
+        self.max_seq = max_seq
+        self.slots = [_Slot() for _ in range(max_batch)]
+        self.queue: list[Request] = []
+        self.steps = 0
+        self.tokens_out = 0
+        self._hb_steps = 0
+        self._hb_tokens = 0
+
+    def submit(self, req: Request) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.max_seq:
+            raise ValueError("request exceeds engine max_seq")
+        req.submit_step = self.steps
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in self.slots:
+            if slot.req is None and self.queue:
+                slot.req = self.queue.pop(0)
+                slot.pos = 0
+                slot.fed = 0
+
+    @property
+    def active(self) -> int:
+        return sum(1 for s in self.slots if s.req is not None)
+
+    def step(self) -> list[Request]:
+        self._admit()
+        if self.active == 0:
+            return []
+        self.steps += 1
+        finished = []
+        for slot in self.slots:
+            r = slot.req
+            if r is None:
+                continue
+            slot.pos += 1
+            if slot.fed < len(r.prompt):
+                slot.fed += 1
+                if slot.fed < len(r.prompt):
+                    continue
+            r.out_tokens.append(stub_token(r.rid, len(r.out_tokens)))
+            self.tokens_out += 1
+            if len(r.out_tokens) >= r.max_new_tokens or slot.pos >= self.max_seq:
+                r.done = True
+                r.finish_step = self.steps
+                finished.append(r)
+                slot.req = None
+        return finished
+
+    def run_until_drained(self, max_steps=10_000) -> list[Request]:
+        done = []
+        for _ in range(max_steps):
+            done.extend(self.step())
+            if self.active == 0 and not self.queue:
+                break
+        return done
+
+    def cancel(self, rid: int) -> Request | None:
+        for i, r in enumerate(self.queue):
+            if r.rid == rid:
+                return self.queue.pop(i)
+        for slot in self.slots:
+            r = slot.req
+            if r is not None and r.rid == rid:
+                slot.req = None
+                slot.pos = 0
+                slot.fed = 0
+                r.out_tokens = []
+                r.done = False
+                r.finish_step = 0
+                return r
+        return None
+
+    def heartbeat(self, now_s, seconds_per_step=1.0):
+        from repro.core import PerfReport
+
+        steps = self.steps - self._hb_steps
+        tokens = self.tokens_out - self._hb_tokens
+        if steps <= 0 or tokens <= 0:
+            return None
+        self._hb_steps, self._hb_tokens = self.steps, self.tokens_out
+        return PerfReport(self.name, float(tokens), steps * seconds_per_step,
+                          now_s)
+
+
+def mk_requests(n, prompt_len=2, max_new=6):
+    return [
+        Request(rid=i, prompt=[(i + j) % 50 for j in range(prompt_len)],
+                max_new_tokens=max_new)
+        for i in range(n)
+    ]
+
+
+def expected_tokens(r: Request) -> list[int]:
+    return [stub_token(r.rid, k) for k in range(r.max_new_tokens)]
+
+
+def mk_fleet(specs, **kw):
+    """specs: list of (name, perf, max_batch)."""
+    replicas = [Replica(n, p) for n, p, _ in specs]
+    engines = {n: StubEngine(max_batch=b, name=n) for n, _, b in specs}
+    return FleetServer(replicas, engines, **kw), engines
+
+
+# ------------------------------------------------------- batched >= 2x serial
+def test_batched_fleet_at_least_2x_serial_tokens_per_s():
+    """The ISSUE acceptance number at timing scale: same request set, same
+    replica step clocks — slot-level continuous batching must at least double
+    fleet tokens/sec over one-request-per-grain serial draining."""
+    specs = [("a", 4.0, 4), ("b", 2.0, 2)]
+    serial_srv, _ = mk_fleet(specs, max_queue_depth=64)
+    serial = serial_srv.serve(mk_requests(24), batched=False)
+    batched_srv, _ = mk_fleet(specs, max_queue_depth=64)
+    batched = batched_srv.serve(mk_requests(24), batched=True)
+    assert batched.tokens_out == serial.tokens_out == 24 * 6
+    assert batched.tokens_per_s >= 2.0 * serial.tokens_per_s, (batched, serial)
+
+
+def test_batched_all_requests_decoded_correctly():
+    srv, engines = mk_fleet([("a", 4.0, 4), ("b", 2.0, 2), ("c", 1.0, 1)])
+    reqs = mk_requests(30, prompt_len=3, max_new=5)
+    rep = srv.serve(reqs)
+    assert rep.n_requests == 30
+    for r in reqs:
+        assert r.done and r.out_tokens == expected_tokens(r), r.rid
+    # work split across every replica, proportional-ish to slot*clock rate
+    shares = {n: sum(b.shares.get(n, 0) for b in rep.bundles) for n in engines}
+    assert all(shares[n] > 0 for n in engines)
+    assert shares["a"] > shares["c"]
+
+
+# ------------------------------------------- mid-bundle perf-halving quality
+def test_midbundle_perf_halving_quality_within_1_3():
+    """Replica 'a' halves its step clock mid-bundle; migration of unstarted
+    requests must keep the drain-time spread <= 1.3 (ISSUE acceptance)."""
+    specs = [("a", 4.0, 2), ("b", 4.0, 2)]
+    srv, _ = mk_fleet(specs, max_queue_depth=64)
+    srv.serve(mk_requests(64))          # warm: heartbeats learn true rates
+    # fleet rate ~ 8 slots-tokens/step-clock; fire the drop 20% into the wave
+    reqs = mk_requests(64, prompt_len=2, max_new=6)
+    est = sum(len(r.prompt) + r.max_new_tokens for r in reqs) / 16.0
+    rep = srv.serve(
+        reqs, timeline=(TimelineEvent(0.2 * est, "perf", "a", perf=2.0),)
+    )
+    assert rep.worst_quality <= 1.3, rep
+    assert sum(b.n_migrated for b in rep.bundles) > 0
+    for r in reqs:
+        assert r.out_tokens == expected_tokens(r)
+
+
+def test_tracker_learns_measured_batched_throughput():
+    """Heartbeats are engine-measured: a 4-slot replica on the same step
+    clock must learn ~4x the tokens/sec of a 1-slot replica, and the next
+    wave's shares must follow."""
+    srv, _ = mk_fleet([("wide", 2.0, 4), ("narrow", 2.0, 1)],
+                      max_queue_depth=64)
+    srv.serve(mk_requests(40, prompt_len=1, max_new=9))
+    pv = srv.tracker.perf_vector()
+    assert pv["wide"] > 2.5 * pv["narrow"], pv
+    rep = srv.serve(mk_requests(40, prompt_len=1, max_new=9))
+    shares = rep.bundles[0].shares
+    assert shares["wide"] > 2 * shares["narrow"], shares
+
+
+# ------------------------------------------------- exactly-once under a kill
+def test_exactly_once_decode_migrating_off_killed_engine():
+    """Kill a replica while it holds admitted (partially decoded) requests:
+    the partial tokens are discarded via cancel(), the requests re-decode
+    from scratch on survivors, and every output equals the reference."""
+    specs = [("a", 2.0, 2), ("b", 2.0, 2), ("c", 2.0, 2)]
+    srv, engines = mk_fleet(specs, max_queue_depth=64)
+    reqs = mk_requests(36, prompt_len=2, max_new=8)
+    est = sum(len(r.prompt) + r.max_new_tokens for r in reqs) / 12.0
+    rep = srv.serve(reqs, timeline=(TimelineEvent(0.3 * est, "kill", "a"),))
+    assert rep.n_requests == 36
+    # the killed engine really was mid-decode: it produced tokens, and its
+    # in-flight requests were withdrawn (no slot left occupied)
+    assert engines["a"].tokens_out > 0
+    assert engines["a"].active == 0 and not engines["a"].queue
+    for r in reqs:
+        assert r.done and r.out_tokens == expected_tokens(r), r.rid
+    # sticky death: the next wave runs entirely on the survivors
+    rep2 = srv.serve(mk_requests(12))
+    assert "a" not in rep2.bundles[0].shares
+    assert srv.live_replicas() == ["b", "c"]
+
+
+def test_fleet_server_no_live_replicas_raises():
+    srv, _ = mk_fleet([("a", 2.0, 2)])
+    srv.kill("a")
+    with pytest.raises(RuntimeError, match="no live replicas"):
+        srv.serve(mk_requests(4))
+
+
+# ------------------------------------------------------- admission control
+def test_admission_control_bounds_queue_depth_per_wave():
+    srv, _ = mk_fleet([("a", 2.0, 2), ("b", 2.0, 2)], max_queue_depth=3)
+    reqs = mk_requests(20)
+    rep = srv.serve(reqs)
+    assert rep.n_requests == 20
+    assert len(rep.bundles) == 4                    # ceil(20 / (3*2))
+    assert [b.n_requests for b in rep.bundles] == [6, 6, 6, 2]
+    for r in reqs:
+        assert r.out_tokens == expected_tokens(r)
+
+
+def test_admission_quota_shrinks_with_the_live_fleet():
+    srv, _ = mk_fleet([("a", 2.0, 2), ("b", 2.0, 2)], max_queue_depth=4)
+    srv.kill("b")
+    rep = srv.serve(mk_requests(10))
+    assert [b.n_requests for b in rep.bundles] == [4, 4, 2]
+    assert all(set(b.shares) == {"a"} for b in rep.bundles)
+
+
+def test_fleet_server_validates_construction():
+    with pytest.raises(ValueError, match="without engines"):
+        FleetServer([Replica("a", 1.0)], {})
+    with pytest.raises(ValueError, match="max_queue_depth"):
+        FleetServer([Replica("a", 1.0)], {"a": StubEngine()},
+                    max_queue_depth=0)
+
+
+def test_rejoin_brings_replica_back_with_fresh_engine():
+    srv, _ = mk_fleet([("a", 2.0, 2), ("b", 2.0, 2)])
+    srv.kill("a")
+    with pytest.raises(KeyError, match="sticky"):
+        srv.degrade("a", 1.0)
+    srv.rejoin(Replica("a", 2.0), StubEngine(max_batch=2, name="a"),
+               perf_prior=4.0)
+    assert srv.live_replicas() == ["a", "b"]
+    rep = srv.serve(mk_requests(16))
+    assert sum(b.shares.get("a", 0) for b in rep.bundles) > 0
+
+
+# ------------------------------------------------------- executor validation
+def test_engine_executor_rejects_bad_bundles():
+    reqs = mk_requests(4)
+    with pytest.raises(ValueError, match="unique"):
+        EngineExecutor({"a": StubEngine()}, reqs + [reqs[0]])
+    busy = StubEngine()
+    busy.submit(Request(rid=99, prompt=[1], max_new_tokens=2))
+    with pytest.raises(ValueError, match="not idle"):
+        EngineExecutor({"a": busy}, reqs)
+    small = StubEngine(max_seq=4)
+    with pytest.raises(ValueError, match="max_seq"):
+        EngineExecutor({"a": StubEngine(), "b": small},
+                       mk_requests(2, prompt_len=3, max_new=4))
+
+
+# --------------------------------------------- dispatcher sticky-death fixes
+def test_dispatcher_kill_prunes_replicas_and_degrade_raises():
+    d = HomogenizedDispatcher([Replica("a", 4.0), Replica("b", 4.0)])
+    d.kill("b")
+    assert set(d.replicas) == {"a"}                 # no stale entry
+    with pytest.raises(KeyError):
+        d.kill("b")                                 # kills are sticky
+    with pytest.raises(KeyError):
+        d.degrade("nope", 1.0)
+    with pytest.raises(KeyError):
+        d.degrade("b", 1.0)                         # gone from the fleet
+    d.degrade("a", 2.0)
+    assert d.replicas["a"].perf == 2.0
+
+
+def test_dispatcher_timeline_kill_also_prunes_replicas():
+    """A mid-bundle timeline kill must leave the dispatcher's replica table
+    consistent with the runtime's live fleet (the old stale-entry bug)."""
+    d = HomogenizedDispatcher([Replica("a", 2.0), Replica("b", 2.0)])
+    d.dispatch(40, timeline=(TimelineEvent(1.0, "kill", "b"),))
+    assert set(d.replicas) == {"a"}
+    with pytest.raises(KeyError):
+        d.degrade("b", 1.0)

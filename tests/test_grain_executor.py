@@ -95,7 +95,8 @@ def test_executor_and_kwargs_are_mutually_exclusive():
 
 
 def test_callable_executor_matches_kwarg_form():
-    cost = lambda g: 1.0 + (g % 2)
+    def cost(g):
+        return 1.0 + (g % 2)
     _, rt1 = mk_fleet([3.0, 1.0])
     r1 = rt1.run(40, grain_cost=cost)
     _, rt2 = mk_fleet([3.0, 1.0])

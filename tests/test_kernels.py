@@ -4,17 +4,15 @@ Property sweeps are deterministic seeded-rng parametrizations (no hypothesis
 offline) covering the same shape/seed envelopes the old strategies drew from.
 """
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.kernels.flash_attention.ops import mha
-from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.mamba_scan.ops import ssd
+from repro.kernels.mamba_scan.ref import ssd_scan_ref
 from repro.kernels.matmul.ops import matmul
 from repro.kernels.matmul.ref import matmul_ref
-from repro.kernels.mamba_scan.ops import ssd, ssd_chunked_jnp
-from repro.kernels.mamba_scan.ref import ssd_scan_ref
 
 RNG = np.random.default_rng(42)
 

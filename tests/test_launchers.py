@@ -71,11 +71,27 @@ def test_bench_hdp_cli(tmp_path):
 
 
 def test_serve_cli():
-    out = _run(["repro.launch.serve", "--arch", "qwen2-1.5b", "--requests", "3",
-                "--max-new", "3", "--max-seq", "32"])
+    out = _run(["repro.launch.serve", "--arch", "qwen2-1.5b", "--requests", "4",
+                "--max-new", "3", "--max-seq", "32", "--replicas", "4x2:2x1",
+                "--queue-depth", "4", "--scenario", "halving"])
     assert out.returncode == 0, out.stderr[-2000:]
-    assert "served 3 requests" in out.stdout
-    assert "makespan" in out.stdout
+    assert "served 4 requests" in out.stdout
+    assert "tok/s" in out.stdout
+
+
+def test_bench_serve_cli(tmp_path):
+    """Toy-scale smoke of the serving benchmark: JSON emitted with the
+    batched-vs-serial speedup and the fault-scenario quality."""
+    import json
+
+    out_path = str(tmp_path / "BENCH_serve.json")
+    out = _run(["benchmarks.bench_serve", "--requests", "12", "--max-new", "4",
+                "--out", out_path], timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    with open(out_path) as f:
+        data = json.load(f)
+    assert data["speedup"] >= 2.0
+    assert data["fault"]["worst_quality"] <= 1.3
 
 
 @pytest.mark.parametrize("arch,shape", [("qwen2-1.5b", "decode_32k")])

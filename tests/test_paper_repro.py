@@ -20,7 +20,6 @@ from repro.core import (
     PAPER_MACHINES,
     ClusterSim,
     OverheadModel,
-    PerformanceTracker,
     ServiceProvider,
     TDAServer,
     ThinClient,

@@ -5,8 +5,15 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import TimelineEvent
 from repro.models import LayerSpec, Model, ModelConfig, MoEConfig
-from repro.serve import DecodeEngine, HomogenizedDispatcher, Replica, Request
+from repro.serve import (
+    DecodeEngine,
+    FleetServer,
+    HomogenizedDispatcher,
+    Replica,
+    Request,
+)
 
 
 def tiny_model(moe=False):
@@ -144,10 +151,11 @@ def test_dispatch_midbundle_degradation_rehomogenizes():
 
 
 @pytest.mark.slow  # compiles two engines (~7s); covered by the slow tier
-def test_dispatch_to_real_engines_exactly_once():
-    """Real DecodeEngines behind the runtime: every request decoded exactly
-    once with outputs equal to the single-engine greedy reference, even
-    though requests migrate between replica queues."""
+def test_dispatch_to_real_engines_exactly_once_serial():
+    """Real DecodeEngines behind the runtime (per-request-serial baseline):
+    every request decoded exactly once with outputs equal to the
+    single-engine greedy reference, even though requests migrate between
+    replica queues."""
     model, params = tiny_model()
     engines = {
         "fast": DecodeEngine(model, params, max_batch=2, max_seq=32, name="fast"),
@@ -155,13 +163,61 @@ def test_dispatch_to_real_engines_exactly_once():
     }
     d = HomogenizedDispatcher([Replica("fast", 8.0), Replica("slow", 2.0)])
     reqs = [Request(rid=i, prompt=[1 + i, 7, 2], max_new_tokens=4) for i in range(8)]
-    res, run = d.dispatch_to_engines(engines, reqs)
+    res, run = d.dispatch_to_engines(engines, reqs, batched=False)
     assert sum(res.shares.values()) == 8
     assert res.shares["fast"] > res.shares["slow"]
     for r in reqs:
         assert len(r.out_tokens) == 4
         ref = _greedy_reference(model, params, r.prompt, 4, 32)
         assert r.out_tokens == ref, (r.rid, r.out_tokens, ref)
+
+
+@pytest.mark.slow  # compiles two engines; covered by the slow tier
+def test_batched_fleet_real_engines_match_reference():
+    """The batched EngineExecutor path on real engines: slots stay batched,
+    heartbeats are measured, and every output still equals the single-engine
+    greedy reference."""
+    model, params = tiny_model()
+    replicas = [Replica("fast", 4.0), Replica("slow", 1.0)]
+    engines = {
+        "fast": DecodeEngine(model, params, max_batch=4, max_seq=32, name="fast"),
+        "slow": DecodeEngine(model, params, max_batch=2, max_seq=32, name="slow"),
+    }
+    srv = FleetServer(replicas, engines, max_queue_depth=16)
+    reqs = [Request(rid=i, prompt=[1 + i % 5, 7, 2], max_new_tokens=4)
+            for i in range(12)]
+    rep = srv.serve(reqs)
+    assert rep.n_requests == 12 and rep.tokens_out == 48
+    for r in reqs:
+        ref = _greedy_reference(model, params, r.prompt, 4, 32)
+        assert r.out_tokens == ref, (r.rid, r.out_tokens, ref)
+    # the wide+fast replica carried most of the bundle
+    shares = rep.bundles[0].shares
+    assert shares["fast"] > shares["slow"]
+
+
+@pytest.mark.slow  # compiles three engines; covered by the slow tier
+def test_batched_fleet_real_engines_exactly_once_under_kill():
+    """Mid-bundle kill on real engines: admitted requests are withdrawn from
+    the dead engine (decode state reset) and re-decoded from scratch on the
+    survivors — outputs bitwise equal the never-killed reference."""
+    model, params = tiny_model()
+    replicas = [Replica(n, 2.0) for n in ("a", "b", "c")]
+    engines = {
+        n: DecodeEngine(model, params, max_batch=2, max_seq=32, name=n)
+        for n in ("a", "b", "c")
+    }
+    srv = FleetServer(replicas, engines, max_queue_depth=16)
+    reqs = [Request(rid=i, prompt=[2 + i % 6, 3], max_new_tokens=5)
+            for i in range(12)]
+    # ~84 token-units over ~6 slot-tokens/sec: kill 30% into the bundle
+    rep = srv.serve(reqs, timeline=(TimelineEvent(4.0, "kill", "a"),))
+    assert rep.n_requests == 12
+    assert engines["a"].active == 0 and not engines["a"].queue
+    for r in reqs:
+        ref = _greedy_reference(model, params, r.prompt, 5, 32)
+        assert r.out_tokens == ref, (r.rid, r.out_tokens, ref)
+    assert srv.live_replicas() == ["b", "c"]
 
 
 def test_engine_heartbeat_reports_throughput():
@@ -174,3 +230,44 @@ def test_engine_heartbeat_reports_throughput():
     assert hb is not None and hb.worker == "e0"
     assert hb.throughput == pytest.approx(eng.throughput)
     assert eng.heartbeat(2.0) is None          # nothing new since last report
+
+
+def test_engine_heartbeat_none_mid_prompt_feed_no_ema_poison():
+    """Steps that only consumed prompt tokens produce no output yet; the
+    heartbeat must return None (a zero-throughput report would poison the
+    tracker's EMA for a live engine) *without* resetting its counters, so
+    the next report still covers the prompt-feed steps."""
+    model, params = tiny_model()
+    eng = DecodeEngine(model, params, max_batch=1, max_seq=32, name="e0")
+    eng.submit(Request(rid=0, prompt=[3, 14, 15, 9, 2], max_new_tokens=3))
+    eng.step()
+    eng.step()                                 # 2 steps in, still mid-prompt
+    assert eng.tokens_out == 0 and eng.steps == 2
+    assert eng.heartbeat(1.0) is None          # no tokens yet: no report
+    eng.run_until_drained()
+    hb = eng.heartbeat(2.0, seconds_per_step=0.5)
+    assert hb is not None
+    # the None report did not consume the interval: all steps are covered
+    assert hb.work_done == float(eng.tokens_out) == 3.0
+    assert hb.elapsed_s == pytest.approx(eng.steps * 0.5)
+
+
+def test_engine_cancel_resets_decode_state():
+    """cancel() mid-decode discards partial tokens; re-submitting to a fresh
+    engine produces the same output as never having started (exactly-once
+    decode under migration)."""
+    model, params = tiny_model()
+    eng = DecodeEngine(model, params, max_batch=1, max_seq=32, name="e0")
+    req = Request(rid=7, prompt=[3, 14, 15], max_new_tokens=4)
+    eng.submit(req)
+    for _ in range(4):
+        eng.step()                             # prompt fed + 2 tokens out
+    assert len(req.out_tokens) == 2 and not req.done
+    got = eng.cancel(7)
+    assert got is req and req.out_tokens == [] and not req.done
+    assert eng.active == 0 and eng.cancel(7) is None     # idempotent
+    eng2 = DecodeEngine(model, params, max_batch=1, max_seq=32, name="e1")
+    eng2.submit(req)
+    eng2.run_until_drained()
+    ref = _greedy_reference(model, params, [3, 14, 15], 4, 32)
+    assert req.out_tokens == ref

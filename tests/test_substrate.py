@@ -11,8 +11,8 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import AsyncCheckpointer, available_steps, prune, restore, save
-from repro.data import GrainSpec, SyntheticSource, batch_from_grains, worker_batch
 from repro.core import GrainPlan
+from repro.data import GrainSpec, SyntheticSource, batch_from_grains, worker_batch
 from repro.optim import (
     AdamWConfig,
     adamw_update,
