@@ -1,19 +1,21 @@
 """HDP step-time benchmark: homogenized runtime vs static per-step plan.
 
-Measures the tentpole claim with the same event-loop substrate the trainer
-uses (``core/runtime.py``), timing-only (no model compile, so the bench runs
-in milliseconds at any scale): a fleet of pods runs per-step grain jobs, and
-mid-way through one step a scripted fault fires —
+Measures the tentpole claim through the declarative Cluster API (the same
+facade the trainer CLI uses), timing-only (no model compile, so the bench
+runs in milliseconds at any scale): a fleet of pods runs per-step grain jobs,
+and mid-way through one step a scripted fault fires —
 
-  perf_halving  one pod's true perf halves 25% into the step,
-  kill          one pod dies 25% into the step (its queue + in-flight grain
-                re-home to survivors).
+  perf_halving  ``halve:pod0@{fault_step}:25%``  (pod0's true perf halves
+                25% into the fault step),
+  kill          ``kill:pod0@{fault_step}:25%``   (pod0 dies; its queue +
+                in-flight grain re-home to survivors).
 
-For each scenario we run the **adaptive** runtime (mid-step migration +
-stealing armed, exactly ``HDPConfig.adaptive=True``) and the **static**
-baseline (each step frozen to its initial plan) over the *same* timeline, and
-record the simulated step time and homogenization quality of the fault step
-plus steady-state steps.  Output: ``BENCH_hdp.json``.
+For each scenario we run the **adaptive** cluster (mid-step migration +
+stealing armed) and the **static** baseline (each step frozen to its initial
+plan) over the *same* compiled Scenario, and record the simulated step time
+and homogenization quality of the fault step plus steady-state steps.  The
+exact scenario DSL string rides into the JSON for traceability.
+Output: ``BENCH_hdp.json``.
 
 Run:   PYTHONPATH=src python -m benchmarks.bench_hdp
 Toy:   PYTHONPATH=src python -m benchmarks.bench_hdp --grains 64 --steps 4
@@ -25,51 +27,44 @@ import argparse
 import json
 import time
 
-from repro.core import AsyncRuntime, PerformanceTracker, PerfReport, SimWorker, TimelineEvent
+from repro.cluster import Cluster, FleetSpec, Scenario, SimJob
 
-DEFAULT_PERFS = (4.0, 3.0, 2.0, 1.0)
+DEFAULT_FLEET = "4:3:2:1"
 SCENARIOS = ("perf_halving", "kill")
 
 
-def _mk_runtime(perfs, adaptive: bool) -> AsyncRuntime:
-    workers = [SimWorker(f"pod{i}", float(p)) for i, p in enumerate(perfs)]
-    tracker = PerformanceTracker(alpha=0.5, dead_after_s=1e9)
-    for w in workers:  # oracle-seeded: isolate the mid-step effect
-        tracker.observe(PerfReport(w.name, w.perf, 1.0, 0.0))
-    return AsyncRuntime(workers, tracker=tracker,
-                        rehomogenize=adaptive, steal=adaptive)
+def scenario_dsl(scenario: str, fleet: FleetSpec, fault_step: int) -> Scenario:
+    target = fleet.names[0]
+    if scenario == "perf_halving":
+        return Scenario.parse(f"halve:{target}@{fault_step}:25%")
+    if scenario == "kill":
+        return Scenario.parse(f"kill:{target}@{fault_step}:25%")
+    raise ValueError(f"unknown scenario {scenario!r}")
 
 
 def run_scenario(
-    scenario: str, adaptive: bool, *, perfs=DEFAULT_PERFS,
+    scenario: str, adaptive: bool, *, fleet: FleetSpec | str = DEFAULT_FLEET,
     n_grains: int = 512, n_steps: int = 8, fault_step: int = 3,
-    fault_frac: float = 0.25,
 ) -> dict:
-    """Per-step jobs on one runtime; the fault fires mid-way through
+    """Per-step jobs on one cluster; the fault fires mid-way through
     ``fault_step``.  Returns per-step times/qualities + wall-clock of the
     event loop itself."""
-    if scenario not in SCENARIOS:
-        raise ValueError(f"unknown scenario {scenario!r}")
-    rt = _mk_runtime(perfs, adaptive)
-    est_makespan = n_grains / sum(perfs)
-    step_times, qualities = [], []
+    fleet = FleetSpec.parse(fleet, prefix="pod")
+    sc = scenario_dsl(scenario, fleet, fault_step)
+    # Oracle-seeded perfs (priors='spec') isolate the mid-step effect.
+    cluster = Cluster(fleet, adaptive=adaptive, priors="spec")
     wall0 = time.perf_counter()
-    for s in range(n_steps):
-        timeline = ()
-        if s == fault_step:
-            t_ev = fault_frac * est_makespan
-            timeline = (
-                TimelineEvent(t_ev, "perf", "pod0", perf=perfs[0] / 2)
-                if scenario == "perf_halving"
-                else TimelineEvent(t_ev, "kill", "pod0"),
-            )
-        res = rt.run(n_grains, timeline=timeline, timeline_relative=True)
-        step_times.append(res.makespan)
-        qualities.append(res.homogenization_quality())
+    rep = cluster.simulate(SimJob(size=n_grains, n_jobs=n_steps), scenario=sc)
     wall_s = time.perf_counter() - wall0
+    # Step times exclude the modeled distribution overhead (constant across
+    # adaptive/static; the fault response is the compute-time story).
+    step_times = [p.metrics["compute_s"] for p in rep.phases]
+    qualities = [p.quality for p in rep.phases]
     return {
         "adaptive": adaptive,
         "scenario": scenario,
+        "scenario_dsl": str(sc),
+        "fleet": str(fleet),
         "step_times": step_times,
         "qualities": qualities,
         "fault_step_time": step_times[fault_step],
@@ -80,21 +75,24 @@ def run_scenario(
     }
 
 
-def run_bench(n_grains: int, n_steps: int, perfs=DEFAULT_PERFS,
+def run_bench(n_grains: int, n_steps: int, fleet: FleetSpec | str = DEFAULT_FLEET,
               fault_step: int = 3) -> dict:
+    fleet = FleetSpec.parse(fleet, prefix="pod")
     out = {
         "config": {
-            "perfs": list(perfs), "n_grains": n_grains, "n_steps": n_steps,
+            "fleet": str(fleet), "perfs": list(fleet.perfs),
+            "n_grains": n_grains, "n_steps": n_steps,
             "fault_step": fault_step,
         },
         "scenarios": {},
     }
     for scenario in SCENARIOS:
-        ad = run_scenario(scenario, True, perfs=perfs, n_grains=n_grains,
+        ad = run_scenario(scenario, True, fleet=fleet, n_grains=n_grains,
                           n_steps=n_steps, fault_step=fault_step)
-        st = run_scenario(scenario, False, perfs=perfs, n_grains=n_grains,
+        st = run_scenario(scenario, False, fleet=fleet, n_grains=n_grains,
                           n_steps=n_steps, fault_step=fault_step)
         out["scenarios"][scenario] = {
+            "scenario": ad["scenario_dsl"],
             "adaptive": ad,
             "static": st,
             # >1 means the homogenized runtime beat the static plan on the
@@ -109,20 +107,20 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--grains", type=int, default=512)
     ap.add_argument("--steps", type=int, default=8)
     ap.add_argument("--fault-step", type=int, default=3)
-    ap.add_argument("--perfs", default="4:3:2:1",
-                    help="colon-separated true pod perfs")
+    ap.add_argument("--fleet", "--perfs", dest="fleet", default=DEFAULT_FLEET,
+                    help="FleetSpec grammar (colon-separated pod perfs)")
     ap.add_argument("--out", default="BENCH_hdp.json")
     args = ap.parse_args(argv)
 
-    perfs = tuple(float(p) for p in args.perfs.split(":"))
-    result = run_bench(args.grains, args.steps, perfs=perfs,
+    result = run_bench(args.grains, args.steps, fleet=args.fleet,
                        fault_step=args.fault_step)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     for name, sc in result["scenarios"].items():
         ad, st = sc["adaptive"], sc["static"]
         print(
-            f"{name:14s} fault-step time {ad['fault_step_time']:.2f}s "
+            f"{name:14s} [{sc['scenario']}] fault-step time "
+            f"{ad['fault_step_time']:.2f}s "
             f"(adaptive, q={ad['fault_step_quality']:.2f}) vs "
             f"{st['fault_step_time']:.2f}s (static, "
             f"q={st['fault_step_quality']:.2f}) -> "

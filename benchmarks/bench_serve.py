@@ -2,19 +2,21 @@
 
 Real-model scale (a small but fully compiled decoder, real ``DecodeEngine``
 replicas; ``tests/test_fleet.py`` asserts the same numbers at timing scale
-with stub engines).  Three measurements on the same request distribution:
+with stub engines), driven through the declarative Cluster API.  Three
+measurements on the same request distribution:
 
   serial    one request per grain, each engine drained at grain completion,
             modeled timing (the pre-EngineExecutor serving path),
   batched   engines as incremental runtime executors: slots stay full,
             durations are measured engine-step counts on each replica's step
             clock, heartbeats are measured tokens/sec,
-  fault     the batched path with replica r0's step clock *halved
-            mid-bundle* after a warm wave — the homogenization-quality
-            number under mid-bundle degradation.
+  fault     the batched path with the first replica's step clock *halved
+            mid-bundle* (``halve:r0@25%``) after a warm wave — the
+            homogenization-quality number under mid-bundle degradation.
 
 Acceptance (ISSUE 3): batched >= 2x serial tokens/sec on the same request
-set; fault quality <= 1.3.  Output: ``BENCH_serve.json``.
+set; fault quality <= 1.3.  The fleet spec and scenario DSL strings ride
+into the JSON for traceability.  Output: ``BENCH_serve.json``.
 
 Run:   PYTHONPATH=src python -m benchmarks.bench_serve
 Toy:   PYTHONPATH=src python -m benchmarks.bench_serve --requests 12 --max-new 4
@@ -28,12 +30,8 @@ import time
 
 import jax
 
-from repro.launch.serve import (
-    build_fleet,
-    make_requests,
-    parse_replicas,
-    scenario_timeline,
-)
+from repro.cluster import Cluster, FleetSpec, Scenario, ServeJob
+from repro.launch.serve import make_requests
 from repro.models import LayerSpec, Model, ModelConfig
 
 
@@ -49,52 +47,59 @@ def bench_model() -> Model:
 
 def summarize(rep, wall_s: float) -> dict:
     return {
-        "n_requests": rep.n_requests,
-        "tokens_out": rep.tokens_out,
+        "n_requests": rep.metrics["n_requests"],
+        "tokens_out": int(rep.work_done),
         "sim_time_s": rep.sim_time_s,
-        "tokens_per_s": rep.tokens_per_s,
-        "worst_quality": rep.worst_quality,
-        "n_waves": len(rep.bundles),
+        "tokens_per_s": rep.throughput,
+        "worst_quality": rep.homogenization_quality(),
+        "n_waves": rep.n_phases,
         "wall_s": wall_s,
     }
 
 
-def run_bench(n_requests: int, max_new: int, specs, max_seq: int,
-              queue_depth: int, seed: int = 0) -> dict:
+def run_bench(n_requests: int, max_new: int, fleet: FleetSpec | str,
+              max_seq: int, queue_depth: int, seed: int = 0) -> dict:
+    fleet = FleetSpec.parse(fleet, prefix="r")
     model = bench_model()
     params = model.init(jax.random.key(0))
     vocab = model.cfg.vocab_size
+    scenario = Scenario.parse(f"halve:{fleet.names[0]}@25%")
 
-    def fresh():
-        return (build_fleet(model, params, specs, max_seq, queue_depth),
-                make_requests(n_requests, vocab, max_new, seed=seed))
+    def job(reqs, **kw):
+        return ServeJob(reqs, model=model, params=params, max_seq=max_seq,
+                        max_queue_depth=queue_depth, **kw)
 
     out = {"config": {
         "n_requests": n_requests, "max_new": max_new,
-        "replicas": [{"perf": p, "max_batch": b} for p, b in specs],
+        "fleet": str(fleet),
+        "replicas": [{"name": w.name, "perf": w.perf, "max_batch": w.concurrency}
+                     for w in fleet.workers],
         "max_seq": max_seq, "queue_depth": queue_depth,
-    }}
+    }, "scenario": str(scenario)}
 
-    fleet, reqs = fresh()
+    reqs = make_requests(n_requests, vocab, max_new, seed=seed)
     t0 = time.perf_counter()
-    out["serial"] = summarize(fleet.serve(reqs, batched=False),
-                              time.perf_counter() - t0)
+    rep = Cluster(fleet).serve(job(reqs, batched=False))
+    out["serial"] = summarize(rep, time.perf_counter() - t0)
 
-    fleet, reqs = fresh()
+    reqs = make_requests(n_requests, vocab, max_new, seed=seed)
     t0 = time.perf_counter()
-    out["batched"] = summarize(fleet.serve(reqs), time.perf_counter() - t0)
+    rep = Cluster(fleet).serve(job(reqs))
+    out["batched"] = summarize(rep, time.perf_counter() - t0)
     out["speedup"] = (
         out["batched"]["tokens_per_s"] / out["serial"]["tokens_per_s"]
     )
 
     # Mid-bundle perf-halving: warm wave teaches the tracker the true rates,
     # then r0's step clock halves 25% into the measured wave.
-    fleet, reqs = fresh()
-    fleet.serve(make_requests(n_requests, vocab, max_new, seed=seed + 1))
+    cluster = Cluster(fleet)
+    cluster.serve(job(make_requests(n_requests, vocab, max_new, seed=seed + 1)))
+    reqs = make_requests(n_requests, vocab, max_new, seed=seed)
     t0 = time.perf_counter()
-    rep = fleet.serve(reqs, timeline=scenario_timeline("halving", specs, reqs))
+    rep = cluster.serve(job(reqs), scenario=scenario)
     out["fault"] = summarize(rep, time.perf_counter() - t0)
-    out["fault"]["n_migrated"] = sum(b.n_migrated for b in rep.bundles)
+    out["fault"]["n_migrated"] = rep.n_migrated
+    out["fault"]["scenario"] = str(scenario)
     return out
 
 
@@ -103,15 +108,14 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--requests", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-seq", type=int, default=64)
-    ap.add_argument("--replicas", default="8x4:4x2:2x1",
-                    help="colon-separated PERFxBATCH per replica")
+    ap.add_argument("--fleet", "--replicas", dest="fleet", default="8x4:4x2:2x1",
+                    help="FleetSpec grammar: PERFxSLOTS per replica")
     ap.add_argument("--queue-depth", type=int, default=64,
                     help="large default keeps the fault scenario one wave")
     ap.add_argument("--out", default="BENCH_serve.json")
     args = ap.parse_args(argv)
 
-    specs = parse_replicas(args.replicas)
-    result = run_bench(args.requests, args.max_new, specs, args.max_seq,
+    result = run_bench(args.requests, args.max_new, args.fleet, args.max_seq,
                        args.queue_depth)
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
@@ -119,8 +123,8 @@ def main(argv: list[str] | None = None) -> dict:
           f"(modeled timing, engines drained per request)")
     print(f"batched: {result['batched']['tokens_per_s']:8.2f} tok/s "
           f"(measured engine clocks) -> speedup {result['speedup']:.2f}x")
-    print(f"fault  : {result['fault']['tokens_per_s']:8.2f} tok/s with r0 "
-          f"halved mid-bundle, quality "
+    print(f"fault  : {result['fault']['tokens_per_s']:8.2f} tok/s with "
+          f"[{result['fault']['scenario']}] mid-bundle, quality "
           f"{result['fault']['worst_quality']:.2f}, "
           f"{result['fault']['n_migrated']} requests migrated")
     print(f"wrote {args.out}")

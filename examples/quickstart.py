@@ -1,24 +1,20 @@
-"""Quickstart: the paper's experiment end-to-end in 30 seconds.
+"""Quickstart: the paper's experiment end-to-end in 30 seconds — one
+declarative Cluster, two views of it.
 
-A thin client asks the TDA server to multiply two matrices across a simulated
-9-machine heterogeneous LAN (the paper's testbed profile).  Providers compute
-their allotted row-blocks for real — with the Pallas matmul kernel in
-interpret mode — and the client combines and verifies the product.  We then
-sweep worker counts in both modes and print the Fig-3 style speedup table.
+A ``Cluster`` described by a single ``FleetSpec`` (the paper's 9-machine
+heterogeneous testbed profile) multiplies two matrices for real — with the
+Pallas matmul kernel in interpret mode — through the TDA triangle, verifying
+the distributed product against the single-machine one.  We then sweep worker
+counts in both allotment modes (equal-split vs homogenized, both through the
+same facade) and print the Fig-3 style speedup table.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
 import numpy as np
 
-from repro.core import (
-    PAPER_MACHINES,
-    ClusterSim,
-    OverheadModel,
-    ServiceProvider,
-    TDAServer,
-    ThinClient,
-)
+from repro.cluster import Cluster, FleetSpec, MatmulJob, SimJob
+from repro.core import PAPER_MACHINES
 from repro.kernels.matmul.ops import matmul
 
 
@@ -37,27 +33,30 @@ def main() -> None:
     a = rng.standard_normal((n, 64)).astype(np.float32)
     b = rng.standard_normal((64, 64)).astype(np.float32)
 
-    providers = [
-        ServiceProvider(f"sp{i}", p, matmul_fn=pallas_matmul)
-        for i, p in enumerate(PAPER_MACHINES)
-    ]
-    server = TDAServer(providers)
-    client = ThinClient(server)
+    fleet = FleetSpec.from_perfs(PAPER_MACHINES, prefix="sp")
+    cluster = Cluster(fleet)
 
     print("== TDA distributed matmul (homogenized, Pallas kernel) ==")
+    print(f"fleet: {fleet}")
     for job in range(3):
-        out, t = client.matmul(a, b)
-        err = float(np.abs(out - a @ b).max())
+        rep = cluster.simulate(MatmulJob(a, b, matmul_fn=pallas_matmul))
         # Rows actually executed per provider (the runtime's assignment, which
-        # can drift from the one-shot granulize plan as grains migrate).
-        rows_done = {w: 2 * c for w, c in sorted(client.last_result.shares().items())}
-        print(f"job {job}: sim_time={t:7.2f}s  max|err|={err:.2e}  "
+        # drifts from the one-shot plan as grains migrate).
+        rows_done = {w: 2 * c for w, c in sorted(rep.shares().items())}
+        print(f"job {job}: sim_time={rep.sim_time_s:7.2f}s  "
+              f"max|err|={rep.metrics['max_abs_err']:.2e}  "
               f"rows_executed={rows_done}")
 
     print("\n== Fig-3 style sweep (size 800, simulated timing) ==")
-    sim = ClusterSim(perfs=PAPER_MACHINES, overhead=OverheadModel(m=20.0))
-    het = sim.speedup_curve(800, homogenize=False)
-    hom = sim.speedup_curve(800, homogenize=True)
+    # Same facade, static one-shot plans, oracle perfs: homogenized
+    # scope-lengths vs the paper's equal-split baseline per worker count.
+    def speedup(k: int, homogenize: bool) -> float:
+        c = Cluster(fleet.take(k), homogenize=homogenize, adaptive=False,
+                    priors="spec")
+        return c.simulate(SimJob(size=800)).measured_speedup
+
+    het = [speedup(k, False) for k in range(1, len(fleet) + 1)]
+    hom = [speedup(k, True) for k in range(1, len(fleet) + 1)]
     print("workers | equal-split speedup | homogenized speedup")
     for k, (e, h) in enumerate(zip(het, hom, strict=True), start=1):
         bar_e = "#" * int(e * 10)

@@ -1,29 +1,33 @@
-"""Serving with homogenized dispatch + a real continuous-batching fleet.
+"""Serving with homogenized dispatch + a real continuous-batching fleet,
+through the declarative Cluster API.
 
 Part 1 — one real DecodeEngine (continuous batching over a tiny LM): requests
 of different lengths stream through a fixed slot pool; finished sequences are
 replaced immediately.
 
 Part 2 — batched fleet serving: three replicas of unequal step clocks *and*
-slot counts behind ``FleetServer``.  Engines are first-class runtime
-executors (``EngineExecutor``): slots stay full, durations are measured
-engine-step counts, heartbeats are measured tokens/sec.  The same request set
-through the per-request-serial path shows what slot-level batching buys.
+slot counts described by one ``FleetSpec`` string.  Engines are first-class
+runtime executors: slots stay full, durations are measured engine-step
+counts, heartbeats are measured tokens/sec.  The same request set through the
+per-request-serial path shows what slot-level batching buys.
 
-Part 3 — the tentpole scenario on real engines: a replica's step clock
-*halves mid-bundle*.  The static one-shot plan finishes at the straggler's
-pace; the runtime migrates unstarted requests off the degraded replica and
-holds the homogenization line (quality <= 1.3), with every output still
-bitwise equal to the single-engine greedy decode.
+Part 3 — the tentpole scenario on real engines, scripted in the Scenario DSL:
+``halve:r-fast@20%`` halves a replica's step clock mid-bundle.  The static
+one-shot plan finishes at the straggler's pace; the runtime migrates
+unstarted requests off the degraded replica and holds the homogenization line
+(quality <= 1.3), with every output still bitwise equal to the single-engine
+greedy decode.
 
 Run:  PYTHONPATH=src python examples/serve_hetero.py
 """
 
 import jax
 
-from repro.core import TimelineEvent
+from repro.cluster import Cluster, FleetSpec, ServeJob
 from repro.models import LayerSpec, Model, ModelConfig
-from repro.serve import DecodeEngine, FleetServer, Replica, Request
+from repro.serve import DecodeEngine, Request
+
+FLEET = FleetSpec.parse("r-fast=8x4,r-mid=4x2,r-slow=2x1")
 
 
 def demo_model():
@@ -66,48 +70,41 @@ def main() -> None:
           f"(tokens/step={eng.throughput:.2f} — continuous batching keeps slots busy)")
 
     # ------------- Part 2: batched fleet vs per-request-serial --------------
-    print("\n== batched fleet serving (3 replicas: 8steps/s x4, 4x2, 2x1) ==")
-    specs = [("r-fast", 8.0, 4), ("r-mid", 4.0, 2), ("r-slow", 2.0, 1)]
+    print(f"\n== batched fleet serving (fleet: {FLEET}) ==")
 
-    def fleet(**kw):
-        # Fresh engines per fleet: reused engines would carry unconsumed
-        # step/token counters into the next fleet's first measured heartbeat.
-        engines = {
-            n: DecodeEngine(model, params, max_batch=b, max_seq=64, name=n)
-            for n, _, b in specs
-        }
-        return FleetServer([Replica(n, p) for n, p, _ in specs], engines,
-                           max_queue_depth=kw.pop("max_queue_depth", 16), **kw)
+    def job(reqs, **kw):
+        # Fresh cluster per measurement: reused engines would carry
+        # unconsumed step/token counters into the first measured heartbeat.
+        return ServeJob(reqs, model=model, params=params, max_seq=64,
+                        max_queue_depth=kw.pop("max_queue_depth", 16), **kw)
 
-    serial = fleet().serve(mk_requests(24), batched=False)
-    batched = fleet().serve(mk_requests(24))
-    print(f"serial : {serial.tokens_per_s:7.2f} tok/s "
+    serial = Cluster(FLEET).serve(job(mk_requests(24), batched=False))
+    batched = Cluster(FLEET).serve(job(mk_requests(24)))
+    print(f"serial : {serial.throughput:7.2f} tok/s "
           f"(one request per grain, engines drained at completion)")
-    print(f"batched: {batched.tokens_per_s:7.2f} tok/s  shares="
-          f"{batched.bundles[0].shares}")
+    print(f"batched: {batched.throughput:7.2f} tok/s  shares="
+          f"{dict(batched.phases[0].shares)}")
     print(f"slot-level continuous batching buys "
-          f"{batched.tokens_per_s / serial.tokens_per_s:.2f}x fleet tokens/sec")
+          f"{batched.throughput / serial.throughput:.2f}x fleet tokens/sec")
 
     # -------- Part 3: mid-bundle degradation, adaptive vs static ------------
     print("\n== r-fast's step clock halves mid-bundle (48 requests) ==")
     results = {}
     for label, homogenize in (("async runtime", True),
                               ("equal-split static", False)):
-        srv = fleet(max_queue_depth=32, homogenize=homogenize)
-        srv.serve(mk_requests(48))        # warm wave: learn measured rates
+        cluster = Cluster(FLEET, homogenize=homogenize)
+        cluster.serve(job(mk_requests(48), max_queue_depth=32))  # warm wave
         reqs = mk_requests(48)
-        cost = sum(len(r.prompt) + r.max_new_tokens for r in reqs)
-        drop = TimelineEvent(0.2 * cost / 42.0, "perf", "r-fast", perf=4.0)
-        rep = srv.serve(reqs, timeline=(drop,))
-        srv.degrade("r-fast", 8.0)        # restore for the next run
-        b = rep.bundles[0]
+        rep = cluster.serve(job(reqs, max_queue_depth=32),
+                            scenario="halve:r-fast@20%")
+        p = rep.phases[0]
         results[label] = rep
-        print(f"{label:16s}: {b.tokens_per_s:7.2f} tok/s "
-              f"quality={b.quality:.3f} migrated={b.n_migrated} "
-              f"shares={b.shares}")
+        print(f"{label:16s}: {p.metrics['tokens_per_s']:7.2f} tok/s "
+              f"quality={p.quality:.3f} migrated={p.n_migrated} "
+              f"shares={dict(p.shares)}")
         assert all(r.done for r in reqs)
-    ada = results["async runtime"].worst_quality
-    sta = results["equal-split static"].worst_quality
+    ada = results["async runtime"].homogenization_quality()
+    sta = results["equal-split static"].homogenization_quality()
     print(f"re-homogenization holds the line: quality {sta:.2f} -> {ada:.2f}")
     assert ada <= 1.3
     assert ada < sta

@@ -1,14 +1,15 @@
 """End-to-end driver: train an LM with runtime-driven Homogenized Data
-Parallelism.
+Parallelism, through the declarative Cluster API.
 
-Four simulated pods with heterogeneous throughput train one model; each step's
-microbatch grains stream through the async runtime, every grain completion is
-a heartbeat, and the coordinator re-allots work *within* the step.  Mid-run we
-script a **mid-step** straggler (pod throttles 5x while its queue is half
-drained — watch unstarted grains migrate off it the same step) and then kill a
-pod outright (elastic replan).  A checkpoint/restart at the end proves
-fault-tolerant resume: the restarted coordinator plans from the checkpointed
-*learned* perf vector, not neutral priors.
+Four simulated pods with heterogeneous throughput (one ``FleetSpec`` string)
+train one model; each step's microbatch grains stream through the async
+runtime, every grain completion is a heartbeat, and the coordinator re-allots
+work *within* the step.  The fault script is one Scenario DSL string: pod1
+throttles 5x **mid-step** a third of the way in (watch unstarted grains
+migrate off it the same step), then pod3 dies outright at two thirds (elastic
+replan).  A checkpoint/restart at the end proves fault-tolerant resume: the
+restarted coordinator plans from the checkpointed *learned* perf vector, not
+neutral priors.
 
 Run:      PYTHONPATH=src python examples/train_hetero.py
 Bigger:   PYTHONPATH=src python examples/train_hetero.py --d-model 768 --layers 12 \
@@ -18,11 +19,11 @@ Bigger:   PYTHONPATH=src python examples/train_hetero.py --d-model 768 --layers 
 import argparse
 import shutil
 
-from repro.core import OverheadModel, TimelineEvent
-from repro.data import GrainSpec
+from repro.cluster import Cluster, FleetSpec, TrainJob
 from repro.models import LayerSpec, Model, ModelConfig
 from repro.optim import AdamWConfig
-from repro.train import HDPConfig, HDPTrainer, Pod
+
+FLEET = FleetSpec.parse("pod0=4,pod1=3,pod2=2,pod3=1")
 
 
 def build_model(d_model: int, layers: int, vocab: int) -> Model:
@@ -60,56 +61,49 @@ def main() -> None:
     )
     print(f"model: {n_params/1e6:.1f}M params")
 
-    pods = [Pod("pod0", 4.0), Pod("pod1", 3.0), Pod("pod2", 2.0), Pod("pod3", 1.0)]
-    cfg = HDPConfig(
-        total_grains=args.grains,
-        grain_spec=GrainSpec(grain_size=1, seq_len=args.seq, vocab_size=args.vocab),
-        overhead=OverheadModel(m=4.0),
-        ckpt_dir=args.ckpt, ckpt_every=min(50, max(1, args.steps // 4)),
-    )
-    tr = HDPTrainer(model, pods, cfg,
-                    opt_cfg=AdamWConfig(peak_lr=1e-3, warmup_steps=20,
-                                        decay_steps=args.steps, weight_decay=0.0))
-
     straggle_at = args.steps // 3
     kill_at = 2 * args.steps // 3
-    for s in range(args.steps):
-        if s == straggle_at:
-            # Mid-STEP event: pod1 throttles 5x once the step is ~30% done.
-            # Its unstarted grains migrate to faster queues the same step.
-            est = tr.history[-1]["step_time"] if tr.history else 1.0
-            t_ev = tr.clock + 0.3 * est
-            print(f"--- step {s}: pod1 throttles 5x at t={t_ev:.1f}s "
-                  f"(mid-step straggler) ---")
-            tr.schedule(TimelineEvent(t_ev, "perf", "pod1", perf=0.6))
-        if s == kill_at:
-            print(f"--- step {s}: pod3 dies (elastic replan) ---")
-            tr.kill("pod3")
-        rec = tr.step(s)
-        if s % 20 == 0 or s in (straggle_at, kill_at, args.steps - 1):
-            plan = " ".join(f"{k}:{v}" for k, v in rec["plan"].items())
+    # pod1 throttles 5x once step `straggle_at` is ~30% done (mid-step —
+    # its unstarted grains migrate the same step); pod3 dies at `kill_at`.
+    scenario = (f"degrade:pod1*0.2@{straggle_at}:30%;"
+                f"kill:pod3@{kill_at}:0%")
+    print(f"fleet: {FLEET}\nscenario: {scenario}")
+
+    opt = AdamWConfig(peak_lr=1e-3, warmup_steps=20, decay_steps=args.steps,
+                      weight_decay=0.0)
+    job = TrainJob(
+        model, steps=args.steps, grains=args.grains, seq_len=args.seq,
+        vocab_size=args.vocab, opt=opt, ckpt_dir=args.ckpt,
+        ckpt_every=min(50, max(1, args.steps // 4)),
+    )
+    rep = Cluster(FLEET).train(job, scenario=scenario)
+    for p in rep.phases:
+        if p.index % 20 == 0 or p.index in (straggle_at, kill_at, args.steps - 1):
+            plan = " ".join(f"{k}:{v}" for k, v in p.shares.items())
             print(
-                f"step {s:4d} loss={rec['loss']:.4f} "
-                f"step_time={rec['step_time']:6.2f}s q={rec['quality']:.2f} "
-                f"mig={rec['n_migrated']} plan[{plan}]"
+                f"step {p.index:4d} loss={p.metrics['loss']:.4f} "
+                f"step_time={p.sim_time_s:6.2f}s q={p.quality:.2f} "
+                f"mig={p.n_migrated} plan[{plan}]"
             )
-    if tr.ckpt:
-        tr.ckpt.wait()
+    print(rep.summary())
 
     print("\n--- simulated restart from checkpoint ---")
-    tr2 = HDPTrainer(model, [Pod("pod0", 4.0), Pod("pod1", 0.6), Pod("pod2", 2.0)],
-                     cfg, opt_cfg=AdamWConfig(peak_lr=1e-3, warmup_steps=20,
-                                              decay_steps=args.steps,
-                                              weight_decay=0.0))
+    # The restarted coordinator re-declares the fleet as it now stands
+    # (pod1 slow, pod3 gone) and resumes from the checkpoint's learned perfs.
+    rep2 = Cluster("pod0=4,pod1=0.6,pod2=2").train(
+        TrainJob(model, steps=args.steps + 10, grains=args.grains,
+                 seq_len=args.seq, vocab_size=args.vocab, opt=opt,
+                 ckpt_dir=args.ckpt)
+    )
+    tr2 = rep2.artifact
     p = tr2.plan_preview()
-    print(f"resumed at step {tr2.start_step}; first plan from LEARNED perfs: "
-          + " ".join(f"{w}:{s}" for w, s in zip(p.workers, p.shares)))
-    for s in range(tr2.start_step, tr2.start_step + 10):
-        rec = tr2.step(s)
-    print(f"post-restart loss={rec['loss']:.4f} (finite => state intact)")
+    print(f"resumed at step {rep2.metrics['start_step']}; plans from LEARNED "
+          "perfs: " + " ".join(f"{w}:{s}" for w, s in zip(p.workers, p.shares)))
+    print(f"post-restart loss={rep2.metrics['final_loss']:.4f} "
+          "(finite => state intact)")
 
-    first = tr.history[0]["loss"]
-    last = tr.history[-1]["loss"]
+    first = rep.metrics["first_loss"]
+    last = rep.metrics["final_loss"]
     print(f"\nloss {first:.4f} -> {last:.4f} "
           f"({'OK: decreased' if last < first else 'WARN: did not decrease'})")
 

@@ -1,0 +1,43 @@
+"""One declarative Cluster API: fleet spec, scenario DSL, unified run reports.
+
+  spec      FleetSpec / WorkerSpec — the declarative fleet description
+            (compact-string grammar generalizing --replicas PERFxBATCH)
+  scenario  Scenario — named fault scripts compiled to TimelineEvent streams
+  profiles  BackendProfile — per-backend overhead slopes, calibrated via
+            overhead_slope_fit (never hand-picked constants)
+  report    RunReport / PhaseStats / WorkerTimeline — the one result type
+  api       Cluster — .simulate(job) / .train(job) / .serve(job)
+"""
+
+from .api import Cluster, MatmulJob, ServeJob, SimJob, TrainJob
+from .profiles import (
+    DEFAULT_PROFILE,
+    PROFILES,
+    BackendProfile,
+    get_profile,
+    register_profile,
+)
+from .report import PhaseStats, RunReport, WorkerTimeline
+from .scenario import Clause, Scenario, TimeRef
+from .spec import FleetSpec, WorkerSpec
+
+__all__ = [
+    "Cluster",
+    "SimJob",
+    "MatmulJob",
+    "TrainJob",
+    "ServeJob",
+    "FleetSpec",
+    "WorkerSpec",
+    "Scenario",
+    "Clause",
+    "TimeRef",
+    "BackendProfile",
+    "PROFILES",
+    "DEFAULT_PROFILE",
+    "get_profile",
+    "register_profile",
+    "RunReport",
+    "PhaseStats",
+    "WorkerTimeline",
+]

@@ -1,0 +1,561 @@
+"""The Cluster facade: one declarative entry point for sim, train and serve.
+
+The paper's promise is that homogenization is *transparent*: you describe
+your fleet once and the TDA machinery does the rest.  PRs 1-3 converged the
+execution layer onto one ``AsyncRuntime``/``GrainExecutor`` substrate, but
+the entry layer stayed four parallel APIs.  ``Cluster`` closes that gap:
+
+    cluster = Cluster("fast=8x4,mid=4x2,slow=2x1")
+    sim   = cluster.simulate(SimJob(size=800, n_jobs=3))
+    train = cluster.train(TrainJob(model, steps=50), scenario="halve:mid@3:25%")
+    serve = cluster.serve(ServeJob(requests, model=m, params=p),
+                          scenario="kill:slow@25%")
+
+Same ``FleetSpec``, same ``Scenario`` DSL, same ``RunReport`` out — the
+workloads differ only in what a grain *is* (a matrix row-block, a microbatch
+gradient, a decode request), which is exactly the ``GrainExecutor`` seam's
+job to hide.
+
+Construction knobs (all fleet-wide):
+
+  ``homogenize``  scope-length allotment vs the paper's equal-split baseline,
+  ``adaptive``    mid-run re-homogenization + stealing vs frozen initial plans,
+  ``priors``      'neutral' (tracker learns perfs from heartbeats — the
+                  closed-loop story) or 'spec' (the declared perfs are oracle
+                  priors — isolates mid-run fault response, as benchmarks do).
+
+A ``Cluster`` is long-lived: repeated ``.simulate``/``.serve`` calls reuse
+the same runtime/fleet-server, so learned perf state persists across calls
+(warm-up waves teach the tracker exactly like production traffic would).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Sequence
+
+import numpy as np
+
+from ..core.homogenization import predicted_speedup, scope_lengths
+from ..core.performance import PerformanceTracker
+from ..core.runtime import AsyncRuntime, SimWorker
+from ..core.simulate import ClusterSim
+from .profiles import DEFAULT_PROFILE
+from .report import PhaseStats, RunReport, merge_worker_timelines
+from .scenario import Scenario
+from .spec import FleetSpec, WorkerSpec
+
+__all__ = ["SimJob", "MatmulJob", "TrainJob", "ServeJob", "Cluster"]
+
+_EPS = 1e-12
+
+
+# --------------------------------------------------------------- job specs
+@dataclasses.dataclass(frozen=True)
+class SimJob:
+    """Timing-only granulized job (the paper's §3 testbed): ``size`` rows of
+    a size-``size`` matmul per job, ``n_jobs`` jobs back-to-back on the same
+    learning tracker."""
+
+    size: int = 800
+    n_jobs: int = 1
+    jitter: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class MatmulJob:
+    """Real distributed matmul through the TDA triangle: values computed for
+    real (optionally via the Pallas kernel), timing from the cost model."""
+
+    a: Any
+    b: Any
+    n_jobs: int = 1
+    block_rows: int = 2
+    matmul_fn: Callable | None = None
+    verify: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainJob:
+    """Homogenized Data Parallel training of ``model`` for ``steps`` steps;
+    each step is one runtime job of ``grains`` microbatch grains."""
+
+    model: Any
+    steps: int
+    grains: int = 8
+    seq_len: int = 64
+    vocab_size: int | None = None
+    grain_size: int = 1
+    opt: Any = None
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    compress_grads: bool = False
+    jitter: float = 0.0
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeJob:
+    """A request workload over real (or stub) decode engines.  Engines come
+    from ``engine_factory(spec)`` or are built from ``model``/``params`` with
+    ``spec.concurrency`` slots each."""
+
+    requests: Sequence
+    model: Any = None
+    params: Any = None
+    engine_factory: Callable[[WorkerSpec], Any] | None = None
+    max_seq: int = 64
+    max_queue_depth: int = 8
+    batched: bool = True
+    fresh: bool = False          # force a new fleet server (fresh engines + tracker)
+
+
+# ------------------------------------------------------------------ facade
+class Cluster:
+    def __init__(
+        self,
+        fleet: FleetSpec | str | Sequence,
+        *,
+        homogenize: bool = True,
+        adaptive: bool = True,
+        priors: str = "neutral",
+        default_profile: str | None = None,
+        replan_threshold: float = 0.05,
+        seed: int = 0,
+        name_prefix: str = "w",
+    ):
+        self.fleet = FleetSpec.parse(fleet, prefix=name_prefix)
+        if priors not in ("neutral", "spec"):
+            raise ValueError(
+                f"priors must be 'neutral' or 'spec', got {priors!r}"
+            )
+        self.homogenize = homogenize
+        self.adaptive = adaptive
+        self.priors = priors
+        self.default_profile = default_profile
+        self.replan_threshold = replan_threshold
+        self.seed = seed
+        # Long-lived executors (lazy; learned perf state persists across calls).
+        self._sim_rt: AsyncRuntime | None = None
+        self._sim_rng: np.random.Generator | None = None
+        self._tda_client = None
+        self._server = None
+        self._serve_signature: tuple | None = None
+        self._serve_specs: dict[str, WorkerSpec] = {}
+        self._engine_factory: Callable[[WorkerSpec], Any] | None = None
+
+    # -- shared helpers ------------------------------------------------------
+    @property
+    def _rehomogenize(self) -> bool:
+        return self.adaptive and self.homogenize
+
+    def _overhead_model(self):
+        return self.fleet.overhead_model(self.default_profile)
+
+    def _spec_priors(self, tracker: PerformanceTracker, rate: bool = False,
+                     now_s: float = 0.0) -> None:
+        for w in self.fleet.workers:
+            tracker.rejoin(w.name, w.rate if rate else w.perf, now_s)
+
+    def _phase_estimate(self, work: int, unit: float,
+                        rates: Sequence[float]) -> float:
+        """Estimated duration of one phase: the slowest worker's share under
+        the homogenized scope-length plan (tighter than work/sum(rates) under
+        integer rounding).  Deliberately independent of the homogenize/
+        adaptive flags so adaptive-vs-static comparisons compile a Scenario
+        to identical event times."""
+        shares = scope_lengths(int(work), list(rates))
+        return max(
+            (s * unit / r for s, r in zip(shares, rates) if s > 0),
+            default=0.0,
+        )
+
+    def _speedups(self, work: float, rates: Sequence[float], measured_s: float,
+                  overhead=None, load: float = 0.0) -> tuple[float, float]:
+        """(predicted, measured) speedup vs the best single worker, paper
+        Eq. 6 semantics: T_standalone / T_fleet.  ``work`` is in time-scaled
+        units (drives T_standalone); ``load`` is the overhead model's input
+        (work *units* — rows/grains — matching what the run itself charges)."""
+        r_max = max(rates)
+        t_alone = work / r_max
+        pred = predicted_speedup(t_alone, list(rates), r_max,
+                                 load=load if overhead else 0.0,
+                                 overhead=overhead)
+        return pred, t_alone / max(measured_s, _EPS)
+
+    # =================================================================== sim
+    def simulate(self, job: SimJob | MatmulJob | int = SimJob(), *,
+                 scenario: Scenario | str | None = None) -> RunReport:
+        """Run a granulized job (timing-only ``SimJob`` or real-values
+        ``MatmulJob``) under an optional fault ``scenario``."""
+        sc = Scenario.parse(scenario)
+        if isinstance(job, int):
+            job = SimJob(size=job)
+        if isinstance(job, MatmulJob):
+            return self._simulate_matmul(job, sc)
+        return self._simulate_timing(job, sc)
+
+    def _simulate_timing(self, job: SimJob, sc: Scenario) -> RunReport:
+        if job.size < 1 or job.n_jobs < 1:
+            raise ValueError("SimJob needs size >= 1 and n_jobs >= 1")
+        if self._sim_rt is None:
+            tracker = PerformanceTracker(alpha=0.5, dead_after_s=1e18)
+            if self.priors == "spec":
+                self._spec_priors(tracker)
+            self._sim_rt = AsyncRuntime(
+                [SimWorker(w.name, w.perf) for w in self.fleet.workers],
+                tracker=tracker,
+                homogenize=self.homogenize,
+                rehomogenize=self._rehomogenize,
+                steal=self._rehomogenize,
+                replan_threshold=self.replan_threshold,
+            )
+            self._sim_rng = np.random.default_rng(self.seed)
+        rt = self._sim_rt
+        unit = ClusterSim.unit_cost(job.size)
+        ovh_model = self._overhead_model()
+        ovh = ovh_model(job.size)
+        est_phase = self._phase_estimate(job.size, unit, self.fleet.perfs)
+        timeline = sc.compile(self.fleet, phase_s=est_phase,
+                              stride_s=est_phase + ovh)
+        jit = sc.jitter or job.jitter
+        rng = self._sim_rng
+
+        def duration(worker, cost, now_s):
+            t = cost / max(worker.perf, _EPS)
+            if jit:
+                t *= 1.0 + jit * float(rng.standard_normal())
+            return max(t, 0.0)
+
+        phases, spans = [], []
+        elapsed = 0.0
+        for k in range(job.n_jobs):
+            res = rt.run(job.size, grain_cost=unit, duration_fn=duration,
+                         timeline=timeline if k == 0 else (),
+                         timeline_relative=True)
+            start = res.end_s - res.makespan
+            counts = res.shares()
+            phases.append(PhaseStats(
+                k, "job", float(job.size), res.makespan + ovh,
+                res.homogenization_quality(), res.n_migrated, counts,
+                metrics={"compute_s": res.makespan, "overhead_s": ovh,
+                         "n_steals": res.n_steals},
+            ))
+            spans.append((res.worker_busy,
+                          {w: f - start + elapsed
+                           for w, f in res.worker_finish.items()},
+                          counts))
+            elapsed += res.makespan + ovh
+            rt.clock += ovh
+        work = float(job.size * job.n_jobs)
+        total_s = sum(p.sim_time_s for p in phases)
+        pred, meas = self._speedups(
+            job.size * unit, [p for p in self.fleet.perfs],
+            phases[-1].sim_time_s, overhead=ovh_model, load=float(job.size),
+        )
+        return RunReport(
+            kind="simulate", fleet=str(self.fleet), scenario=str(sc),
+            phases=tuple(phases), work_done=work, sim_time_s=total_s,
+            throughput=work / max(total_s, _EPS),
+            predicted_speedup=pred, measured_speedup=meas,
+            worker_timelines=merge_worker_timelines(spans),
+            metrics={"overhead_slope": ovh_model.m, "unit_cost": unit},
+        )
+
+    def _simulate_matmul(self, job: MatmulJob, sc: Scenario) -> RunReport:
+        from ..core.tda import ServiceProvider, TDAServer, ThinClient
+
+        a, b = np.asarray(job.a), np.asarray(job.b)
+        n = a.shape[0]
+
+        def provider(spec: WorkerSpec) -> ServiceProvider:
+            # Always resolve to a concrete profile: an unprofiled provider
+            # would otherwise fall back to the sim's *blended* fleet slope,
+            # double-counting the mix (see ThinClient._distribution_overhead).
+            return ServiceProvider(
+                spec.name, spec.perf, matmul_fn=job.matmul_fn,
+                profile=spec.profile or self.default_profile or DEFAULT_PROFILE,
+            )
+
+        if self._tda_client is None:
+            server = TDAServer(
+                [provider(w) for w in self.fleet.workers],
+                homogenize=self.homogenize,
+            )
+            if self.priors == "spec":
+                self._spec_priors(server.tracker)
+            client = ThinClient(server, sim=ClusterSim(
+                perfs=list(self.fleet.perfs),
+                overhead=self._overhead_model(),
+                jitter=sc.jitter, seed=self.seed,
+            ))
+            client.runtime.rehomogenize = self._rehomogenize
+            client.runtime.steal = self._rehomogenize
+            client.runtime.replan_threshold = self.replan_threshold
+            self._tda_client = client
+        client = self._tda_client
+        unit = client.sim.unit_cost(n)
+        est_phase = self._phase_estimate(n, unit, self.fleet.perfs)
+        ovh_est = client.sim.overhead(n)
+        timeline = sc.compile(self.fleet, phase_s=est_phase,
+                              stride_s=est_phase + ovh_est,
+                              make_worker=provider)
+
+        phases, spans = [], []
+        out = None
+        elapsed = 0.0
+        for k in range(job.n_jobs):
+            out, t = client.matmul(a, b, timeline=timeline if k == 0 else (),
+                                   block_rows=job.block_rows)
+            res = client.last_result
+            start = res.end_s - res.makespan
+            counts = res.shares()
+            phases.append(PhaseStats(
+                k, "job", float(n), t,
+                res.homogenization_quality(), res.n_migrated, counts,
+                metrics={"compute_s": res.makespan,
+                         "overhead_s": t - res.makespan},
+            ))
+            spans.append((res.worker_busy,
+                          {w: f - start + elapsed
+                           for w, f in res.worker_finish.items()},
+                          counts))
+            elapsed += t
+        metrics: dict[str, Any] = {"n": n, "block_rows": job.block_rows}
+        if job.verify:
+            metrics["max_abs_err"] = float(np.abs(out - a @ b).max())
+        work = float(n * job.n_jobs)
+        total_s = sum(p.sim_time_s for p in phases)
+        pred, meas = self._speedups(
+            n * unit, list(self.fleet.perfs), phases[-1].sim_time_s,
+            overhead=self._overhead_model(), load=float(n),
+        )
+        return RunReport(
+            kind="simulate", fleet=str(self.fleet), scenario=str(sc),
+            phases=tuple(phases), work_done=work, sim_time_s=total_s,
+            throughput=work / max(total_s, _EPS),
+            predicted_speedup=pred, measured_speedup=meas,
+            worker_timelines=merge_worker_timelines(spans),
+            metrics=metrics, artifact=out,
+        )
+
+    # ================================================================= train
+    def train(self, job: TrainJob, *,
+              scenario: Scenario | str | None = None) -> RunReport:
+        """Train ``job.model`` with runtime-driven HDP across this fleet.
+        Returns a RunReport whose phases are training steps; the live
+        ``HDPTrainer`` rides along as ``report.artifact`` (checkpoint
+        handles, ``plan_preview``, further steps)."""
+        from ..data.pipeline import GrainSpec
+        from ..train.loop import HDPConfig, HDPTrainer, Pod
+
+        sc = Scenario.parse(scenario)
+        vocab = job.vocab_size or job.model.cfg.vocab_size
+        ovh_model = self._overhead_model()
+        cfg = HDPConfig(
+            total_grains=job.grains,
+            grain_spec=GrainSpec(job.grain_size, job.seq_len, vocab),
+            homogenize=self.homogenize,
+            adaptive=self.adaptive,
+            compress_grads=job.compress_grads,
+            overhead=ovh_model,
+            ckpt_dir=job.ckpt_dir,
+            ckpt_every=job.ckpt_every,
+            replan_threshold=self.replan_threshold,
+            jitter=sc.jitter or job.jitter,
+            seed=job.seed,
+        )
+        trainer = HDPTrainer(
+            job.model, [Pod(w.name, w.perf) for w in self.fleet.workers],
+            cfg, opt_cfg=job.opt,
+        )
+        if self.priors == "spec":
+            self._spec_priors(trainer.tracker, now_s=trainer.clock)
+        est_phase = self._phase_estimate(job.grains, 1.0, self.fleet.perfs)
+        ovh = ovh_model(job.grains)
+        for ev in sc.compile(self.fleet, phase_s=est_phase,
+                             stride_s=est_phase + ovh,
+                             make_worker=lambda s: Pod(s.name, s.perf)):
+            # Scenario times are run-relative; the trainer clock is absolute
+            # (non-zero after a checkpoint restore).
+            trainer.schedule(dataclasses.replace(ev, time_s=ev.time_s + trainer.clock))
+        history = trainer.run(job.steps)
+
+        phases, spans = [], []
+        elapsed = 0.0
+        for rec in history:
+            phases.append(PhaseStats(
+                rec["step"], "step", float(job.grains), rec["step_time"],
+                rec["quality"], rec["n_migrated"], dict(rec["plan"]),
+                metrics={"loss": rec["loss"], "grad_norm": rec["grad_norm"],
+                         "tokens": rec["tokens"], "n_steals": rec["n_steals"],
+                         "overhead_s": ovh},
+            ))
+            spans.append((rec.get("worker_busy", {}),
+                          {w: f + elapsed
+                           for w, f in rec.get("worker_finish", {}).items()},
+                          dict(rec["plan"])))
+            elapsed += rec["step_time"]
+        if not phases:
+            raise ValueError(
+                f"TrainJob ran no steps (steps={job.steps}, trainer resumed at "
+                f"step {trainer.start_step}); raise steps past the restore point"
+            )
+        work = float(job.grains * len(phases))
+        total_s = sum(p.sim_time_s for p in phases)
+        pred, meas = self._speedups(
+            float(job.grains), list(self.fleet.perfs), phases[-1].sim_time_s,
+            overhead=ovh_model, load=float(job.grains),
+        )
+        return RunReport(
+            kind="train", fleet=str(self.fleet), scenario=str(sc),
+            phases=tuple(phases), work_done=work, sim_time_s=total_s,
+            throughput=work / max(total_s, _EPS),
+            predicted_speedup=pred, measured_speedup=meas,
+            worker_timelines=merge_worker_timelines(spans),
+            metrics={"final_loss": history[-1]["loss"],
+                     "first_loss": history[0]["loss"],
+                     "start_step": trainer.start_step,
+                     "overhead_slope": ovh_model.m},
+            artifact=trainer,
+        )
+
+    # ================================================================= serve
+    def serve(self, job: ServeJob, *,
+              scenario: Scenario | str | None = None) -> RunReport:
+        """Serve ``job.requests`` over this fleet's engines in
+        admission-controlled waves.  The fleet server (engines + learned
+        tracker state) persists across calls — warm-up traffic teaches the
+        dispatcher measured rates, exactly like production."""
+        from ..serve.dispatch import Replica
+        from ..serve.fleet import FleetServer
+
+        sc = Scenario.parse(scenario)
+        if sc.jitter:
+            raise ValueError(
+                "jitter: clauses don't apply to serving — engine timing is "
+                "measured (step clocks), not modeled"
+            )
+        # The fleet server persists across calls; the fields that define its
+        # engines must not silently change between jobs (a new model served
+        # by old engines would mislabel the results).
+        signature = (job.engine_factory, job.model, job.params, job.max_seq)
+        if self._server is not None and not job.fresh:
+            old_factory, old_model, old_params, old_seq = self._serve_signature
+            if (job.engine_factory is not old_factory
+                    or job.model is not old_model
+                    or job.params is not old_params
+                    or job.max_seq != old_seq):
+                raise ValueError(
+                    "ServeJob's engine-defining fields (engine_factory/model/"
+                    "params/max_seq) differ from the ones this Cluster's "
+                    "fleet server was built with; pass fresh=True to rebuild "
+                    "the fleet (engines + tracker state are discarded)"
+                )
+        if self._server is None or job.fresh:
+            self._serve_signature = signature
+            self._serve_specs = {w.name: w for w in self.fleet.workers}
+            self._engine_factory = job.engine_factory or self._model_factory(job)
+            engines = {
+                w.name: self._build_engine(w) for w in self.fleet.workers
+            }
+            server = FleetServer(
+                [Replica(w.name, w.perf) for w in self.fleet.workers],
+                engines,
+                max_queue_depth=job.max_queue_depth,
+                homogenize=self.homogenize,
+                engine_factory=self._engine_for_worker,
+            )
+            server.dispatcher.runtime.rehomogenize = self._rehomogenize
+            server.dispatcher.runtime.steal = self._rehomogenize
+            server.dispatcher.runtime.replan_threshold = self.replan_threshold
+            if self.priors == "spec":
+                self._spec_priors(server.tracker, rate=True)
+            self._server = server
+        server = self._server
+        server.max_queue_depth = job.max_queue_depth
+
+        requests = list(job.requests)
+        cost = sum(len(r.prompt) + r.max_new_tokens for r in requests)
+        quota = job.max_queue_depth * max(len(server.live_replicas()), 1)
+        wave_cost = sum(
+            len(r.prompt) + r.max_new_tokens for r in requests[:quota]
+        )
+        rates = [w.rate for w in self.fleet.workers]
+        est_phase = self._phase_estimate(wave_cost, 1.0, rates)
+
+        def join_replica(spec: WorkerSpec) -> Replica:
+            self._serve_specs[spec.name] = spec
+            return Replica(spec.name, spec.perf)
+
+        timeline = sc.compile(self.fleet, phase_s=est_phase,
+                              make_worker=join_replica)
+        # Serving trackers run in rate units (perf x slots — measured
+        # tokens/sec); a joiner's prior must match, or identical hardware
+        # starts with a ~concurrency-times-too-low allotment.
+        timeline = tuple(
+            dataclasses.replace(
+                ev, perf=self._serve_specs[ev.worker.name].rate)
+            if ev.kind == "join" else ev
+            for ev in timeline
+        )
+        rep = server.serve(requests, timeline=timeline, batched=job.batched)
+
+        phases, spans = [], []
+        elapsed = 0.0
+        for k, bstat in enumerate(rep.bundles):
+            phases.append(PhaseStats(
+                k, "wave", float(bstat.tokens_out), bstat.sim_time_s,
+                bstat.quality, bstat.n_migrated, dict(bstat.shares),
+                metrics={"n_requests": bstat.n_requests,
+                         "tokens_per_s": bstat.tokens_per_s},
+            ))
+            counts = {w: n for w, n in bstat.shares.items() if n > 0}
+            spans.append((dict(bstat.worker_busy),
+                          {w: f + elapsed
+                           for w, f in bstat.worker_finish.items()},
+                          counts))
+            elapsed += bstat.sim_time_s
+        pred, meas = self._speedups(float(cost), rates, rep.sim_time_s)
+        return RunReport(
+            kind="serve", fleet=str(self.fleet), scenario=str(sc),
+            phases=tuple(phases), work_done=float(rep.tokens_out),
+            sim_time_s=rep.sim_time_s, throughput=rep.tokens_per_s,
+            predicted_speedup=pred, measured_speedup=meas,
+            worker_timelines=merge_worker_timelines(spans),
+            metrics={"n_requests": rep.n_requests, "batched": job.batched,
+                     "n_waves": len(rep.bundles)},
+            artifact=requests,
+        )
+
+    # -- serve internals -----------------------------------------------------
+    def _model_factory(self, job: ServeJob) -> Callable[[WorkerSpec], Any]:
+        if job.model is None or job.params is None:
+            raise ValueError(
+                "ServeJob needs either engine_factory= or model= and params= "
+                "(the factory builds one DecodeEngine per WorkerSpec)"
+            )
+        from ..serve.engine import DecodeEngine
+
+        def make(spec: WorkerSpec):
+            cfg: Mapping[str, Any] = spec.config or {}
+            return DecodeEngine(
+                job.model, job.params,
+                max_batch=spec.concurrency,
+                max_seq=int(cfg.get("max_seq", job.max_seq)),
+                name=spec.name,
+            )
+        return make
+
+    def _build_engine(self, spec: WorkerSpec):
+        return self._engine_factory(spec)
+
+    def _engine_for_worker(self, worker):
+        """Engine factory handed to the fleet server: a worker joined via a
+        Scenario (or rejoined between waves) lazily gets an engine built from
+        its recorded WorkerSpec — the ROADMAP join-without-engine fix."""
+        spec = self._serve_specs.get(worker.name)
+        if spec is None:
+            spec = WorkerSpec(worker.name, getattr(worker, "perf", 1.0))
+            self._serve_specs[worker.name] = spec
+        return self._engine_factory(spec)

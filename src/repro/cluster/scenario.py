@@ -1,0 +1,358 @@
+"""Scenario DSL: named fault scripts compiled to ``TimelineEvent`` streams.
+
+Every mid-run fault experiment in this repo used to be a hand-rolled
+timeline builder — ``scenario_timeline`` in the serve launcher, the
+``fault_step`` arithmetic in ``bench_hdp``, per-test ``TimelineEvent``
+tuples.  A ``Scenario`` is the declarative form: a small string of clauses
+that compiles against a ``FleetSpec`` (and a phase-duration estimate) into
+the exact ``TimelineEvent`` stream the async runtime already consumes.
+
+Grammar — clauses separated by ``;`` (or ``,``):
+
+    halve:W@T          worker W's true perf halves at time T
+    degrade:W*F@T      perf becomes F x current scripted perf (F > 0)
+    perf:W=V@T         perf becomes the absolute value V
+    kill:W@T           W dies (in-flight work re-homes to survivors)
+    join:W@T           W (re)joins; perf/slots from the fleet spec if known
+    join:W=PxC@T       W joins as a new worker with perf P and C slots
+    ramp:W*F@T1..T2/K  staged degradation: K perf steps from T1 to T2,
+                       geometrically interpolating down to F x current
+    jitter:S           execution-time jitter profile sigma=S (no event; the
+                       workload applies it to its duration model)
+
+Times ``T``:
+
+    12.5       absolute simulated seconds from the run start
+    25%        25% into the first phase (job / training step / serve wave)
+    3:25%      25% into phase 3 (phase starts are estimated as k x stride)
+
+Relative times need a phase-duration estimate at compile time; the
+``Cluster`` facade derives it from the fleet's perf priors and the job's
+cost, exactly the arithmetic the hand-rolled builders did.  ``str(scenario)``
+is canonical and parses back to an equal scenario.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable
+
+from ..core.runtime import SimWorker, TimelineEvent
+from .spec import FleetSpec, WorkerSpec
+
+__all__ = ["TimeRef", "Clause", "Scenario"]
+
+_ACTIONS = ("halve", "degrade", "perf", "kill", "join", "ramp")
+
+_GRAMMAR_HINT = (
+    "clauses are ACTION:WORKER...@TIME separated by ';' — e.g. "
+    "'halve:w0@25%', 'degrade:w1*0.2@3:30%', 'kill:w2@9', 'join:w3=1.5x4@12', "
+    "'ramp:w0*0.25@2..8/4', 'jitter:0.1'"
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TimeRef:
+    """One scenario time: absolute seconds, or a fraction of a phase."""
+
+    abs_s: float | None = None
+    phase: int = 0
+    frac: float | None = None
+
+    @classmethod
+    def parse(cls, text: str) -> "TimeRef":
+        text = text.strip()
+        m = re.match(r"^(?:(\d+):)?(\d+(?:\.\d+)?)%$", text)
+        if m:
+            phase = int(m.group(1)) if m.group(1) else 0
+            frac = float(m.group(2)) / 100.0
+            if frac > 1.0:
+                raise ValueError(
+                    f"bad scenario time {text!r}: a phase fraction must be <= 100%"
+                )
+            return cls(phase=phase, frac=frac)
+        try:
+            return cls(abs_s=float(text))
+        except ValueError:
+            raise ValueError(
+                f"bad scenario time {text!r}: want seconds ('12.5'), a phase "
+                "fraction ('25%'), or a phase-qualified fraction ('3:25%')"
+            ) from None
+
+    @property
+    def relative(self) -> bool:
+        return self.abs_s is None
+
+    def resolve(self, phase_s: float | None, stride_s: float | None) -> float:
+        if not self.relative:
+            return self.abs_s
+        if phase_s is None:
+            raise ValueError(
+                f"scenario time {self} is phase-relative; compiling it needs "
+                "a phase_s estimate (the Cluster facade supplies one)"
+            )
+        stride = phase_s if stride_s is None else stride_s
+        return self.phase * stride + self.frac * phase_s
+
+    def __str__(self) -> str:
+        if not self.relative:
+            return f"{self.abs_s:g}"
+        pct = f"{self.frac * 100:g}%"
+        return pct if self.phase == 0 else f"{self.phase}:{pct}"
+
+
+@dataclasses.dataclass(frozen=True)
+class Clause:
+    action: str                      # halve | degrade | perf | kill | join | ramp
+    worker: str
+    at: TimeRef
+    value: float | None = None       # degrade/ramp factor, perf value, join perf
+    concurrency: int | None = None   # join slot count
+    until: TimeRef | None = None     # ramp end time
+    steps: int | None = None         # ramp step count
+
+    def __str__(self) -> str:
+        a = self.action
+        if a == "halve" or a == "kill":
+            head = f"{a}:{self.worker}"
+        elif a == "degrade":
+            head = f"{a}:{self.worker}*{self.value:g}"
+        elif a == "perf":
+            head = f"{a}:{self.worker}={self.value:g}"
+        elif a == "join":
+            head = f"{a}:{self.worker}"
+            if self.value is not None:
+                head += f"={self.value:g}"
+                if self.concurrency is not None and self.concurrency != 1:
+                    head += f"x{self.concurrency}"
+        elif a == "ramp":
+            return (f"ramp:{self.worker}*{self.value:g}"
+                    f"@{self.at}..{self.until}/{self.steps}")
+        else:  # pragma: no cover - parse() rejects unknown actions
+            raise ValueError(f"unknown action {a!r}")
+        return f"{head}@{self.at}"
+
+
+def _parse_clause(text: str) -> Clause:
+    action, sep, rest = text.partition(":")
+    action = action.strip()
+    if not sep or action not in _ACTIONS:
+        raise ValueError(f"bad scenario clause {text!r}: {_GRAMMAR_HINT}")
+    body, sep, t = rest.rpartition("@")
+    if not sep:
+        raise ValueError(
+            f"bad scenario clause {text!r}: missing '@TIME' ({_GRAMMAR_HINT})"
+        )
+    body = body.strip()
+
+    if action == "ramp":
+        m = re.match(r"^(.+?)\.\.(.+?)/(\d+)$", t.strip())
+        if m is None:
+            raise ValueError(
+                f"bad ramp clause {text!r}: want ramp:W*F@T1..T2/K"
+            )
+        t1, t2, k = TimeRef.parse(m.group(1)), TimeRef.parse(m.group(2)), int(m.group(3))
+        if k < 1:
+            raise ValueError(f"bad ramp clause {text!r}: K must be >= 1")
+        wm = re.match(r"^([\w.-]+)\*(\d+(?:\.\d+)?(?:e-?\d+)?)$", body)
+        if wm is None:
+            raise ValueError(f"bad ramp clause {text!r}: want ramp:W*F@T1..T2/K")
+        factor = float(wm.group(2))
+        if not 0 < factor:
+            raise ValueError(f"bad ramp clause {text!r}: factor must be > 0")
+        return Clause("ramp", wm.group(1), t1, value=factor, until=t2, steps=k)
+
+    at = TimeRef.parse(t)
+    if action in ("halve", "kill"):
+        if not re.match(r"^[\w.-]+$", body):
+            raise ValueError(f"bad {action} clause {text!r}: want {action}:WORKER@TIME")
+        return Clause(action, body, at)
+    if action == "degrade":
+        m = re.match(r"^([\w.-]+)\*(\d+(?:\.\d+)?(?:e-?\d+)?)$", body)
+        if m is None:
+            raise ValueError(f"bad degrade clause {text!r}: want degrade:W*FACTOR@TIME")
+        factor = float(m.group(2))
+        if factor <= 0:
+            raise ValueError(
+                f"bad degrade clause {text!r}: factor must be > 0 (use kill: "
+                "to remove a worker)"
+            )
+        return Clause("degrade", m.group(1), at, value=factor)
+    if action == "perf":
+        m = re.match(r"^([\w.-]+)=(\d+(?:\.\d+)?(?:e-?\d+)?)$", body)
+        if m is None:
+            raise ValueError(f"bad perf clause {text!r}: want perf:W=VALUE@TIME")
+        value = float(m.group(2))
+        if value <= 0:
+            raise ValueError(f"bad perf clause {text!r}: perf must be > 0")
+        return Clause("perf", m.group(1), at, value=value)
+    # join
+    m = re.match(
+        r"^([\w.-]+)(?:=(\d+(?:\.\d+)?(?:e-?\d+)?)(?:x(\d+))?)?$", body
+    )
+    if m is None:
+        raise ValueError(
+            f"bad join clause {text!r}: want join:W@TIME or join:W=PERFxSLOTS@TIME"
+        )
+    perf = float(m.group(2)) if m.group(2) else None
+    conc = int(m.group(3)) if m.group(3) else None
+    if perf is not None and perf <= 0:
+        raise ValueError(f"bad join clause {text!r}: perf must be > 0")
+    return Clause("join", m.group(1), at, value=perf, concurrency=conc)
+
+
+@dataclasses.dataclass(frozen=True)
+class Scenario:
+    """A parsed fault script.  Immutable; compile against any fleet."""
+
+    clauses: tuple[Clause, ...] = ()
+    jitter: float = 0.0
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def parse(cls, text: "Scenario | str | None") -> "Scenario":
+        if text is None:
+            return cls()
+        if isinstance(text, Scenario):
+            return text
+        if not isinstance(text, str):
+            raise TypeError(
+                f"cannot build a Scenario from {type(text).__name__}; pass a "
+                "DSL string or a Scenario"
+            )
+        clauses: list[Clause] = []
+        jitter = 0.0
+        for raw in re.split(r"[;,\n]", text):
+            raw = raw.strip()
+            if not raw:
+                continue
+            if raw.startswith("jitter:"):
+                try:
+                    jitter = float(raw[len("jitter:"):])
+                except ValueError:
+                    raise ValueError(
+                        f"bad jitter clause {raw!r}: want jitter:SIGMA"
+                    ) from None
+                if jitter < 0:
+                    raise ValueError(f"bad jitter clause {raw!r}: sigma must be >= 0")
+                continue
+            clauses.append(_parse_clause(raw))
+        return cls(tuple(clauses), jitter)
+
+    @classmethod
+    def none(cls) -> "Scenario":
+        return cls()
+
+    @classmethod
+    def from_arg(cls, arg: str | None, default_worker: str) -> "Scenario":
+        """CLI-friendly resolution: the legacy named scenarios ('none',
+        'halving', 'kill' — fault 25% into the first phase, aimed at the
+        first worker) or any raw DSL string."""
+        if arg is None or arg == "none":
+            return cls()
+        if arg == "halving":
+            return cls.parse(f"halve:{default_worker}@25%")
+        if arg == "kill":
+            return cls.parse(f"kill:{default_worker}@25%")
+        return cls.parse(arg)
+
+    # -- views ---------------------------------------------------------------
+    def __bool__(self) -> bool:
+        return bool(self.clauses) or self.jitter > 0
+
+    @property
+    def needs_estimates(self) -> bool:
+        return any(
+            c.at.relative or (c.until is not None and c.until.relative)
+            for c in self.clauses
+        )
+
+    def __str__(self) -> str:
+        parts = [str(c) for c in self.clauses]
+        if self.jitter:
+            parts.append(f"jitter:{self.jitter:g}")
+        return ";".join(parts)
+
+    # -- compilation ---------------------------------------------------------
+    def compile(
+        self,
+        fleet: FleetSpec,
+        *,
+        phase_s: float | None = None,
+        stride_s: float | None = None,
+        make_worker: Callable[[WorkerSpec], Any] | None = None,
+    ) -> tuple[TimelineEvent, ...]:
+        """Compile to the runtime's ``TimelineEvent`` stream (times relative
+        to the run start — feed with ``timeline_relative=True`` or offset by
+        the runtime clock).
+
+        ``phase_s`` is the estimated duration of one phase (job / step /
+        wave); ``stride_s`` the estimated start-to-start spacing of phases
+        (``phase_s`` + any inter-phase overhead).  ``make_worker`` builds the
+        runtime worker object for ``join`` clauses (default: ``SimWorker``).
+        """
+        make_worker = make_worker or (lambda spec: SimWorker(spec.name, spec.perf))
+        # Scripted perf is cumulative: two halves quarter the worker.  Track
+        # it per worker, seeded from the fleet spec, applying clauses in
+        # resolved-time order.
+        current: dict[str, float] = {w.name: w.perf for w in fleet.workers}
+        known: dict[str, WorkerSpec] = {w.name: w for w in fleet.workers}
+
+        resolved: list[tuple[float, int, Clause]] = []
+        for i, c in enumerate(self.clauses):
+            resolved.append((c.at.resolve(phase_s, stride_s), i, c))
+        resolved.sort(key=lambda x: (x[0], x[1]))
+
+        events: list[TimelineEvent] = []
+        for t, _, c in resolved:
+            if c.action == "join":
+                spec = known.get(c.worker)
+                if spec is None and c.value is None:
+                    raise ValueError(
+                        f"join clause for unknown worker {c.worker!r} needs an "
+                        f"explicit spec (join:{c.worker}=PERFxSLOTS@...); fleet "
+                        f"workers: {list(fleet.names)}"
+                    )
+                spec = WorkerSpec(
+                    name=c.worker,
+                    perf=c.value if c.value is not None else spec.perf,
+                    concurrency=(
+                        c.concurrency if c.concurrency is not None
+                        else (spec.concurrency if spec else 1)
+                    ),
+                    profile=spec.profile if spec else None,
+                )
+                known[c.worker] = spec
+                current[c.worker] = spec.perf
+                events.append(TimelineEvent(t, "join", make_worker(spec), perf=spec.perf))
+                continue
+            if c.worker not in known:
+                raise ValueError(
+                    f"scenario clause {c} names unknown worker {c.worker!r}; "
+                    f"fleet workers: {list(fleet.names)} (a join: clause can "
+                    "introduce new ones)"
+                )
+            if c.action == "kill":
+                events.append(TimelineEvent(t, "kill", c.worker))
+            elif c.action == "halve":
+                current[c.worker] *= 0.5
+                events.append(TimelineEvent(t, "perf", c.worker, perf=current[c.worker]))
+            elif c.action == "degrade":
+                current[c.worker] *= c.value
+                events.append(TimelineEvent(t, "perf", c.worker, perf=current[c.worker]))
+            elif c.action == "perf":
+                current[c.worker] = c.value
+                events.append(TimelineEvent(t, "perf", c.worker, perf=current[c.worker]))
+            elif c.action == "ramp":
+                t2 = c.until.resolve(phase_s, stride_s)
+                if t2 < t:
+                    raise ValueError(f"ramp clause {c}: end time precedes start")
+                k = c.steps
+                base = current[c.worker]
+                for i in range(1, k + 1):
+                    ti = t if k == 1 else t + (t2 - t) * (i - 1) / (k - 1)
+                    pi = base * (c.value ** (i / k))
+                    events.append(TimelineEvent(ti, "perf", c.worker, perf=pi))
+                current[c.worker] = base * c.value
+        return tuple(events)

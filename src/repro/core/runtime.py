@@ -225,6 +225,10 @@ class GrainRecord:
 
 @dataclasses.dataclass
 class RuntimeResult:
+    """One job's execution record.  User-facing consumers should prefer the
+    unified ``repro.cluster.RunReport`` (the ``Cluster`` facade builds it
+    from these); RuntimeResult stays the substrate-level truth."""
+
     makespan: float                  # last completion relative to job start
     records: list[GrainRecord]
     values: dict[int, Any]           # grain -> execute() result (or None)

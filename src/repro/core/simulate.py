@@ -54,6 +54,10 @@ class Machine:
 
 @dataclasses.dataclass(frozen=True)
 class JobResult:
+    """One simulated job.  As a *user-facing* result type this is superseded
+    by ``repro.cluster.RunReport`` (``Cluster.simulate`` wraps the runtime's
+    records); it remains the sim tier's internal/plot-level record."""
+
     n: int
     n_workers: int
     homogenized: bool

@@ -60,17 +60,34 @@ class ServiceProvider:
     kernel wrapper.  ``perf`` is the *true* instantaneous speed — mutable, so
     mid-job degradation scenarios just assign to it (or script a
     ``TimelineEvent``); the server only learns of the change through observed
-    grain latencies."""
+    grain latencies.
+
+    ``profile`` names a backend provider profile (``cluster.profiles``):
+    the provider's link overhead slope ``OverheadModel.m`` is then the
+    profile's *calibrated* fit (via ``overhead_slope_fit``), not the single
+    fleet-wide hardcoded slope — heterogeneous backends pay heterogeneous
+    distribution costs (see ``ThinClient.matmul``)."""
 
     def __init__(
         self,
         name: str,
         perf: float,
         matmul_fn: Callable[[np.ndarray, np.ndarray], np.ndarray] | None = None,
+        profile: str | None = None,
     ):
         self.name = name
         self.perf = perf
         self.matmul_fn = matmul_fn or (lambda a, b: a @ b)
+        self.profile = profile
+
+    def overhead_slope(self, default: float) -> float:
+        """This provider's link slope: the calibrated profile fit when a
+        profile is set, else the fleet-wide ``default``."""
+        if self.profile is None:
+            return default
+        from ..cluster.profiles import get_profile  # layered above core
+
+        return get_profile(self.profile).overhead_slope
 
     def execute(
         self, req: SubRequest, a: np.ndarray, b: np.ndarray, sim: ClusterSim
@@ -180,8 +197,35 @@ class ThinClient:
         for g, value in res.values.items():
             lo, hi = rows_of(g)
             out[lo:hi] = value
-        sim_time = res.makespan + self.sim.overhead(n)
+        sim_time = res.makespan + self._distribution_overhead(res, rows_of, n)
         return out, sim_time
+
+    def _distribution_overhead(self, res: RuntimeResult, rows_of, n: int) -> float:
+        """Distribution overhead O(L) of one job.  Without provider profiles
+        this is the paper's fleet-wide ``sim.overhead(n)``.  When any provider
+        declares a backend ``profile``, each provider's executed rows cross
+        *its own* link: O = sum_i rows_i / m_i (+ the fleet's fixed term),
+        with m_i the provider's calibrated slope — so a slow-link backend
+        pays its measured cost instead of the fleet average."""
+        # Initial providers plus any that joined mid-job (runtime workers
+        # *are* the provider objects on this path).
+        providers = {p.name: p for p in self.server.providers}
+        providers.update(self.runtime.workers)
+        if not any(
+            getattr(p, "profile", None) is not None for p in providers.values()
+        ):
+            return self.sim.overhead(n)
+        default_m = self.sim.overhead.m
+        rows_by_worker: dict[str, int] = {}
+        for g, w in res.executed_by.items():
+            lo, hi = rows_of(g)
+            rows_by_worker[w] = rows_by_worker.get(w, 0) + (hi - lo)
+        total = 0.0
+        for w, rows in rows_by_worker.items():
+            p = providers.get(w)
+            m = p.overhead_slope(default_m) if p is not None else default_m
+            total += rows / m
+        return total + self.sim.overhead.fixed
 
     @staticmethod
     def matmul_block(

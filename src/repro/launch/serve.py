@@ -1,15 +1,18 @@
 """Serving launcher: a real continuous-batching engine fleet behind the
-homogenized dispatcher.
+homogenized dispatcher, driven through the declarative Cluster API.
 
-``--replicas`` builds N *actual* ``DecodeEngine`` replicas — each item is
-``PERFxBATCH`` (step clock in engine steps/sec x slot count), so the fleet is
-heterogeneous in both speed and batch width.  Requests are served through
-``FleetServer`` in admission-controlled waves on the batched EngineExecutor
-path: slots stay full, tokens/sec heartbeats are measured, unstarted requests
-migrate off degrading replicas.
+``--fleet`` is the ``FleetSpec`` grammar (``[NAME=]PERFxSLOTS[@PROFILE]``,
+comma- or colon-separated — the old ``--replicas PERFxBATCH`` grammar is a
+subset and the flag survives as an alias).  ``--scenario`` takes the legacy
+names (``none``/``halving``/``kill``) or any Scenario DSL string
+(``halve:r0@25%;join:r3=4x2@60%``).  Requests are served through one
+``Cluster`` facade: admission-controlled waves on the batched EngineExecutor
+path — slots stay full, tokens/sec heartbeats are measured, unstarted
+requests migrate off degrading replicas, and joined replicas lazily bring
+their engines.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
-      --requests 24 --replicas 8x4:4x2:2x1 --scenario halving --compare-serial
+      --requests 24 --fleet 8x4:4x2:2x1 --scenario halving --compare-serial
 """
 
 from __future__ import annotations
@@ -19,25 +22,34 @@ import argparse
 import jax
 import numpy as np
 
+from ..cluster import Cluster, FleetSpec, Scenario, ServeJob
 from ..configs import ARCH_IDS, get_config
-from ..core.runtime import TimelineEvent
 from ..models.model import Model
-from ..serve.dispatch import Replica
-from ..serve.engine import DecodeEngine, Request
-from ..serve.fleet import FleetServer
+from ..serve.engine import Request
 
 
 def parse_replicas(spec: str) -> list[tuple[float, int]]:
-    """'8x4:4x2:2x1' -> [(8.0, 4), (4.0, 2), (2.0, 1)] (steps/sec x slots)."""
-    out = []
-    for item in spec.split(":"):
-        perf, _, batch = item.partition("x")
-        out.append((float(perf), int(batch) if batch else 4))
-    return out
+    """Deprecated: the old ``--replicas`` view of a fleet string.  Delegates
+    to ``FleetSpec.parse``, preserving this function's historical contract
+    that a bare-perf item means 4 slots (FleetSpec itself defaults bare
+    items to 1).  Prefer consuming a FleetSpec directly."""
+    items = [
+        it if ("x" in it or "=" in it) else f"{it}x4"
+        for it in (s.strip() for s in spec.replace(",", ":").split(":"))
+        if it
+    ]
+    fleet = FleetSpec.parse(":".join(items), prefix="r")
+    return [(w.perf, w.concurrency) for w in fleet.workers]
 
 
-def build_fleet(model, params, specs, max_seq: int,
-                queue_depth: int) -> FleetServer:
+def build_fleet(model, params, specs, max_seq: int, queue_depth: int):
+    """Deprecated shim for the pre-Cluster entry point: builds the legacy
+    ``FleetServer`` (old callers, benchmarks at timing scale).  New code
+    should use ``Cluster(fleet).serve(ServeJob(...))``."""
+    from ..serve.dispatch import Replica
+    from ..serve.engine import DecodeEngine
+    from ..serve.fleet import FleetServer
+
     replicas = [Replica(f"r{i}", p) for i, (p, _) in enumerate(specs)]
     engines = {
         f"r{i}": DecodeEngine(model, params, max_batch=b, max_seq=max_seq,
@@ -56,15 +68,16 @@ def make_requests(n: int, vocab: int, max_new: int, seed: int = 0):
     ]
 
 
-def scenario_timeline(scenario: str, specs, requests) -> tuple[TimelineEvent, ...]:
-    if scenario == "none":
-        return ()
+def scenario_timeline(scenario: str, specs, requests):
+    """Deprecated: the old hand-rolled timeline builder, now a Scenario DSL
+    compile (``halving`` == ``halve:r0@25%``, ``kill`` == ``kill:r0@25%``)."""
+    fleet = FleetSpec.from_dicts(
+        [{"name": f"r{i}", "perf": p, "concurrency": b}
+         for i, (p, b) in enumerate(specs)]
+    )
     cost = sum(len(r.prompt) + r.max_new_tokens for r in requests)
-    rate = sum(p * b for p, b in specs)           # fleet slot-tokens/sec
-    t = 0.25 * cost / rate                        # 25% into the first wave
-    if scenario == "halving":
-        return (TimelineEvent(t, "perf", "r0", perf=specs[0][0] / 2),)
-    return (TimelineEvent(t, "kill", "r0"),)      # scenario == "kill"
+    phase_s = cost / fleet.total_rate()
+    return Scenario.from_arg(scenario, "r0").compile(fleet, phase_s=phase_s)
 
 
 def main() -> None:
@@ -73,15 +86,16 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--replicas", default="8x4:4x2:2x1",
-                    help="colon-separated PERFxBATCH per replica "
-                         "(engine steps/sec x slot count)")
+    ap.add_argument("--fleet", "--replicas", dest="fleet", default="8x4:4x2:2x1",
+                    help="FleetSpec grammar: [NAME=]PERFxSLOTS[@PROFILE] per "
+                         "replica, ','/':'-separated (engine steps/sec x slots)")
     ap.add_argument("--queue-depth", type=int, default=8,
                     help="admission control: max unstarted requests queued "
                          "per replica per wave")
-    ap.add_argument("--scenario", choices=("none", "halving", "kill"),
-                    default="none",
-                    help="mid-bundle fault injected 25%% into the first wave")
+    ap.add_argument("--scenario", default="none",
+                    help="'none'|'halving'|'kill' (legacy names, fault 25%% "
+                         "into the first wave) or a Scenario DSL string, e.g. "
+                         "'halve:r0@25%%;join:r3=4x2@80%%'")
     ap.add_argument("--compare-serial", action="store_true",
                     help="also run the per-request-serial baseline on a "
                          "fresh fleet and report the batched speedup")
@@ -93,36 +107,42 @@ def main() -> None:
                          "see examples/ for enc-dec/vlm paths")
     model = Model(cfg)
     params = model.init(jax.random.key(0))
-    specs = parse_replicas(args.replicas)
+    fleet = FleetSpec.parse(args.fleet, prefix="r")
+    scenario = Scenario.from_arg(args.scenario, fleet.names[0])
 
     requests = make_requests(args.requests, cfg.vocab_size, args.max_new)
-    timeline = scenario_timeline(args.scenario, specs, requests)
-    fleet = build_fleet(model, params, specs, args.max_seq, args.queue_depth)
-    names = ", ".join(f"r{i}={p:g}steps/s x{b}slots"
-                      for i, (p, b) in enumerate(specs))
+    cluster = Cluster(fleet)
+    names = ", ".join(f"{w.name}={w.perf:g}steps/s x{w.concurrency}slots"
+                      for w in fleet.workers)
     print(f"fleet: {names}  (queue depth {args.queue_depth}/replica, "
-          f"scenario {args.scenario})")
-    rep = fleet.serve(requests, timeline=timeline)
-    for k, b in enumerate(rep.bundles):
-        print(f"wave {k}: {b.n_requests:3d} reqs  {b.tokens_out:4d} tokens  "
-              f"{b.sim_time_s:7.2f}s  {b.tokens_per_s:7.2f} tok/s  "
-              f"quality={b.quality:.2f}  migrated={b.n_migrated}  "
-              f"shares={b.shares}")
-    print(f"served {rep.n_requests} requests: {rep.tokens_out} tokens in "
-          f"{rep.sim_time_s:.2f}s -> {rep.tokens_per_s:.2f} tok/s "
-          f"(worst quality {rep.worst_quality:.2f})")
+          f"scenario {scenario or 'none'})")
+    rep = cluster.serve(
+        ServeJob(requests, model=model, params=params, max_seq=args.max_seq,
+                 max_queue_depth=args.queue_depth),
+        scenario=scenario,
+    )
+    for p in rep.phases:
+        print(f"wave {p.index}: {p.metrics['n_requests']:3d} reqs  "
+              f"{int(p.work):4d} tokens  {p.sim_time_s:7.2f}s  "
+              f"{p.metrics['tokens_per_s']:7.2f} tok/s  "
+              f"quality={p.quality:.2f}  migrated={p.n_migrated}  "
+              f"shares={dict(p.shares)}")
+    print(f"served {rep.metrics['n_requests']} requests: "
+          f"{int(rep.work_done)} tokens in {rep.sim_time_s:.2f}s -> "
+          f"{rep.throughput:.2f} tok/s "
+          f"(worst quality {rep.homogenization_quality():.2f}, "
+          f"{rep.measured_speedup:.2f}x measured vs "
+          f"{rep.predicted_speedup:.2f}x predicted speedup)")
 
     if args.compare_serial:
-        serial_fleet = build_fleet(model, params, specs, args.max_seq,
-                                   args.queue_depth)
-        serial_reqs = make_requests(args.requests, cfg.vocab_size, args.max_new)
-        srep = serial_fleet.serve(
-            serial_reqs,
-            timeline=scenario_timeline(args.scenario, specs, serial_reqs),
-            batched=False,
+        serial = Cluster(fleet).serve(
+            ServeJob(make_requests(args.requests, cfg.vocab_size, args.max_new),
+                     model=model, params=params, max_seq=args.max_seq,
+                     max_queue_depth=args.queue_depth, batched=False),
+            scenario=scenario,
         )
-        print(f"serial baseline: {srep.tokens_per_s:.2f} tok/s -> batched "
-              f"speedup {rep.tokens_per_s / srep.tokens_per_s:.2f}x")
+        print(f"serial baseline: {serial.throughput:.2f} tok/s -> batched "
+              f"speedup {rep.throughput / serial.throughput:.2f}x")
 
 
 if __name__ == "__main__":

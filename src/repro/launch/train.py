@@ -4,28 +4,32 @@ Two modes:
   --mode single   one-worker training of an assigned arch's *reduced* config
                   (CPU-runnable) or full config (TPU fleet).
   --mode hdp      Homogenized Data Parallel across simulated heterogeneous
-                  pods (the paper's technique at pod granularity), runtime-
-                  driven: per-grain heartbeats, mid-step grain migration off
+                  pods, driven through the declarative Cluster API: ``--fleet``
+                  is the FleetSpec grammar (the old ``--pods 4:3:2:1`` perf
+                  list is a subset and survives as an alias), ``--scenario``
+                  scripts mid-step faults in the Scenario DSL
+                  (``halve:pod0@3:25%``, ``kill:pod1@40``...).  Runtime-driven:
+                  per-grain heartbeats, mid-step grain migration off
                   stragglers, elastic membership, async checkpoints that carry
                   the learned perf vector.  ``--static`` freezes each step to
                   its initial plan (the non-adaptive baseline).
 
 Examples:
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-1.5b --steps 50
-  PYTHONPATH=src python -m repro.launch.train --mode hdp --pods 4:3:2:1 \
-      --steps 100 --ckpt /tmp/hdp_ckpt
+  PYTHONPATH=src python -m repro.launch.train --mode hdp --fleet 4:3:2:1 \
+      --steps 100 --scenario "halve:pod0@30:25%" --ckpt /tmp/hdp_ckpt
 """
 
 from __future__ import annotations
 
 import argparse
 
+from ..cluster import Cluster, FleetSpec, Scenario, TrainJob
 from ..configs import ARCH_IDS, get_config
-from ..core.homogenization import OverheadModel
 from ..data.pipeline import GrainSpec, SyntheticSource, batch_from_grains
 from ..models.model import Model
 from ..optim.adamw import AdamWConfig
-from ..train.loop import HDPConfig, HDPTrainer, Pod, train_single
+from ..train.loop import train_single
 
 
 def main() -> None:
@@ -38,8 +42,12 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--grains", type=int, default=8)
-    ap.add_argument("--pods", default="4:3:2:1",
-                    help="colon-separated relative pod perfs (hdp mode)")
+    ap.add_argument("--fleet", "--pods", dest="fleet", default="4:3:2:1",
+                    help="hdp fleet in FleetSpec grammar: "
+                         "[NAME=]PERF[@PROFILE] per pod, ','/':'-separated")
+    ap.add_argument("--scenario", default="none",
+                    help="hdp fault script: 'none'|'halving'|'kill' or a "
+                         "Scenario DSL string, e.g. 'halve:pod0@3:25%%'")
     ap.add_argument("--static", action="store_true",
                     help="hdp: disable mid-step migration/stealing (each step "
                          "runs its initial plan to completion)")
@@ -74,29 +82,25 @@ def main() -> None:
         print(f"done: loss {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f}")
         return
 
-    perfs = [float(p) for p in args.pods.split(":")]
-    pods = [Pod(f"pod{i}", p) for i, p in enumerate(perfs)]
-    hdp = HDPTrainer(
-        model, pods,
-        HDPConfig(
-            total_grains=args.grains,
-            grain_spec=GrainSpec(1, args.seq, cfg.vocab_size),
-            overhead=OverheadModel(m=4.0),
-            ckpt_dir=args.ckpt,
-            compress_grads=args.compress_grads,
-            adaptive=not args.static,
-        ),
-        opt_cfg=opt,
+    fleet = FleetSpec.parse(args.fleet, prefix="pod")
+    scenario = Scenario.from_arg(args.scenario, fleet.names[0])
+    cluster = Cluster(fleet, adaptive=not args.static)
+    rep = cluster.train(
+        TrainJob(model, steps=args.steps, grains=args.grains,
+                 seq_len=args.seq, opt=opt, ckpt_dir=args.ckpt,
+                 compress_grads=args.compress_grads),
+        scenario=scenario,
     )
-    for s in range(hdp.start_step, args.steps):
-        rec = hdp.step(s)
-        if s % 10 == 0 or s == args.steps - 1:
-            plan = " ".join(f"{k}:{v}" for k, v in rec["plan"].items())
-            print(f"step {s:5d} loss={rec['loss']:.4f} "
-                  f"t={rec['step_time']:.2f}s q={rec['quality']:.2f} "
-                  f"mig={rec['n_migrated']} plan[{plan}]")
-    if hdp.ckpt:
-        hdp.ckpt.wait()
+    for p in rep.phases:
+        if p.index % 10 == 0 or p.index == args.steps - 1:
+            plan = " ".join(f"{k}:{v}" for k, v in p.shares.items())
+            print(f"step {p.index:5d} loss={p.metrics['loss']:.4f} "
+                  f"t={p.sim_time_s:.2f}s q={p.quality:.2f} "
+                  f"mig={p.n_migrated} plan[{plan}]")
+    print(rep.summary())
+    trainer = rep.artifact
+    if trainer.ckpt:
+        trainer.ckpt.wait()
 
 
 if __name__ == "__main__":

@@ -111,6 +111,7 @@ class HomogenizedDispatcher:
         requests: list,
         timeline: tuple[TimelineEvent, ...] = (),
         batched: bool = True,
+        engine_factory=None,
     ) -> tuple[DispatchResult, RuntimeResult | None]:
         """Real-execution path: route ``requests`` (serve.engine.Request) to
         named DecodeEngines via the runtime.
@@ -126,12 +127,14 @@ class HomogenizedDispatcher:
 
         Either way every request is decoded exactly once, even when it
         migrates between replica queues (or off a killed replica) mid-bundle.
+        ``engine_factory(worker)`` backs replicas that join mid-bundle (or
+        arrive live-but-engineless) by building their engine on demand.
         """
         unknown = set(engines) - set(self.replicas)
         if unknown:
             raise ValueError(f"engines for unknown replicas {sorted(unknown)}")
         unbacked = set(self.tracker.workers()) - set(engines)
-        if unbacked:
+        if unbacked and engine_factory is None:
             # A live replica with no engine would be scheduled grains it
             # cannot execute (KeyError mid-bundle after partial decode).
             raise ValueError(f"live replicas without engines {sorted(unbacked)}")
@@ -139,14 +142,23 @@ class HomogenizedDispatcher:
         if batched:
             run = self.runtime.run(
                 len(requests),
-                executor=EngineExecutor(engines, requests),
+                executor=EngineExecutor(engines, requests,
+                                        engine_factory=engine_factory),
                 timeline=timeline, timeline_relative=True,
             )
             self._sync_replicas()
             return self._result(run), run
 
+        def engine_of(replica):
+            eng = engines.get(replica.name)
+            if eng is None:
+                if engine_factory is None:
+                    raise KeyError(f"replica {replica.name!r} has no engine")
+                eng = engines[replica.name] = engine_factory(replica)
+            return eng
+
         def execute(replica, i):
-            eng = engines[replica.name]
+            eng = engine_of(replica)
             req = requests[i]
             eng.submit(req)
             done = eng.run_until_drained()

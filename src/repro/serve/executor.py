@@ -45,40 +45,76 @@ class EngineExecutor(GrainExecutor):
     (``max_batch``/``max_seq``/``queue``/``active``/``submit``/``step``/
     ``heartbeat``/``cancel``) — tests drive the same executor with a
     model-free stub engine at timing scale.
+
+    ``engine_factory`` closes the ROADMAP join gap: a replica that joins
+    *mid-bundle* via a timeline event has no engine yet, and used to fail at
+    ``begin``.  With a factory, the executor lazily constructs (and
+    validates) the joining replica's engine on first admission, so a
+    ``WorkerSpec`` joined through a ``Scenario`` brings its engine with it.
     """
 
     incremental = True
     uniform_cost = None
 
-    def __init__(self, engines: Mapping[str, object], requests: Sequence):
+    def __init__(self, engines: Mapping[str, object], requests: Sequence,
+                 engine_factory=None):
         self.engines = dict(engines)
+        self.engine_factory = engine_factory
         self.requests = list(requests)
         rids = [r.rid for r in self.requests]
         if len(set(rids)) != len(rids):
             raise ValueError("request rids must be unique within a bundle")
         self._grain_of = {r.rid: g for g, r in enumerate(self.requests)}
+        # Mid-bundle migration can land any request on any replica, so every
+        # request must fit the smallest engine (lazily-built ones included).
+        self._max_positions = max(
+            (len(r.prompt) + r.max_new_tokens for r in self.requests),
+            default=0,
+        )
         max_fit = min(
             (eng.max_seq for eng in self.engines.values()), default=0
         )
-        for r in self.requests:
-            if len(r.prompt) + r.max_new_tokens > max_fit:
-                # Mid-bundle migration can land any request on any replica,
-                # so every request must fit the smallest engine.
-                raise ValueError(
-                    f"request {r.rid} needs {len(r.prompt) + r.max_new_tokens}"
-                    f" positions; smallest engine max_seq is {max_fit}"
-                )
+        if self.engines and self._max_positions > max_fit:
+            worst = max(self.requests,
+                        key=lambda r: len(r.prompt) + r.max_new_tokens)
+            raise ValueError(
+                f"request {worst.rid} needs {self._max_positions}"
+                f" positions; smallest engine max_seq is {max_fit}"
+            )
         for name, eng in self.engines.items():
-            if eng.active or eng.queue:
-                raise ValueError(
-                    f"engine {name!r} is not idle; one bundle per fleet at a time"
+            self._validate_engine(name, eng)
+
+    def _validate_engine(self, name: str, eng) -> None:
+        if eng.active or eng.queue:
+            raise ValueError(
+                f"engine {name!r} is not idle; one bundle per fleet at a time"
+            )
+        if eng.name != name:
+            # Heartbeats carry eng.name; a mismatch would teach the
+            # tracker a phantom worker and starve the real replica.
+            raise ValueError(
+                f"engine for replica {name!r} reports as {eng.name!r}"
+            )
+        if self._max_positions > eng.max_seq:
+            raise ValueError(
+                f"engine {name!r} max_seq {eng.max_seq} cannot hold this "
+                f"bundle's largest request ({self._max_positions} positions)"
+            )
+
+    def engine_for(self, worker):
+        """The worker's engine, lazily built for mid-bundle joiners."""
+        eng = self.engines.get(worker.name)
+        if eng is None:
+            if self.engine_factory is None:
+                raise KeyError(
+                    f"replica {worker.name!r} has no engine and the bundle "
+                    "has no engine_factory to build one (mid-bundle joins "
+                    "need a factory)"
                 )
-            if eng.name != name:
-                # Heartbeats carry eng.name; a mismatch would teach the
-                # tracker a phantom worker and starve the real replica.
-                raise ValueError(
-                    f"engine for replica {name!r} reports as {eng.name!r}"
-                )
+            eng = self.engine_factory(worker)
+            self._validate_engine(worker.name, eng)
+            self.engines[worker.name] = eng
+        return eng
 
     # -- cost model (drives allotment + ETAs; execution itself is measured) --
     def cost(self, grain: int) -> float:
@@ -92,7 +128,7 @@ class EngineExecutor(GrainExecutor):
 
     # -- incremental seam ----------------------------------------------------
     def concurrency(self, worker) -> int:
-        return self.engines[worker.name].max_batch
+        return self.engine_for(worker).max_batch
 
     def step_seconds(self, worker) -> float:
         """Simulated seconds per engine step: the replica's speed profile."""
@@ -102,10 +138,7 @@ class EngineExecutor(GrainExecutor):
         return self.step_seconds(worker)
 
     def begin(self, worker, grain: int, now_s: float) -> None:
-        eng = self.engines.get(worker.name)
-        if eng is None:
-            raise KeyError(f"replica {worker.name!r} has no engine")
-        eng.submit(self.requests[grain])
+        self.engine_for(worker).submit(self.requests[grain])
 
     def tick(self, worker, now_s: float) -> list[tuple[int, object]]:
         finished = self.engines[worker.name].step()

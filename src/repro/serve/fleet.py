@@ -31,7 +31,9 @@ __all__ = ["BundleStats", "FleetReport", "FleetServer"]
 @dataclasses.dataclass(frozen=True)
 class BundleStats:
     """One wave: how many requests, how many measured output tokens, and how
-    well the replicas crossed the homogenization line."""
+    well the replicas crossed the homogenization line.  ``worker_busy`` /
+    ``worker_finish`` (wave-relative seconds) feed the unified
+    ``cluster.RunReport`` per-worker timelines."""
 
     n_requests: int
     tokens_out: int
@@ -40,10 +42,16 @@ class BundleStats:
     quality: float
     n_migrated: int
     shares: dict[str, int]
+    worker_busy: dict[str, float] = dataclasses.field(default_factory=dict)
+    worker_finish: dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass(frozen=True)
 class FleetReport:
+    """Aggregate serving result.  As a *user-facing* result type this is
+    superseded by ``repro.cluster.RunReport`` (``Cluster.serve`` wraps it);
+    it remains the serving tier's internal report."""
+
     bundles: tuple[BundleStats, ...]
     n_requests: int
     tokens_out: int
@@ -69,24 +77,40 @@ class FleetServer:
         max_queue_depth: int = 8,
         homogenize: bool = True,
         alpha: float = 0.5,
+        engine_factory=None,
     ):
         if max_queue_depth < 1:
             raise ValueError("max_queue_depth must be >= 1")
         missing = {r.name for r in replicas} - set(engines)
-        if missing:
+        if missing and engine_factory is None:
             raise ValueError(f"replicas without engines {sorted(missing)}")
         self.dispatcher = HomogenizedDispatcher(
             replicas, homogenize=homogenize, alpha=alpha
         )
         self.engines = dict(engines)
         self.max_queue_depth = max_queue_depth
+        # ``engine_factory(worker) -> engine`` backs replicas that join the
+        # fleet without one (mid-wave Scenario joins, between-wave rejoins):
+        # the engine is built on demand and registered, so a joined
+        # WorkerSpec always brings (or lazily constructs) its engine before
+        # admission — the ROADMAP join fix.
+        self.engine_factory = engine_factory
 
     @property
     def tracker(self):
         return self.dispatcher.tracker
 
     def live_replicas(self) -> list[str]:
+        if self.engine_factory is not None:
+            return list(self.tracker.workers())
         return [n for n in self.tracker.workers() if n in self.engines]
+
+    def _factory(self, worker):
+        """Wrap the user factory so lazily-built engines are registered on
+        the server (later waves must reuse them, not rebuild)."""
+        eng = self.engine_factory(worker)
+        self.engines[worker.name] = eng
+        return eng
 
     def serve(
         self,
@@ -109,14 +133,18 @@ class FleetServer:
                 )
             quota = self.max_queue_depth * len(live)
             wave = [backlog.popleft() for _ in range(min(quota, len(backlog)))]
-            res, _ = self.dispatcher.dispatch_to_engines(
-                {n: self.engines[n] for n in live},
+            res, run = self.dispatcher.dispatch_to_engines(
+                {n: self.engines[n] for n in live if n in self.engines},
                 wave,
                 timeline=timeline if first else (),
                 batched=batched,
+                engine_factory=(
+                    self._factory if self.engine_factory is not None else None
+                ),
             )
             first = False
             tokens = sum(len(r.out_tokens) for r in wave)
+            wave_start = run.end_s - run.makespan if run is not None else 0.0
             bundles.append(BundleStats(
                 n_requests=len(wave),
                 tokens_out=tokens,
@@ -125,6 +153,10 @@ class FleetServer:
                 quality=res.quality,
                 n_migrated=res.n_migrated,
                 shares=res.shares,
+                worker_busy=dict(run.worker_busy) if run is not None else {},
+                worker_finish={
+                    w: f - wave_start for w, f in run.worker_finish.items()
+                } if run is not None else {},
             ))
         total_tokens = sum(b.tokens_out for b in bundles)
         total_time = sum(b.sim_time_s for b in bundles)

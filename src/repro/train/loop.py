@@ -312,6 +312,7 @@ class HDPTrainer:
 
         ovh = cfg.overhead(cfg.total_grains)
         self.runtime.clock += ovh  # distribution overhead advances the clock
+        step_start = res.end_s - res.makespan
         rec = {
             "step": step_idx,
             "loss": loss_sum / tok_sum,
@@ -322,6 +323,12 @@ class HDPTrainer:
             "n_migrated": res.n_migrated,
             "n_steals": res.n_steals,
             "grad_norm": float(stats["grad_norm"]),
+            # Per-pod execution footprint (step-relative), consumed by the
+            # unified cluster.RunReport worker timelines.
+            "worker_busy": dict(res.worker_busy),
+            "worker_finish": {
+                w: f - step_start for w, f in res.worker_finish.items()
+            },
         }
         self.history.append(rec)
         if self.ckpt and (step_idx + 1) % cfg.ckpt_every == 0:

@@ -221,6 +221,35 @@ def test_hdp_midstep_rejoin_replaces_killed_pod():
     assert tr.runtime.workers["b"].perf == 0.5
 
 
+def test_cluster_train_facade_dsl_halving_acceptance():
+    """The ISSUE 4 train-side acceptance through the declarative facade: a
+    DSL-scripted mid-step perf halving holds adaptive homogenization quality
+    <= 1.3 (static >= 1.6 on the same Scenario), with identical numerics."""
+    from repro.cluster import Cluster, FleetSpec, TrainJob
+
+    fleet = FleetSpec.parse("p0=2,p1=2,p2=2,p3=2")
+    model = Model(tiny_cfg())
+
+    def run(adaptive):
+        job = TrainJob(model, steps=3, grains=32, seq_len=8, vocab_size=64,
+                       opt=OPT)
+        return Cluster(fleet, adaptive=adaptive).train(
+            job, scenario="halve:p0@2:25%")
+
+    ad, st = run(True), run(False)
+    fa, fs = ad.phases[2], st.phases[2]
+    assert fa.quality <= 1.3, ad.summary()
+    assert fs.quality >= 1.6, st.summary()
+    assert fa.sim_time_s < fs.sim_time_s
+    assert fa.n_migrated > 0
+    # identical grain data => identical numerics even across the fault
+    assert fa.metrics["loss"] == fs.metrics["loss"]
+    assert ad.kind == "train" and ad.scenario == "halve:p0@2:25%"
+    assert ad.fleet == str(fleet)
+    assert sum(w.n_grains for w in ad.worker_timelines.values()) == 3 * 32
+    assert ad.artifact.start_step == 0          # the live trainer rides along
+
+
 def test_hdp_restart_restores_tracker_and_plan(tmp_path):
     """Kill the coordinator after step k; the restarted one resumes with the
     learned perf vector — its first plan equals the plan the never-killed
