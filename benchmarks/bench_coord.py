@@ -1,0 +1,156 @@
+"""Coordination-plane benchmark: dispatch event-rate scaling across K shards.
+
+The single-coordinator runtime caps fleet size at one host's event rate —
+every grain completion, tick and timeline change is handled by the same
+authority.  The sharded coordination plane (``repro.coord``) partitions that
+event stream across K coordinator replicas with gossiped perf views; this
+benchmark measures what that buys and what it costs:
+
+  - **dispatch throughput**: events/sec achievable when each shard handles
+    its own stream in parallel (``CoordStats.dispatch_throughput``, the
+    busiest shard is the bottleneck) at K in {1, 2, 4} over a >= 32-worker
+    synthetic fleet,
+  - **homogenization quality** under the standard mid-job perf-halving
+    scenario — decentralized dispatch (stale gossiped views, intra-shard
+    rebalancing + cross-shard stealing only) must stay within tolerance of
+    the K=1 single-authority quality,
+  - **coordinator-fault exactness**: a ``ckill`` mid-matmul must leave the
+    distributed product bitwise identical to the no-fault run (queues and
+    in-flight bookkeeping adopted by the ring successor, grains exactly-once).
+
+Output: ``BENCH_coord.json`` (the acceptance numbers: ``throughput_scaling``
+>= 2x from K=1 to K=4, ``quality_ratio`` within 1.1x of K=1).
+
+Run:   PYTHONPATH=src python -m benchmarks.bench_coord
+Toy:   PYTHONPATH=src python -m benchmarks.bench_coord --grains 256 --workers 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.cluster import Cluster, CoordSpec, FleetSpec, MatmulJob, Scenario, SimJob
+
+DEFAULT_WORKERS = 32
+DEFAULT_KS = (1, 2, 4)
+
+
+def fleet_for(n_workers: int, coordinators: int) -> FleetSpec:
+    """Mildly heterogeneous synthetic fleet: perfs cycle 2.0/1.5/1.0/0.5."""
+    perfs = [2.0, 1.5, 1.0, 0.5]
+    spec = ",".join(f"{perfs[i % 4]:g}" for i in range(n_workers))
+    return FleetSpec.parse(spec).with_coordinators(coordinators)
+
+
+def run_k(k: int, *, n_workers: int, n_grains: int, n_jobs: int,
+          fanout: int) -> dict:
+    fleet = fleet_for(n_workers, k)
+    sc = Scenario.parse("halve:w0@25%")          # the standard mid-job fault
+    cluster = Cluster(fleet, priors="spec",
+                      coord=CoordSpec(coordinators=k, fanout=fanout))
+    wall0 = time.perf_counter()
+    rep = cluster.simulate(SimJob(size=n_grains, n_jobs=n_jobs), scenario=sc)
+    wall_s = time.perf_counter() - wall0
+    stats = rep.coord.as_dict()
+    return {
+        "k": k,
+        "fleet": str(fleet),
+        "scenario_dsl": str(sc),
+        "quality": rep.homogenization_quality(),
+        "sim_time_s": rep.sim_time_s,
+        "dispatch_throughput": stats["dispatch_throughput"],
+        "events_per_shard": stats["events_per_shard"],
+        "total_events": stats["total_events"],
+        "gossip_rounds": stats["gossip_rounds"],
+        "gossip_messages": stats["gossip_messages"],
+        "staleness_max_s": stats["staleness_max_s"],
+        "staleness_mean_s": stats["staleness_mean_s"],
+        "cross_steals": stats["cross_steals"],
+        "loop_wall_s": wall_s,
+    }
+
+
+def ckill_exactness(n_workers: int = 8, k: int = 2) -> dict:
+    """Kill coordinator shard 0 mid-matmul; the product must equal the
+    no-fault run's bitwise (exactly-once execution across the takeover)."""
+    rng = np.random.default_rng(7)
+    a = rng.standard_normal((96, 32)).astype(np.float32)
+    b = rng.standard_normal((32, 32)).astype(np.float32)
+    fleet = fleet_for(n_workers, k)
+    sc = Scenario.parse("ckill:0@25%")
+    faulted = Cluster(fleet, priors="spec").simulate(MatmulJob(a, b),
+                                                     scenario=sc)
+    clean = Cluster(fleet, priors="spec").simulate(MatmulJob(a, b))
+    return {
+        "scenario_dsl": str(sc),
+        "bitwise_identical": bool(
+            np.array_equal(faulted.artifact, clean.artifact)
+        ),
+        "max_abs_err": faulted.metrics["max_abs_err"],
+        "takeovers": faulted.coord.takeovers,
+    }
+
+
+def run_bench(n_workers: int, n_grains: int, n_jobs: int, fanout: int,
+              ks=DEFAULT_KS) -> dict:
+    out = {
+        "config": {
+            "n_workers": n_workers, "n_grains": n_grains, "n_jobs": n_jobs,
+            "gossip_fanout": fanout, "ks": list(ks),
+        },
+        "scaling": {},
+    }
+    base = None
+    for k in ks:
+        r = run_k(k, n_workers=n_workers, n_grains=n_grains, n_jobs=n_jobs,
+                  fanout=fanout)
+        out["scaling"][str(k)] = r
+        if base is None:
+            base = r
+    top = out["scaling"][str(ks[-1])]
+    # The acceptance numbers: event-throughput scaling K=1 -> K=max, and
+    # quality drift of decentralized dispatch vs the single authority.
+    out["throughput_scaling"] = (
+        top["dispatch_throughput"] / base["dispatch_throughput"]
+    )
+    out["quality_ratio"] = top["quality"] / base["quality"]
+    out["ckill"] = ckill_exactness()
+    return out
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=DEFAULT_WORKERS)
+    ap.add_argument("--grains", type=int, default=2048)
+    ap.add_argument("--jobs", type=int, default=3)
+    ap.add_argument("--fanout", type=int, default=1)
+    ap.add_argument("--out", default="BENCH_coord.json")
+    args = ap.parse_args(argv)
+
+    result = run_bench(args.workers, args.grains, args.jobs, args.fanout)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    for k, r in result["scaling"].items():
+        print(
+            f"K={k}: {r['dispatch_throughput']:10.0f} ev/s "
+            f"(busiest shard {max(r['events_per_shard'].values())}/"
+            f"{r['total_events']} events), quality {r['quality']:.3f}, "
+            f"{r['cross_steals']} cross-steals, "
+            f"gossip staleness max {r['staleness_max_s']:.2f}s"
+        )
+    print(
+        f"throughput scaling K=1 -> K={result['config']['ks'][-1]}: "
+        f"{result['throughput_scaling']:.2f}x, quality ratio "
+        f"{result['quality_ratio']:.3f}, ckill bitwise-identical: "
+        f"{result['ckill']['bitwise_identical']}"
+    )
+    print(f"wrote {args.out}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

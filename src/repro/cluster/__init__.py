@@ -9,6 +9,7 @@
   api       Cluster — .simulate(job) / .train(job) / .serve(job)
 """
 
+from ..coord import CoordSpec, CoordStats
 from .api import Cluster, MatmulJob, ServeJob, SimJob, TrainJob
 from .profiles import (
     DEFAULT_PROFILE,
@@ -16,9 +17,10 @@ from .profiles import (
     BackendProfile,
     get_profile,
     register_profile,
+    select_profile,
 )
 from .report import PhaseStats, RunReport, WorkerTimeline
-from .scenario import Clause, Scenario, TimeRef
+from .scenario import Clause, Scenario, ScenarioSchedule, TimeRef
 from .spec import FleetSpec, WorkerSpec
 
 __all__ = [
@@ -30,13 +32,17 @@ __all__ = [
     "FleetSpec",
     "WorkerSpec",
     "Scenario",
+    "ScenarioSchedule",
     "Clause",
     "TimeRef",
+    "CoordSpec",
+    "CoordStats",
     "BackendProfile",
     "PROFILES",
     "DEFAULT_PROFILE",
     "get_profile",
     "register_profile",
+    "select_profile",
     "RunReport",
     "PhaseStats",
     "WorkerTimeline",

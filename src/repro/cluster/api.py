@@ -22,7 +22,14 @@ Construction knobs (all fleet-wide):
   ``adaptive``    mid-run re-homogenization + stealing vs frozen initial plans,
   ``priors``      'neutral' (tracker learns perfs from heartbeats — the
                   closed-loop story) or 'spec' (the declared perfs are oracle
-                  priors — isolates mid-run fault response, as benchmarks do).
+                  priors — isolates mid-run fault response, as benchmarks do),
+  ``coord``       the coordination plane: a ``coord.CoordSpec`` (or a bare K)
+                  shards dispatch across K coordinator replicas with gossiped
+                  perf views; defaults to the fleet's ``/cK`` declaration
+                  (single coordinator when absent).  Scenario clauses
+                  ``ckill``/``partition``/``heal`` script coordinator faults,
+                  and ``RunReport.coord`` carries the per-shard event counts,
+                  gossip-staleness and dispatch-throughput stats.
 
 A ``Cluster`` is long-lived: repeated ``.simulate``/``.serve`` calls reuse
 the same runtime/fleet-server, so learned perf state persists across calls
@@ -36,11 +43,12 @@ from typing import Any, Callable, Mapping, Sequence
 
 import numpy as np
 
+from ..coord import CoordSpec, ShardedCoordinator
 from ..core.homogenization import predicted_speedup, scope_lengths
 from ..core.performance import PerformanceTracker
 from ..core.runtime import AsyncRuntime, SimWorker
 from ..core.simulate import ClusterSim
-from .profiles import DEFAULT_PROFILE
+from .profiles import DEFAULT_PROFILE, select_profile
 from .report import PhaseStats, RunReport, merge_worker_timelines
 from .scenario import Scenario
 from .spec import FleetSpec, WorkerSpec
@@ -123,8 +131,12 @@ class Cluster:
         replan_threshold: float = 0.05,
         seed: int = 0,
         name_prefix: str = "w",
+        coord: CoordSpec | int | None = None,
     ):
         self.fleet = FleetSpec.parse(fleet, prefix=name_prefix)
+        # Reports trace back to the *declared* spec (auto-selected backend
+        # profiles refine self.fleet later without rewriting history).
+        self._declared_fleet = str(self.fleet)
         if priors not in ("neutral", "spec"):
             raise ValueError(
                 f"priors must be 'neutral' or 'spec', got {priors!r}"
@@ -135,6 +147,12 @@ class Cluster:
         self.default_profile = default_profile
         self.replan_threshold = replan_threshold
         self.seed = seed
+        if isinstance(coord, int):
+            coord = CoordSpec(coordinators=coord)
+        if coord is None and self.fleet.coordinators > 1:
+            coord = CoordSpec(coordinators=self.fleet.coordinators)
+        self.coord = coord
+        self._auto_profiles: dict[str, str] = {}
         # Long-lived executors (lazy; learned perf state persists across calls).
         self._sim_rt: AsyncRuntime | None = None
         self._sim_rng: np.random.Generator | None = None
@@ -151,6 +169,48 @@ class Cluster:
 
     def _overhead_model(self):
         return self.fleet.overhead_model(self.default_profile)
+
+    def _n_coordinators(self) -> int:
+        return self.coord.coordinators if self.coord else self.fleet.coordinators
+
+    def _new_authority(self):
+        """A fresh dispatch authority for one long-lived workload runtime
+        (None = the paper's single coordinator)."""
+        return ShardedCoordinator(self.coord) if self.coord else None
+
+    @staticmethod
+    def _coord_stats(runtime):
+        return runtime.authority.stats()
+
+    def _autoselect_profiles(self, tracker: PerformanceTracker,
+                             per_slot: bool = False) -> dict[str, str]:
+        """Workers the FleetSpec left unprofiled get a ``BackendProfile``
+        selected from their first *measured* heartbeats (>= 1 real report
+        beyond the registration prior) instead of silently defaulting.  The
+        refined fleet drives later overhead models; the report's ``fleet``
+        string stays the declared spec.  ``per_slot`` divides the measured
+        throughput by the worker's concurrency first — serving trackers run
+        in rate units (perf x slots), and the profile bands are per-worker
+        perf, so identical backends must classify alike whatever their slot
+        count."""
+        if self.default_profile is not None:
+            return {}   # an explicit cluster-wide default is not silent
+        updated = list(self.fleet.workers)
+        chosen: dict[str, str] = {}
+        for i, w in enumerate(updated):
+            if w.profile is not None or tracker.n_reports(w.name) < 2:
+                continue
+            measured = tracker.perf(w.name)
+            if per_slot:
+                measured /= w.concurrency
+            prof = select_profile(max(measured, _EPS))
+            updated[i] = dataclasses.replace(w, profile=prof.name)
+            chosen[w.name] = prof.name
+        if chosen:
+            self.fleet = FleetSpec(tuple(updated),
+                                   coordinators=self.fleet.coordinators)
+            self._auto_profiles.update(chosen)
+        return chosen
 
     def _spec_priors(self, tracker: PerformanceTracker, rate: bool = False,
                      now_s: float = 0.0) -> None:
@@ -209,6 +269,7 @@ class Cluster:
                 rehomogenize=self._rehomogenize,
                 steal=self._rehomogenize,
                 replan_threshold=self.replan_threshold,
+                authority=self._new_authority(),
             )
             self._sim_rng = np.random.default_rng(self.seed)
         rt = self._sim_rt
@@ -216,8 +277,12 @@ class Cluster:
         ovh_model = self._overhead_model()
         ovh = ovh_model(job.size)
         est_phase = self._phase_estimate(job.size, unit, self.fleet.perfs)
-        timeline = sc.compile(self.fleet, phase_s=est_phase,
-                              stride_s=est_phase + ovh)
+        # Phase-anchored scheduling: each job's events are re-timed against
+        # its *true* start (the per-phase run call is the callback), so
+        # '@k:frac%' never drifts with accumulated estimate error.
+        sched = sc.schedule(self.fleet, phase_s=est_phase,
+                            stride_s=est_phase + ovh,
+                            coordinators=self._n_coordinators())
         jit = sc.jitter or job.jitter
         rng = self._sim_rng
 
@@ -231,7 +296,7 @@ class Cluster:
         elapsed = 0.0
         for k in range(job.n_jobs):
             res = rt.run(job.size, grain_cost=unit, duration_fn=duration,
-                         timeline=timeline if k == 0 else (),
+                         timeline=sched.phase_events(k, 0.0),
                          timeline_relative=True)
             start = res.end_s - res.makespan
             counts = res.shares()
@@ -247,19 +312,28 @@ class Cluster:
                           counts))
             elapsed += res.makespan + ovh
             rt.clock += ovh
+            if k == 0 and k < job.n_jobs - 1 and \
+                    self._autoselect_profiles(rt.tracker):
+                # Later phases pay the *measured* backends' overhead.
+                ovh_model = self._overhead_model()
+                ovh = ovh_model(job.size)
         work = float(job.size * job.n_jobs)
         total_s = sum(p.sim_time_s for p in phases)
         pred, meas = self._speedups(
             job.size * unit, [p for p in self.fleet.perfs],
             phases[-1].sim_time_s, overhead=ovh_model, load=float(job.size),
         )
+        self._autoselect_profiles(rt.tracker)
+        metrics = {"overhead_slope": ovh_model.m, "unit_cost": unit}
+        if self._auto_profiles:
+            metrics["auto_profiles"] = dict(self._auto_profiles)
         return RunReport(
-            kind="simulate", fleet=str(self.fleet), scenario=str(sc),
+            kind="simulate", fleet=self._declared_fleet, scenario=str(sc),
             phases=tuple(phases), work_done=work, sim_time_s=total_s,
             throughput=work / max(total_s, _EPS),
             predicted_speedup=pred, measured_speedup=meas,
             worker_timelines=merge_worker_timelines(spans),
-            metrics={"overhead_slope": ovh_model.m, "unit_cost": unit},
+            metrics=metrics, coord=self._coord_stats(rt),
         )
 
     def _simulate_matmul(self, job: MatmulJob, sc: Scenario) -> RunReport:
@@ -288,7 +362,7 @@ class Cluster:
                 perfs=list(self.fleet.perfs),
                 overhead=self._overhead_model(),
                 jitter=sc.jitter, seed=self.seed,
-            ))
+            ), authority=self._new_authority())
             client.runtime.rehomogenize = self._rehomogenize
             client.runtime.steal = self._rehomogenize
             client.runtime.replan_threshold = self.replan_threshold
@@ -297,15 +371,16 @@ class Cluster:
         unit = client.sim.unit_cost(n)
         est_phase = self._phase_estimate(n, unit, self.fleet.perfs)
         ovh_est = client.sim.overhead(n)
-        timeline = sc.compile(self.fleet, phase_s=est_phase,
-                              stride_s=est_phase + ovh_est,
-                              make_worker=provider)
+        sched = sc.schedule(self.fleet, phase_s=est_phase,
+                            stride_s=est_phase + ovh_est,
+                            make_worker=provider,
+                            coordinators=self._n_coordinators())
 
         phases, spans = [], []
         out = None
         elapsed = 0.0
         for k in range(job.n_jobs):
-            out, t = client.matmul(a, b, timeline=timeline if k == 0 else (),
+            out, t = client.matmul(a, b, timeline=sched.phase_events(k, 0.0),
                                    block_rows=job.block_rows)
             res = client.last_result
             start = res.end_s - res.makespan
@@ -331,12 +406,12 @@ class Cluster:
             overhead=self._overhead_model(), load=float(n),
         )
         return RunReport(
-            kind="simulate", fleet=str(self.fleet), scenario=str(sc),
+            kind="simulate", fleet=self._declared_fleet, scenario=str(sc),
             phases=tuple(phases), work_done=work, sim_time_s=total_s,
             throughput=work / max(total_s, _EPS),
             predicted_speedup=pred, measured_speedup=meas,
             worker_timelines=merge_worker_timelines(spans),
-            metrics=metrics, artifact=out,
+            metrics=metrics, artifact=out, coord=self._coord_stats(client.runtime),
         )
 
     # ================================================================= train
@@ -367,18 +442,22 @@ class Cluster:
         )
         trainer = HDPTrainer(
             job.model, [Pod(w.name, w.perf) for w in self.fleet.workers],
-            cfg, opt_cfg=job.opt,
+            cfg, opt_cfg=job.opt, authority=self._new_authority(),
         )
         if self.priors == "spec":
             self._spec_priors(trainer.tracker, now_s=trainer.clock)
         est_phase = self._phase_estimate(job.grains, 1.0, self.fleet.perfs)
         ovh = ovh_model(job.grains)
-        for ev in sc.compile(self.fleet, phase_s=est_phase,
-                             stride_s=est_phase + ovh,
-                             make_worker=lambda s: Pod(s.name, s.perf)):
-            # Scenario times are run-relative; the trainer clock is absolute
-            # (non-zero after a checkpoint restore).
-            trainer.schedule(dataclasses.replace(ev, time_s=ev.time_s + trainer.clock))
+        # Phase-anchored scheduling: the trainer's step-start hook re-times
+        # each '@k:frac%' clause against step k's *true* start clock, so long
+        # runs never accumulate plan-estimate drift (phase index = training
+        # step; steps skipped by a checkpoint restore fire at the restart).
+        sched = sc.schedule(self.fleet, phase_s=est_phase,
+                            stride_s=est_phase + ovh,
+                            make_worker=lambda s: Pod(s.name, s.perf),
+                            coordinators=self._n_coordinators())
+        trainer.add_step_hook(
+            lambda step, clock: sched.phase_events(step, clock))
         history = trainer.run(job.steps)
 
         phases, spans = [], []
@@ -407,17 +486,21 @@ class Cluster:
             float(job.grains), list(self.fleet.perfs), phases[-1].sim_time_s,
             overhead=ovh_model, load=float(job.grains),
         )
+        self._autoselect_profiles(trainer.tracker)
+        metrics = {"final_loss": history[-1]["loss"],
+                   "first_loss": history[0]["loss"],
+                   "start_step": trainer.start_step,
+                   "overhead_slope": ovh_model.m}
+        if self._auto_profiles:
+            metrics["auto_profiles"] = dict(self._auto_profiles)
         return RunReport(
-            kind="train", fleet=str(self.fleet), scenario=str(sc),
+            kind="train", fleet=self._declared_fleet, scenario=str(sc),
             phases=tuple(phases), work_done=work, sim_time_s=total_s,
             throughput=work / max(total_s, _EPS),
             predicted_speedup=pred, measured_speedup=meas,
             worker_timelines=merge_worker_timelines(spans),
-            metrics={"final_loss": history[-1]["loss"],
-                     "first_loss": history[0]["loss"],
-                     "start_step": trainer.start_step,
-                     "overhead_slope": ovh_model.m},
-            artifact=trainer,
+            metrics=metrics,
+            artifact=trainer, coord=self._coord_stats(trainer.runtime),
         )
 
     # ================================================================= serve
@@ -465,6 +548,7 @@ class Cluster:
                 max_queue_depth=job.max_queue_depth,
                 homogenize=self.homogenize,
                 engine_factory=self._engine_for_worker,
+                authority=self._new_authority(),
             )
             server.dispatcher.runtime.rehomogenize = self._rehomogenize
             server.dispatcher.runtime.steal = self._rehomogenize
@@ -488,18 +572,25 @@ class Cluster:
             self._serve_specs[spec.name] = spec
             return Replica(spec.name, spec.perf)
 
-        timeline = sc.compile(self.fleet, phase_s=est_phase,
-                              make_worker=join_replica)
-        # Serving trackers run in rate units (perf x slots — measured
-        # tokens/sec); a joiner's prior must match, or identical hardware
-        # starts with a ~concurrency-times-too-low allotment.
-        timeline = tuple(
-            dataclasses.replace(
-                ev, perf=self._serve_specs[ev.worker.name].rate)
-            if ev.kind == "join" else ev
-            for ev in timeline
-        )
-        rep = server.serve(requests, timeline=timeline, batched=job.batched)
+        # Phase-anchored scheduling: the server calls back at each *true*
+        # wave start, so '@k:frac%' clauses land inside wave k exactly.
+        sched = sc.schedule(self.fleet, phase_s=est_phase,
+                            make_worker=join_replica,
+                            coordinators=self._n_coordinators())
+
+        def wave_events(wave_idx: int):
+            # Serving trackers run in rate units (perf x slots — measured
+            # tokens/sec); a joiner's prior must match, or identical hardware
+            # starts with a ~concurrency-times-too-low allotment.
+            return tuple(
+                dataclasses.replace(
+                    ev, perf=self._serve_specs[ev.worker.name].rate)
+                if ev.kind == "join" else ev
+                for ev in sched.phase_events(wave_idx, 0.0)
+            )
+
+        rep = server.serve(requests, timeline_fn=wave_events,
+                           batched=job.batched)
 
         phases, spans = [], []
         elapsed = 0.0
@@ -517,15 +608,20 @@ class Cluster:
                           counts))
             elapsed += bstat.sim_time_s
         pred, meas = self._speedups(float(cost), rates, rep.sim_time_s)
+        self._autoselect_profiles(server.tracker, per_slot=True)
+        metrics = {"n_requests": rep.n_requests, "batched": job.batched,
+                   "n_waves": len(rep.bundles)}
+        if self._auto_profiles:
+            metrics["auto_profiles"] = dict(self._auto_profiles)
         return RunReport(
-            kind="serve", fleet=str(self.fleet), scenario=str(sc),
+            kind="serve", fleet=self._declared_fleet, scenario=str(sc),
             phases=tuple(phases), work_done=float(rep.tokens_out),
             sim_time_s=rep.sim_time_s, throughput=rep.tokens_per_s,
             predicted_speedup=pred, measured_speedup=meas,
             worker_timelines=merge_worker_timelines(spans),
-            metrics={"n_requests": rep.n_requests, "batched": job.batched,
-                     "n_waves": len(rep.bundles)},
-            artifact=requests,
+            metrics=metrics,
+            artifact=requests, coord=self._coord_stats(
+                server.dispatcher.runtime),
         )
 
     # -- serve internals -----------------------------------------------------

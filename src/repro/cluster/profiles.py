@@ -31,6 +31,7 @@ __all__ = [
     "PROFILES",
     "get_profile",
     "register_profile",
+    "select_profile",
 ]
 
 
@@ -41,17 +42,31 @@ class BackendProfile:
     ``calibration`` is the raw experiment: (load, overhead_seconds) samples.
     ``overhead_slope``/``overhead_model`` are *derived* via the paper's
     least-squares fit — the profile never stores a hand-picked M.
+
+    ``perf_band`` is the measured worker-throughput range (work-units/sec)
+    this backend class typically sustains; ``select_profile`` matches a
+    worker's first heartbeats against the bands, so a ``FleetSpec`` that
+    omits ``@PROFILE`` gets a *measured* selection instead of a silent
+    default.  ``None`` opts the profile out of auto-selection.
     """
 
     name: str
     calibration: tuple[tuple[float, float], ...]
     description: str = ""
+    perf_band: tuple[float, float] | None = None
 
     def __post_init__(self):
         if len(self.calibration) < 2:
             raise ValueError(
                 f"profile {self.name!r} needs >= 2 (load, overhead) "
                 f"calibration samples, got {len(self.calibration)}"
+            )
+        if self.perf_band is not None and not (
+            0 <= self.perf_band[0] < self.perf_band[1]
+        ):
+            raise ValueError(
+                f"profile {self.name!r}: perf_band must be (lo, hi) with "
+                f"0 <= lo < hi, got {self.perf_band}"
             )
 
     @property
@@ -93,15 +108,47 @@ def register_profile(profile: BackendProfile) -> BackendProfile:
     return profile
 
 
-for _name, _m, _desc in (
-    ("paper-ethernet", 20.0, "the paper's 100 Mbps Ethernet testbed (M=20)"),
-    ("lan-1g", 200.0, "1 GbE lab LAN: ~10x the paper's link"),
-    ("dcn", 2000.0, "data-center network between accelerator pods"),
-    ("local", 2e8, "in-process backend (CPU interpret): negligible overhead"),
+for _name, _m, _desc, _band in (
+    ("paper-ethernet", 20.0,
+     "the paper's 100 Mbps Ethernet testbed (M=20)", (0.0, 3.0)),
+    ("lan-1g", 200.0, "1 GbE lab LAN: ~10x the paper's link", (3.0, 10.0)),
+    ("dcn", 2000.0,
+     "data-center network between accelerator pods", (10.0, float("inf"))),
+    ("local", 2e8,
+     "in-process backend (CPU interpret): negligible overhead", None),
 ):
-    register_profile(BackendProfile(_name, _samples(_m, _CAL_LOADS), _desc))
+    register_profile(
+        BackendProfile(_name, _samples(_m, _CAL_LOADS), _desc, _band)
+    )
 
 DEFAULT_PROFILE = "paper-ethernet"
+
+
+def select_profile(measured_perf: float) -> BackendProfile:
+    """Pick the registered profile whose measured ``perf_band`` covers a
+    worker's observed throughput — the first slice of measured backend
+    calibration: a worker the FleetSpec left unprofiled is classified from
+    its *heartbeats*, never silently defaulted.  Falls back to the band with
+    the nearest edge when nothing covers the value; deterministic tie-break
+    by name."""
+    if measured_perf <= 0:
+        raise ValueError(f"measured_perf must be > 0, got {measured_perf}")
+    banded = sorted(
+        (p for p in PROFILES.values() if p.perf_band is not None),
+        key=lambda p: p.name,
+    )
+    if not banded:
+        return PROFILES[DEFAULT_PROFILE]
+    for p in banded:
+        lo, hi = p.perf_band
+        if lo <= measured_perf < hi:
+            return p
+
+    def edge_distance(p: BackendProfile) -> float:
+        lo, hi = p.perf_band
+        return min(abs(measured_perf - lo), abs(measured_perf - hi))
+
+    return min(banded, key=lambda p: (edge_distance(p), p.name))
 
 
 def get_profile(name_or_profile: str | BackendProfile | None) -> BackendProfile:

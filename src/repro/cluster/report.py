@@ -67,6 +67,7 @@ class RunReport:
     worker_timelines: Mapping[str, WorkerTimeline]
     metrics: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     artifact: Any = None
+    coord: Any = None                # coord.CoordStats when dispatch is sharded
 
     # -- the uniform questions ----------------------------------------------
     def shares(self) -> dict[str, int]:
@@ -79,7 +80,10 @@ class RunReport:
 
     def homogenization_quality(self) -> float:
         """Worst per-phase finish-time spread (1.0 = every phase crossed the
-        homogenization line)."""
+        homogenization line).  Per-phase qualities already exclude workers
+        that died during (or before) the phase — a dead worker's truncated
+        span says nothing about how the survivors homogenized, and a worker
+        dead for a whole phase must not drag the spread's denominator."""
         return max((p.quality for p in self.phases), default=1.0)
 
     @property
@@ -95,7 +99,7 @@ class RunReport:
 
     def summary(self) -> str:
         shares = " ".join(f"{w}:{n}" for w, n in sorted(self.shares().items()))
-        return (
+        s = (
             f"[{self.kind}] fleet={self.fleet} scenario={self.scenario or 'none'} "
             f"{self.n_phases} phase(s): {self.work_done:g} work in "
             f"{self.sim_time_s:.2f}s -> {self.throughput:.2f}/s, "
@@ -103,6 +107,9 @@ class RunReport:
             f"speedup {self.measured_speedup:.2f}x measured vs "
             f"{self.predicted_speedup:.2f}x predicted, shares[{shares}]"
         )
+        if self.coord is not None:
+            s += f", coord[{self.coord.summary()}]"
+        return s
 
 
 def merge_worker_timelines(

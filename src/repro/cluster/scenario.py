@@ -20,16 +20,28 @@ Grammar — clauses separated by ``;`` (or ``,``):
     jitter:S           execution-time jitter profile sigma=S (no event; the
                        workload applies it to its duration model)
 
+Coordinator-plane clauses (need a multi-coordinator fleet, ``/cK``):
+
+    ckill:S@T          coordinator shard S dies; its queues and in-flight
+                       bookkeeping are taken over by its ring successor
+    partition:0+1|2@T  gossip/steal connectivity splits into groups
+                       (shards joined by '+', groups separated by '|')
+    heal@T             the partition heals
+
 Times ``T``:
 
     12.5       absolute simulated seconds from the run start
     25%        25% into the first phase (job / training step / serve wave)
-    3:25%      25% into phase 3 (phase starts are estimated as k x stride)
+    3:25%      25% into phase 3
 
-Relative times need a phase-duration estimate at compile time; the
-``Cluster`` facade derives it from the fleet's perf priors and the job's
-cost, exactly the arithmetic the hand-rolled builders did.  ``str(scenario)``
-is canonical and parses back to an equal scenario.
+Two resolution modes: ``compile`` resolves everything up front against
+plan-based *estimates* (phase starts at k x stride) — drift accumulates on
+long runs.  ``schedule`` returns a ``ScenarioSchedule`` whose events are
+anchored to *true* phase boundaries: the workload calls ``phase_events(k,
+start_s)`` at each real job/step/wave start (the runtime callback), so a
+``@k:frac%`` time is exact to within one phase's duration estimate no matter
+how far the run has drifted.  ``str(scenario)`` is canonical and parses back
+to an equal scenario.
 """
 
 from __future__ import annotations
@@ -41,14 +53,17 @@ from typing import Any, Callable
 from ..core.runtime import SimWorker, TimelineEvent
 from .spec import FleetSpec, WorkerSpec
 
-__all__ = ["TimeRef", "Clause", "Scenario"]
+__all__ = ["TimeRef", "Clause", "Scenario", "ScenarioSchedule"]
 
-_ACTIONS = ("halve", "degrade", "perf", "kill", "join", "ramp")
+_ACTIONS = ("halve", "degrade", "perf", "kill", "join", "ramp",
+            "ckill", "partition", "heal")
+_COORD_ACTIONS = ("ckill", "partition", "heal")
 
 _GRAMMAR_HINT = (
     "clauses are ACTION:WORKER...@TIME separated by ';' — e.g. "
     "'halve:w0@25%', 'degrade:w1*0.2@3:30%', 'kill:w2@9', 'join:w3=1.5x4@12', "
-    "'ramp:w0*0.25@2..8/4', 'jitter:0.1'"
+    "'ramp:w0*0.25@2..8/4', 'ckill:1@25%', 'partition:0+1|2@5', 'heal@9', "
+    "'jitter:0.1'"
 )
 
 
@@ -114,7 +129,9 @@ class Clause:
 
     def __str__(self) -> str:
         a = self.action
-        if a == "halve" or a == "kill":
+        if a == "heal":
+            return f"heal@{self.at}"
+        if a == "halve" or a == "kill" or a == "ckill" or a == "partition":
             head = f"{a}:{self.worker}"
         elif a == "degrade":
             head = f"{a}:{self.worker}*{self.value:g}"
@@ -135,6 +152,9 @@ class Clause:
 
 
 def _parse_clause(text: str) -> Clause:
+    healm = re.match(r"^heal\s*@(.+)$", text)
+    if healm:
+        return Clause("heal", "", TimeRef.parse(healm.group(1)))
     action, sep, rest = text.partition(":")
     action = action.strip()
     if not sep or action not in _ACTIONS:
@@ -145,6 +165,28 @@ def _parse_clause(text: str) -> Clause:
             f"bad scenario clause {text!r}: missing '@TIME' ({_GRAMMAR_HINT})"
         )
     body = body.strip()
+
+    if action == "ckill":
+        at = TimeRef.parse(t)
+        if not re.match(r"^\d+$", body):
+            raise ValueError(
+                f"bad ckill clause {text!r}: want ckill:SHARD@TIME "
+                "(SHARD a coordinator shard id, e.g. 'ckill:1@25%')"
+            )
+        return Clause("ckill", body, at)
+    if action == "partition":
+        at = TimeRef.parse(t)
+        if not re.match(r"^\d+(\+\d+)*(\|\d+(\+\d+)*)+$", body):
+            raise ValueError(
+                f"bad partition clause {text!r}: want partition:GROUPS@TIME "
+                "with shard ids joined by '+' and groups separated by '|' "
+                "(e.g. 'partition:0+1|2+3@5')"
+            )
+        return Clause("partition", body, at)
+    if action == "heal":
+        raise ValueError(
+            f"bad heal clause {text!r}: want heal@TIME (no target)"
+        )
 
     if action == "ramp":
         m = re.match(r"^(.+?)\.\.(.+?)/(\d+)$", t.strip())
@@ -282,6 +324,7 @@ class Scenario:
         phase_s: float | None = None,
         stride_s: float | None = None,
         make_worker: Callable[[WorkerSpec], Any] | None = None,
+        coordinators: int | None = None,
     ) -> tuple[TimelineEvent, ...]:
         """Compile to the runtime's ``TimelineEvent`` stream (times relative
         to the run start — feed with ``timeline_relative=True`` or offset by
@@ -291,8 +334,39 @@ class Scenario:
         wave); ``stride_s`` the estimated start-to-start spacing of phases
         (``phase_s`` + any inter-phase overhead).  ``make_worker`` builds the
         runtime worker object for ``join`` clauses (default: ``SimWorker``).
+        ``coordinators`` overrides the fleet's declared shard count for
+        coordinator-plane clause validation.
+
+        Every time resolves against the *estimates* here; prefer
+        ``schedule`` when the workload can report true phase starts.
         """
+        return tuple(
+            dataclasses.replace(p.event, time_s=p.est_t)
+            for p in self._plan(fleet, phase_s, stride_s, make_worker,
+                                coordinators)
+        )
+
+    def schedule(
+        self,
+        fleet: FleetSpec,
+        *,
+        phase_s: float | None = None,
+        stride_s: float | None = None,
+        make_worker: Callable[[WorkerSpec], Any] | None = None,
+        coordinators: int | None = None,
+    ) -> "ScenarioSchedule":
+        """The phase-anchored form of ``compile``: returns a
+        ``ScenarioSchedule`` the workload drains via ``phase_events(k,
+        start_s)`` at each *true* phase start (job/step/wave callback), so
+        ``@k:frac%`` times never accumulate plan-estimate drift."""
+        return ScenarioSchedule(
+            self._plan(fleet, phase_s, stride_s, make_worker, coordinators)
+        )
+
+    def _plan(self, fleet, phase_s, stride_s, make_worker,
+              coordinators) -> "list[_Planned]":
         make_worker = make_worker or (lambda spec: SimWorker(spec.name, spec.perf))
+        n_shards = coordinators if coordinators is not None else fleet.coordinators
         # Scripted perf is cumulative: two halves quarter the worker.  Track
         # it per worker, seeded from the fleet spec, applying clauses in
         # resolved-time order.
@@ -304,8 +378,19 @@ class Scenario:
             resolved.append((c.at.resolve(phase_s, stride_s), i, c))
         resolved.sort(key=lambda x: (x[0], x[1]))
 
-        events: list[TimelineEvent] = []
+        planned: list[_Planned] = []
+
+        def emit(t: float, c: Clause, event: TimelineEvent) -> None:
+            if c.at.relative:
+                planned.append(_Planned(
+                    t, c.at.phase, c.at.frac * phase_s, event))
+            else:
+                planned.append(_Planned(t, None, c.at.abs_s, event))
+
         for t, _, c in resolved:
+            if c.action in _COORD_ACTIONS:
+                emit(t, c, self._coord_event(c, t, n_shards))
+                continue
             if c.action == "join":
                 spec = known.get(c.worker)
                 if spec is None and c.value is None:
@@ -325,7 +410,8 @@ class Scenario:
                 )
                 known[c.worker] = spec
                 current[c.worker] = spec.perf
-                events.append(TimelineEvent(t, "join", make_worker(spec), perf=spec.perf))
+                emit(t, c, TimelineEvent(t, "join", make_worker(spec),
+                                         perf=spec.perf))
                 continue
             if c.worker not in known:
                 raise ValueError(
@@ -334,25 +420,144 @@ class Scenario:
                     "introduce new ones)"
                 )
             if c.action == "kill":
-                events.append(TimelineEvent(t, "kill", c.worker))
+                emit(t, c, TimelineEvent(t, "kill", c.worker))
             elif c.action == "halve":
                 current[c.worker] *= 0.5
-                events.append(TimelineEvent(t, "perf", c.worker, perf=current[c.worker]))
+                emit(t, c, TimelineEvent(t, "perf", c.worker,
+                                         perf=current[c.worker]))
             elif c.action == "degrade":
                 current[c.worker] *= c.value
-                events.append(TimelineEvent(t, "perf", c.worker, perf=current[c.worker]))
+                emit(t, c, TimelineEvent(t, "perf", c.worker,
+                                         perf=current[c.worker]))
             elif c.action == "perf":
                 current[c.worker] = c.value
-                events.append(TimelineEvent(t, "perf", c.worker, perf=current[c.worker]))
+                emit(t, c, TimelineEvent(t, "perf", c.worker,
+                                         perf=current[c.worker]))
             elif c.action == "ramp":
                 t2 = c.until.resolve(phase_s, stride_s)
                 if t2 < t:
                     raise ValueError(f"ramp clause {c}: end time precedes start")
                 k = c.steps
                 base = current[c.worker]
+                # Fully phase-relative ramps anchor *each stage* to its own
+                # phase by interpolating in phase-fraction space (phase +
+                # frac), so no stage drifts when real phases run longer than
+                # estimated.  Mixed or absolute ramps keep absolute times.
+                per_phase = c.at.relative and c.until.relative
+                if per_phase:
+                    pos1 = c.at.phase + c.at.frac
+                    pos2 = c.until.phase + c.until.frac
                 for i in range(1, k + 1):
                     ti = t if k == 1 else t + (t2 - t) * (i - 1) / (k - 1)
                     pi = base * (c.value ** (i / k))
-                    events.append(TimelineEvent(ti, "perf", c.worker, perf=pi))
+                    if per_phase:
+                        pos = pos1 if k == 1 else (
+                            pos1 + (pos2 - pos1) * (i - 1) / (k - 1)
+                        )
+                        phase_i = min(int(pos), c.until.phase)
+                        planned.append(_Planned(
+                            ti, phase_i, (pos - phase_i) * phase_s,
+                            TimelineEvent(ti, "perf", c.worker, perf=pi),
+                        ))
+                    else:
+                        planned.append(_Planned(
+                            ti, None, ti,
+                            TimelineEvent(ti, "perf", c.worker, perf=pi),
+                        ))
                 current[c.worker] = base * c.value
-        return tuple(events)
+        return planned
+
+    @staticmethod
+    def _coord_event(c: Clause, t: float, n_shards: int) -> TimelineEvent:
+        if n_shards < 2:
+            raise ValueError(
+                f"scenario clause {c} targets the coordination plane, but the "
+                f"fleet declares {n_shards} coordinator(s); add the '/cK' "
+                "fleet suffix (e.g. '4:3:2:1/c2')"
+            )
+        if c.action == "heal":
+            return TimelineEvent(t, "heal", None)
+        if c.action == "ckill":
+            shard = int(c.worker)
+            if shard >= n_shards:
+                raise ValueError(
+                    f"ckill clause {c} names shard {shard}, but the fleet has "
+                    f"coordinator shards 0..{n_shards - 1}"
+                )
+            return TimelineEvent(t, "ckill", shard)
+        groups = tuple(
+            tuple(int(x) for x in g.split("+")) for g in c.worker.split("|")
+        )
+        seen: set[int] = set()
+        for g in groups:
+            for s in g:
+                if s >= n_shards:
+                    raise ValueError(
+                        f"partition clause {c} names shard {s}, but the fleet "
+                        f"has coordinator shards 0..{n_shards - 1}"
+                    )
+                if s in seen:
+                    raise ValueError(
+                        f"partition clause {c} lists shard {s} twice"
+                    )
+                seen.add(s)
+        return TimelineEvent(t, "partition", groups)
+
+
+@dataclasses.dataclass
+class _Planned:
+    """One compiled event with both resolutions: the up-front estimate
+    (``est_t``) and the phase anchor (``phase``/``offset``) the schedule
+    re-times against true phase starts."""
+
+    est_t: float
+    phase: int | None          # None = absolute from run start
+    offset: float              # seconds into the phase (or from run start)
+    event: TimelineEvent
+    emitted: bool = False
+
+
+class ScenarioSchedule:
+    """Phase-anchored event delivery.  The workload calls ``phase_events(k,
+    start_s)`` when phase ``k`` *actually* starts (``start_s`` in the same
+    clock the returned event times should use — 0.0 for phase-relative
+    feeding, the runtime clock for absolute feeding); events anchored to
+    phase ``k`` fire at ``start_s + frac * phase_s_estimate``.  Absolute-time
+    clauses are all delivered with the first phase (late ones ride the
+    runtime's pending-event carryover).  Events for phases the run never
+    reaches are never delivered."""
+
+    def __init__(self, planned: list[_Planned]):
+        self._planned = planned
+        self._started = False
+        self._last_k = -1
+
+    def phase_events(self, k: int, start_s: float) -> tuple[TimelineEvent, ...]:
+        if k <= self._last_k:
+            raise ValueError(
+                f"phase_events({k}) after phase {self._last_k}: phases must "
+                "be visited in increasing order"
+            )
+        out: list[TimelineEvent] = []
+        for p in self._planned:
+            if p.emitted:
+                continue
+            if p.phase is None:
+                if not self._started:
+                    out.append(dataclasses.replace(
+                        p.event, time_s=start_s + p.offset))
+                    p.emitted = True
+            elif p.phase <= k:
+                # A clause for a phase this run skipped (checkpoint restore)
+                # fires at the current phase start instead of vanishing.
+                off = p.offset if p.phase == k else 0.0
+                out.append(dataclasses.replace(
+                    p.event, time_s=start_s + off))
+                p.emitted = True
+        self._started = True
+        self._last_k = k
+        return tuple(sorted(out, key=lambda ev: ev.time_s))
+
+    @property
+    def exhausted(self) -> bool:
+        return all(p.emitted for p in self._planned)

@@ -9,8 +9,10 @@ worker's perf prior, its concurrency (engine slots for serving), its backend
 optional free-form ``config`` mapping (engine/model knobs).
 
 The compact string grammar generalizes the old ``--replicas PERFxBATCH``
-launcher flag; items are comma- or colon-separated:
+launcher flag; items are comma- or colon-separated, with an optional
+coordination-plane suffix:
 
+    spec    :=  item (","|":") item ... ["/cK"]
     item    :=  [NAME=]PERF[xCONC][@PROFILE][*COUNT]
 
     "2.0x8,2.0x8,1.0x4"        three workers, slot counts 8/8/4
@@ -18,6 +20,7 @@ launcher flag; items are comma- or colon-separated:
     "4:3:2:1"                  the old --pods grammar (perf-only), unchanged
     "fast=8x4@dcn,edge=1x2"    named workers, per-backend profiles
     "2.0x4*3"                  three identical 2.0x4 workers
+    "1.0*32/c4"                32 workers dispatched by 4 coordinator shards
 
 ``str(fleet)`` emits the canonical form, which parses back to an equal spec
 (the round-trip the scenario/benchmark traceability relies on) — with one
@@ -46,8 +49,11 @@ _ITEM_RE = re.compile(
 
 _GRAMMAR_HINT = (
     "expected [NAME=]PERF[xSLOTS][@PROFILE][*COUNT] "
-    "(e.g. '8x4', 'fast=8x4@dcn', '2.0*3'); items separated by ',' or ':'"
+    "(e.g. '8x4', 'fast=8x4@dcn', '2.0*3'); items separated by ',' or ':', "
+    "optional '/cK' suffix for K coordinator shards"
 )
+
+_COORD_RE = re.compile(r"^c(\d+)$")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -93,13 +99,22 @@ class WorkerSpec:
 
 @dataclasses.dataclass(frozen=True)
 class FleetSpec:
-    """An ordered set of ``WorkerSpec``s — the declarative fleet."""
+    """An ordered set of ``WorkerSpec``s — the declarative fleet.
+
+    ``coordinators`` declares the coordination plane: 1 is the paper's single
+    TDA; K > 1 shards dispatch across K coordinator replicas (grammar suffix
+    ``/cK``, executed by ``repro.coord.ShardedCoordinator``)."""
 
     workers: tuple[WorkerSpec, ...]
+    coordinators: int = 1
 
     def __post_init__(self):
         if not self.workers:
             raise ValueError("a fleet needs at least one worker")
+        if self.coordinators < 1:
+            raise ValueError(
+                f"coordinators must be >= 1, got {self.coordinators}"
+            )
         seen = set()
         for w in self.workers:
             if w.name in seen:
@@ -125,7 +140,19 @@ class FleetSpec:
 
     @classmethod
     def _parse_str(cls, spec: str, prefix: str) -> "FleetSpec":
-        items = [s.strip() for s in re.split(r"[,:]", spec) if s.strip()]
+        body, sep, suffix = spec.partition("/")
+        coordinators = 1
+        if sep:
+            m = _COORD_RE.match(suffix.strip())
+            if m is None:
+                raise ValueError(
+                    f"bad fleet suffix {'/' + suffix!r}: want '/cK' "
+                    f"(K coordinator shards, e.g. '4:3:2:1/c2')"
+                )
+            coordinators = int(m.group(1))
+            if coordinators < 1:
+                raise ValueError("fleet suffix '/cK' needs K >= 1")
+        items = [s.strip() for s in re.split(r"[,:]", body) if s.strip()]
         if not items:
             raise ValueError(f"empty fleet spec {spec!r}: {_GRAMMAR_HINT}")
         workers: list[WorkerSpec] = []
@@ -149,7 +176,7 @@ class FleetSpec:
                     concurrency=int(m["conc"]) if m["conc"] else 1,
                     profile=m["profile"],
                 ))
-        return cls(tuple(workers))
+        return cls(tuple(workers), coordinators=coordinators)
 
     @classmethod
     def from_dicts(cls, items: Sequence, prefix: str = "w") -> "FleetSpec":
@@ -214,12 +241,16 @@ class FleetSpec:
         """The first ``k`` workers (worker-count sweeps, Fig 3/6 style)."""
         if not 1 <= k <= len(self.workers):
             raise ValueError(f"take({k}) out of range for a {len(self.workers)}-worker fleet")
-        return FleetSpec(self.workers[:k])
+        return FleetSpec(self.workers[:k], coordinators=self.coordinators)
 
     def with_worker(self, spec: WorkerSpec) -> "FleetSpec":
         """A new fleet with ``spec`` appended (or replaced, by name)."""
         kept = tuple(w for w in self.workers if w.name != spec.name)
-        return FleetSpec(kept + (spec,))
+        return FleetSpec(kept + (spec,), coordinators=self.coordinators)
+
+    def with_coordinators(self, k: int) -> "FleetSpec":
+        """The same fleet dispatched by ``k`` coordinator shards."""
+        return FleetSpec(self.workers, coordinators=k)
 
     def total_rate(self) -> float:
         return sum(w.rate for w in self.workers)
@@ -244,4 +275,7 @@ class FleetSpec:
 
     # -- canonical form ------------------------------------------------------
     def __str__(self) -> str:
-        return ",".join(w.compact() for w in self.workers)
+        s = ",".join(w.compact() for w in self.workers)
+        if self.coordinators > 1:
+            s += f"/c{self.coordinators}"
+        return s

@@ -26,10 +26,13 @@ from .performance import PerformanceTracker, PerfReport, WorkerState
 from .runtime import (
     AsyncRuntime,
     CallableGrainExecutor,
+    DispatchAuthority,
     GrainExecutor,
     GrainRecord,
+    JobContext,
     RuntimeResult,
     SimWorker,
+    SingleCoordinator,
     TimelineEvent,
 )
 from .scheduler import GrainPlan, HomogenizedScheduler, should_replan
@@ -55,10 +58,13 @@ __all__ = [
     "should_replan",
     "AsyncRuntime",
     "CallableGrainExecutor",
+    "DispatchAuthority",
     "GrainExecutor",
     "GrainRecord",
+    "JobContext",
     "RuntimeResult",
     "SimWorker",
+    "SingleCoordinator",
     "TimelineEvent",
     "PAPER_MACHINES",
     "REF_SIZE",

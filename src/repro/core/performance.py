@@ -139,6 +139,19 @@ class PerformanceTracker:
             p *= 0.5 ** (age / self.staleness_half_life_s)
         return p
 
+    def last_report_s(self, worker: str) -> float | None:
+        """When the worker last heartbeat (None if never seen) — the truth
+        stamp gossiped perf views are measured against."""
+        st = self._workers.get(worker)
+        return None if st is None else st.last_report_s
+
+    def n_reports(self, worker: str) -> int:
+        """How many heartbeats have been folded for ``worker`` (0 if never
+        seen).  A rejoin prior counts as one; anything above that is a
+        *measured* observation."""
+        st = self._workers.get(worker)
+        return 0 if st is None else st.n_reports
+
     def perf_vector(self, now_s: float | None = None) -> dict[str, float]:
         return {w: self.perf(w, now_s) for w in self.workers()}
 

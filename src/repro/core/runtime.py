@@ -36,6 +36,13 @@ row-blocks, serve request bundles and HDP training microbatches are three
 executors of the same loop.  ``TDAServer``/``ThinClient``,
 ``HomogenizedDispatcher``, ``ClusterSim``, ``HDPTrainer`` and ``ElasticFleet``
 are all thin clients.
+
+*Who decides* is the ``DispatchAuthority`` seam: heartbeat ingest, mid-job
+re-homogenization, stealing and kill-heir choice route through one authority
+object.  The default ``SingleCoordinator`` is the paper's single TDA (one
+global perf view, fleet-wide rebalancing).  ``repro.coord.ShardedCoordinator``
+partitions the same decisions across K coordinator replicas with gossiped
+perf views — the event loop itself never changes, only who answers it.
 """
 
 from __future__ import annotations
@@ -58,9 +65,112 @@ __all__ = [
     "CallableGrainExecutor",
     "RuntimeResult",
     "AsyncRuntime",
+    "JobContext",
+    "DispatchAuthority",
+    "SingleCoordinator",
 ]
 
 _EPS = 1e-12
+
+_COORD_KINDS = ("ckill", "partition", "heal")
+
+
+@dataclasses.dataclass
+class JobContext:
+    """The per-job state a ``DispatchAuthority`` decides over: the live
+    queues, the death set, the cost model and the ETA machinery.  ``eta_with``
+    lets an authority compute finish-time predictions under *its own* perf
+    view (a coordinator shard's gossiped table) instead of the runtime's
+    global tracker estimate."""
+
+    queues: dict[str, deque]
+    dead: set[str]
+    res: "RuntimeResult"
+    cost_of: Callable[[int], float]
+    est_perf: Callable[[str], float]                 # global tracker estimate
+    eta: Callable[[str], float]                      # eta under est_perf
+    eta_with: Callable[[str, Callable[[str], float]], float]
+    clock: Callable[[], float]
+    n_grains: int = 0
+
+
+class DispatchAuthority:
+    """Seam between the event loop and the coordination plane.
+
+    The loop asks the authority five questions: where does a heartbeat go
+    (``observe``), which queues re-homogenize together (``rebalance``), where
+    does an idle worker steal from (``steal_for``), who inherits a dead
+    worker's orphans (``heir_for``), and what does a coordinator-plane
+    timeline event mean (``apply_coord_event``).  The default answers below
+    are the single-TDA semantics the repo always had; a sharded authority
+    re-answers them per coordinator replica."""
+
+    runtime: "AsyncRuntime"
+
+    def bind(self, runtime: "AsyncRuntime") -> None:
+        self.runtime = runtime
+
+    # -- lifecycle -----------------------------------------------------------
+    def begin_job(self, ctx: JobContext) -> None:
+        pass
+
+    def end_job(self, ctx: JobContext) -> None:
+        pass
+
+    def advance(self, now_s: float, ctx: JobContext) -> None:
+        """Lazily run any time-based coordination work (gossip rounds) due at
+        or before ``now_s`` — called before every event is processed."""
+
+    # -- perf view -----------------------------------------------------------
+    def observe(self, report: PerfReport, ctx: JobContext) -> None:
+        self.runtime.tracker.observe(report)
+
+    # -- membership ----------------------------------------------------------
+    def on_join(self, name: str, ctx: JobContext | None = None) -> None:
+        pass
+
+    def on_worker_kill(self, name: str, ctx: JobContext | None = None) -> None:
+        pass
+
+    def heir_for(self, name: str, live: list[str], ctx: JobContext) -> str:
+        """Which live worker adopts a dead worker's orphaned grains."""
+        return min(live, key=ctx.eta)
+
+    # -- decisions -----------------------------------------------------------
+    def rebalance(self, ctx: JobContext, worker: str | None = None) -> None:
+        """Fleet-wide hysteresis-gated migration (the single-TDA default).
+        ``worker`` hints which worker's completion triggered the call so a
+        sharded authority can rebalance only the affected shard."""
+        rt = self.runtime
+        live = [w for w in rt.workers if w not in ctx.dead]
+        rt._rebalance(live, ctx.queues, ctx.eta, ctx.cost_of, ctx.est_perf,
+                      ctx.res)
+
+    def steal_for(self, thief: str, ctx: JobContext) -> int:
+        return self.runtime._steal_into(
+            thief, ctx.queues, ctx.eta, ctx.est_perf, ctx.res
+        )
+
+    # -- coordinator-plane events -------------------------------------------
+    def apply_coord_event(self, ev: "TimelineEvent", now_s: float,
+                          ctx: JobContext) -> None:
+        raise ValueError(
+            f"timeline event {ev.kind!r} targets the coordination plane, but "
+            "this runtime has a single coordinator; shard it first "
+            "(FleetSpec '/cK' suffix / repro.coord.ShardedCoordinator)"
+        )
+
+    def count_event(self, worker: str | None, kind: str,
+                    ctx: JobContext) -> None:
+        """Event accounting (per-shard dispatch load); free for the default."""
+
+    def stats(self):
+        """Coordination-plane stats for reports (None = single coordinator)."""
+        return None
+
+
+class SingleCoordinator(DispatchAuthority):
+    """The paper's single dispatch authority, stated explicitly."""
 
 
 class GrainExecutor:
@@ -194,12 +304,24 @@ class SimWorker:
 class TimelineEvent:
     """Scripted mid-job fleet change, in absolute simulated seconds.
 
+    Worker-plane kinds:
+
     kind = "perf":  worker's true perf becomes ``perf`` (tracker finds out
                     only through subsequent heartbeats),
     kind = "kill":  worker dies; its in-flight grain aborts and re-queues,
     kind = "join":  ``worker`` is a new worker object; ``perf`` is the prior
                     reported to the tracker (defaults to the worker's true
                     perf).
+
+    Coordinator-plane kinds (handled by the runtime's ``DispatchAuthority``;
+    a single-coordinator runtime rejects them):
+
+    kind = "ckill":     coordinator shard ``worker`` (an int id) dies; its
+                        queues and in-flight bookkeeping are taken over by
+                        its ring successor,
+    kind = "partition": gossip/steal connectivity splits into the groups in
+                        ``worker`` (a tuple of tuples of shard ids),
+    kind = "heal":      the partition heals (``worker`` is None).
     """
 
     time_s: float
@@ -208,10 +330,21 @@ class TimelineEvent:
     perf: float | None = None
 
     def __post_init__(self):
-        if self.kind not in ("perf", "kill", "join"):
+        if self.kind not in ("perf", "kill", "join", *_COORD_KINDS):
             raise ValueError(f"unknown timeline kind {self.kind!r}")
         if self.kind == "perf" and (self.perf is None or self.perf <= 0):
             raise ValueError("perf event needs perf > 0")
+        if self.kind == "ckill" and not (
+            isinstance(self.worker, int) and self.worker >= 0
+        ):
+            raise ValueError("ckill event needs a shard id >= 0")
+        if self.kind == "partition" and not (
+            isinstance(self.worker, tuple) and self.worker
+            and all(isinstance(g, tuple) and g for g in self.worker)
+        ):
+            raise ValueError(
+                "partition event needs a non-empty tuple of shard-id groups"
+            )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -239,6 +372,8 @@ class RuntimeResult:
     n_migrated: int
     n_steals: int
     end_s: float                     # absolute clock at job end
+    dead_workers: set[str] = dataclasses.field(default_factory=set)
+    coord: Any = None                # coordination-plane stats (CoordStats)
 
     def shares(self) -> dict[str, int]:
         counts: dict[str, int] = {}
@@ -248,8 +383,15 @@ class RuntimeResult:
 
     def homogenization_quality(self, workers: list[str] | None = None) -> float:
         """Max/min last-completion spread across workers that did work
-        (1.0 = everyone crossed the homogenization line together)."""
-        names = workers if workers is not None else list(self.worker_finish)
+        (1.0 = everyone crossed the homogenization line together).
+
+        Workers that died during the job are excluded by default: a killed
+        worker's truncated span is a death artifact, not a dispatch failure —
+        the homogenization question is whether the *survivors* crossed the
+        line together (pass ``workers=`` to override)."""
+        names = workers if workers is not None else [
+            w for w in self.worker_finish if w not in self.dead_workers
+        ]
         start = self.end_s - self.makespan
         spans = [
             self.worker_finish[w] - start
@@ -283,6 +425,7 @@ class AsyncRuntime:
         rehomogenize: bool = True,
         steal: bool = True,
         replan_threshold: float = 0.05,
+        authority: DispatchAuthority | None = None,
     ):
         self.tracker = tracker or PerformanceTracker(alpha=0.5)
         self.workers: dict[str, Any] = {}
@@ -291,6 +434,8 @@ class AsyncRuntime:
         self.steal = steal
         self.replan_threshold = replan_threshold
         self.clock = 0.0
+        self.authority = authority or SingleCoordinator()
+        self.authority.bind(self)
         # Timeline events scheduled past a job's last completion don't fire in
         # that job; they carry over and fire during a later job's window.
         self._pending: list[TimelineEvent] = []
@@ -307,6 +452,7 @@ class AsyncRuntime:
             # Previously-killed worker: this registration *is* the explicit
             # rejoin (observe alone would be rejected — kills are sticky).
             self.tracker.rejoin(worker.name, perf_prior or 1.0, now_s)
+        self.authority.on_join(worker.name)
 
     def add_worker(self, worker: Any, perf_prior: float | None = None) -> None:
         """Between-job join (the ``TimelineEvent('join')`` is the mid-job
@@ -320,6 +466,7 @@ class AsyncRuntime:
         a 'join' timeline event)."""
         self.workers.pop(name, None)
         self.tracker.mark_dead(name)
+        self.authority.on_worker_kill(name)
 
     # -- job ---------------------------------------------------------------
     def run(
@@ -407,15 +554,17 @@ class AsyncRuntime:
             except KeyError:
                 return _EPS
 
-        def eta(w: str) -> float:
-            """Predicted seconds until worker w's queue drains (from `now`),
-            using the tracker's *estimated* perf — the scheduler never peeks
-            at true perf."""
+        def eta_with(w: str, perf_of: Callable[[str], float]) -> float:
+            """Predicted seconds until worker w's queue drains (from `now`)
+            under the perf estimate ``perf_of`` — the global tracker's for
+            the single coordinator, a shard's gossiped view for a sharded
+            one.  The scheduler never peeks at true perf."""
+            p = max(perf_of(w), _EPS)
             if incremental:
                 sl = islots.get(w)
                 t = sum(
                     executor.remaining_cost(self.workers[w], g) for g in sl
-                ) / est_perf(w) if sl else 0.0
+                ) / p if sl else 0.0
             else:
                 t = inflight[w].end_s - now if w in inflight else 0.0
             q = queues.get(w)
@@ -423,8 +572,18 @@ class AsyncRuntime:
                 qcost = len(q) * uniform if uniform is not None else sum(
                     cost_of(g) for g in q
                 )
-                t += qcost / est_perf(w)
+                t += qcost / p
             return t
+
+        def eta(w: str) -> float:
+            return eta_with(w, est_perf)
+
+        ctx = JobContext(
+            queues=queues, dead=dead, res=res, cost_of=cost_of,
+            est_perf=est_perf, eta=eta, eta_with=eta_with,
+            clock=lambda: now, n_grains=n_grains,
+        )
+        self.authority.begin_job(ctx)
 
         def abort_inflight(w: str) -> list[int]:
             """Withdraw w's never-completed in-flight work (kill path) so the
@@ -448,7 +607,7 @@ class AsyncRuntime:
                 return
             q = queues[w]
             if not q and self.steal:
-                self._steal_into(w, queues, eta, est_perf, res)
+                self.authority.steal_for(w, ctx)
             if not q:
                 return
             g = q.popleft()
@@ -469,7 +628,7 @@ class AsyncRuntime:
             free = executor.concurrency(worker) - len(sl)
             q = queues[w]
             if not q and free > 0 and self.steal:
-                self._steal_into(w, queues, eta, est_perf, res)
+                self.authority.steal_for(w, ctx)
             while free > 0 and q:
                 g = q.popleft()
                 executor.begin(worker, g, now)
@@ -491,13 +650,17 @@ class AsyncRuntime:
                     raise RuntimeError("all workers dead with grains pending")
                 raise RuntimeError("runtime stalled with grains pending")
             now, prio, _, payload = heapq.heappop(heap)
+            self.authority.advance(now, ctx)
 
             if prio == 0:  # timeline event
-                self._apply_timeline(
-                    payload, now, queues, abort_inflight, dead, eta, res
+                self.authority.count_event(
+                    payload.worker if isinstance(payload.worker, str) else None,
+                    "timeline", ctx,
                 )
+                self._apply_timeline(payload, now, queues, abort_inflight,
+                                     dead, ctx)
                 if self.rehomogenize:
-                    self._rebalance(queues, dead, eta, cost_of, est_perf, res)
+                    self.authority.rebalance(ctx)
                 kick_idle()
                 continue
 
@@ -507,6 +670,7 @@ class AsyncRuntime:
                 if w in dead or tk is None or abs(tk[0] - now) > 1e-9:
                     continue  # stale tick (worker died)
                 del ticks[w]
+                self.authority.count_event(w, "tick", ctx)
                 worker = self.workers[w]
                 finished = executor.tick(worker, now)
                 sl = islots.get(w, {})
@@ -526,9 +690,9 @@ class AsyncRuntime:
                 # worker's step clock — replaces the modeled per-grain report.
                 hb = executor.heartbeat(worker, now)
                 if hb is not None:
-                    self.tracker.observe(hb)
+                    self.authority.observe(hb, ctx)
                 if finished and self.rehomogenize:
-                    self._rebalance(queues, dead, eta, cost_of, est_perf, res)
+                    self.authority.rebalance(ctx, worker=w)
                 kick_idle()
                 continue
 
@@ -536,6 +700,7 @@ class AsyncRuntime:
             if fl is None or w in dead or abs(fl.end_s - now) > 1e-9:
                 continue  # stale event (worker died or grain was aborted)
             del inflight[w]
+            self.authority.count_event(w, "completion", ctx)
             dur = now - fl.start_s
             res.records.append(GrainRecord(fl.grain, w, fl.start_s, now, fl.cost))
             if fl.grain in res.executed_by:
@@ -545,9 +710,9 @@ class AsyncRuntime:
             res.worker_finish[w] = now
             res.worker_busy[w] = res.worker_busy.get(w, 0.0) + dur
             # Heartbeat: the background process reports observed throughput.
-            self.tracker.observe(PerfReport(w, fl.cost, max(dur, _EPS), now))
+            self.authority.observe(PerfReport(w, fl.cost, max(dur, _EPS), now), ctx)
             if self.rehomogenize:
-                self._rebalance(queues, dead, eta, cost_of, est_perf, res)
+                self.authority.rebalance(ctx, worker=w)
             kick_idle()
 
         # Unfired timeline events (scheduled past the last completion) carry
@@ -556,6 +721,9 @@ class AsyncRuntime:
         self.clock = now
         res.end_s = now
         res.makespan = now - start_clock
+        res.dead_workers = set(dead)
+        self.authority.end_job(ctx)
+        res.coord = self.authority.stats()
         return res
 
     def plan(self, n_grains: int, now_s: float | None = None) -> GrainPlan:
@@ -593,13 +761,14 @@ class AsyncRuntime:
             start += share
         return queues
 
-    def _steal_into(self, thief, queues, eta, est_perf, res):
+    def _steal_into(self, thief, queues, eta, est_perf, res) -> int:
         """Idle worker steals the tail of the worst-ETA queue, split by
         scope_lengths over {victim, thief} — proportional re-homogenization
-        of the victim's remainder."""
+        of the victim's remainder.  ``queues`` may be a sub-fleet (one
+        coordinator shard's workers); returns the number of grains moved."""
         victims = [w for w, q in queues.items() if q and w != thief]
         if not victims:
-            return
+            return 0
         victim = max(victims, key=eta)
         q = queues[victim]
         shares = scope_lengths(len(q), [est_perf(victim), est_perf(thief)])
@@ -607,18 +776,20 @@ class AsyncRuntime:
         if take <= 0 and len(q) > 1:
             take = 1  # a slow-estimated thief still beats an idle one
         if take <= 0:
-            return
+            return 0
         stolen = [q.pop() for _ in range(take)]
         queues[thief].extend(reversed(stolen))
         res.n_steals += 1
         res.n_migrated += take
+        return take
 
-    def _rebalance(self, queues, dead, eta, cost_of, est_perf, res):
+    def _rebalance(self, live, queues, eta, cost_of, est_perf, res):
         """Hysteresis-gated migration of unstarted grains from the
         latest-finishing worker to the earliest-finishing one.  Each move must
         strictly reduce the fleet's max predicted finish time, so the loop
-        terminates and never thrashes."""
-        live = [w for w in self.workers if w not in dead]
+        terminates and never thrashes.  ``live``/``queues`` scope the
+        decision: the whole fleet for the single coordinator, one shard's
+        workers for a sharded one."""
         if len(live) < 2:
             return
         etas = {w: eta(w) for w in live}
@@ -650,7 +821,10 @@ class AsyncRuntime:
             res.n_migrated += moved
 
     def _apply_timeline(self, ev: TimelineEvent, now, queues, abort_inflight,
-                        dead, eta, res):
+                        dead, ctx: JobContext):
+        if ev.kind in _COORD_KINDS:
+            self.authority.apply_coord_event(ev, now, ctx)
+            return
         if ev.kind == "perf":
             # Stale scripts (unknown or already-dead worker) are no-ops, same
             # as the kill branch below.
@@ -677,10 +851,11 @@ class AsyncRuntime:
         # resurrect it in the tracker).  A rejoin re-registers it.
         self.workers.pop(name)
         self.tracker.mark_dead(name)
+        self.authority.on_worker_kill(name, ctx)
         queues[name] = deque()
         live = [w for w in self.workers if w not in dead]
         if not live and orphans:
             raise RuntimeError("all workers dead with grains pending")
         if orphans:
-            heir = min(live, key=eta)
+            heir = self.authority.heir_for(name, live, ctx)
             queues[heir].extend(orphans)

@@ -139,17 +139,22 @@ class ThinClient:
     ``homogenize=False`` on the server degrades to the paper's static
     equal-split baseline (no re-homogenization, no stealing)."""
 
-    def __init__(self, server: TDAServer, sim: ClusterSim | None = None):
+    def __init__(self, server: TDAServer, sim: ClusterSim | None = None,
+                 authority=None):
         self.server = server
         self.sim = sim or ClusterSim(
             perfs=[p.perf for p in server.providers]
         )
+        # ``authority`` plugs a coordination plane under the triangle: the
+        # default is the paper's single TDA; a coord.ShardedCoordinator
+        # partitions dispatch across K replicas (``FleetSpec`` '/cK').
         self.runtime = AsyncRuntime(
             server.providers,
             tracker=server.tracker,
             homogenize=server.homogenize,
             rehomogenize=server.homogenize,
             steal=server.homogenize,
+            authority=authority,
         )
         self.last_result: RuntimeResult | None = None
 

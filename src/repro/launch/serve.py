@@ -88,7 +88,11 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--fleet", "--replicas", dest="fleet", default="8x4:4x2:2x1",
                     help="FleetSpec grammar: [NAME=]PERFxSLOTS[@PROFILE] per "
-                         "replica, ','/':'-separated (engine steps/sec x slots)")
+                         "replica, ','/':'-separated (engine steps/sec x slots), "
+                         "optional '/cK' suffix for K coordinator shards")
+    ap.add_argument("--coordinators", type=int, default=None,
+                    help="shard dispatch across K coordinator replicas "
+                         "(overrides the fleet's '/cK' suffix)")
     ap.add_argument("--queue-depth", type=int, default=8,
                     help="admission control: max unstarted requests queued "
                          "per replica per wave")
@@ -108,6 +112,8 @@ def main() -> None:
     model = Model(cfg)
     params = model.init(jax.random.key(0))
     fleet = FleetSpec.parse(args.fleet, prefix="r")
+    if args.coordinators is not None:
+        fleet = fleet.with_coordinators(args.coordinators)
     scenario = Scenario.from_arg(args.scenario, fleet.names[0])
 
     requests = make_requests(args.requests, cfg.vocab_size, args.max_new)
@@ -133,6 +139,8 @@ def main() -> None:
           f"(worst quality {rep.homogenization_quality():.2f}, "
           f"{rep.measured_speedup:.2f}x measured vs "
           f"{rep.predicted_speedup:.2f}x predicted speedup)")
+    if rep.coord is not None:
+        print(f"coordination plane: {rep.coord.summary()}")
 
     if args.compare_serial:
         serial = Cluster(fleet).serve(

@@ -44,10 +44,15 @@ def main() -> None:
     ap.add_argument("--grains", type=int, default=8)
     ap.add_argument("--fleet", "--pods", dest="fleet", default="4:3:2:1",
                     help="hdp fleet in FleetSpec grammar: "
-                         "[NAME=]PERF[@PROFILE] per pod, ','/':'-separated")
+                         "[NAME=]PERF[@PROFILE] per pod, ','/':'-separated, "
+                         "optional '/cK' suffix for K coordinator shards")
+    ap.add_argument("--coordinators", type=int, default=None,
+                    help="shard dispatch across K coordinator replicas "
+                         "(overrides the fleet's '/cK' suffix)")
     ap.add_argument("--scenario", default="none",
                     help="hdp fault script: 'none'|'halving'|'kill' or a "
-                         "Scenario DSL string, e.g. 'halve:pod0@3:25%%'")
+                         "Scenario DSL string, e.g. 'halve:pod0@3:25%%' or "
+                         "'ckill:0@1:25%%' (coordinator-shard kill)")
     ap.add_argument("--static", action="store_true",
                     help="hdp: disable mid-step migration/stealing (each step "
                          "runs its initial plan to completion)")
@@ -83,6 +88,8 @@ def main() -> None:
         return
 
     fleet = FleetSpec.parse(args.fleet, prefix="pod")
+    if args.coordinators is not None:
+        fleet = fleet.with_coordinators(args.coordinators)
     scenario = Scenario.from_arg(args.scenario, fleet.names[0])
     cluster = Cluster(fleet, adaptive=not args.static)
     rep = cluster.train(
@@ -98,6 +105,8 @@ def main() -> None:
                   f"t={p.sim_time_s:.2f}s q={p.quality:.2f} "
                   f"mig={p.n_migrated} plan[{plan}]")
     print(rep.summary())
+    if rep.coord is not None:
+        print(f"coordination plane: {rep.coord.summary()}")
     trainer = rep.artifact
     if trainer.ckpt:
         trainer.ckpt.wait()

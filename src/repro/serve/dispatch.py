@@ -51,16 +51,19 @@ class DispatchResult:
 
 class HomogenizedDispatcher:
     def __init__(self, replicas: Sequence[Replica], homogenize: bool = True,
-                 alpha: float = 0.5):
+                 alpha: float = 0.5, authority=None):
         self.replicas = {r.name: r for r in replicas}
         self.homogenize = homogenize
         self.tracker = PerformanceTracker(alpha=alpha, dead_after_s=1e9)
+        # ``authority`` shards the dispatch plane (coord.ShardedCoordinator);
+        # None keeps the single-coordinator default.
         self.runtime = AsyncRuntime(
             list(replicas),
             tracker=self.tracker,
             homogenize=homogenize,
             rehomogenize=homogenize,
             steal=homogenize,
+            authority=authority,
         )
 
     @property

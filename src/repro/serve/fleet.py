@@ -78,6 +78,7 @@ class FleetServer:
         homogenize: bool = True,
         alpha: float = 0.5,
         engine_factory=None,
+        authority=None,
     ):
         if max_queue_depth < 1:
             raise ValueError("max_queue_depth must be >= 1")
@@ -85,7 +86,7 @@ class FleetServer:
         if missing and engine_factory is None:
             raise ValueError(f"replicas without engines {sorted(missing)}")
         self.dispatcher = HomogenizedDispatcher(
-            replicas, homogenize=homogenize, alpha=alpha
+            replicas, homogenize=homogenize, alpha=alpha, authority=authority
         )
         self.engines = dict(engines)
         self.max_queue_depth = max_queue_depth
@@ -117,14 +118,24 @@ class FleetServer:
         requests: Sequence,
         timeline: tuple[TimelineEvent, ...] = (),
         batched: bool = True,
+        timeline_fn=None,
     ) -> FleetReport:
         """Serve ``requests`` in admission-controlled waves; returns per-wave
         and aggregate measured throughput.  ``batched=False`` routes every
         wave through the per-request-serial baseline instead (same admission
-        control, no slot-level batching) — the benchmark's comparison axis."""
+        control, no slot-level batching) — the benchmark's comparison axis.
+
+        ``timeline_fn(wave_idx) -> events`` is the *wave-start callback*
+        form: called as each wave actually begins, returning that wave's
+        events with times relative to the wave start — so phase-anchored
+        scenarios (``ScenarioSchedule``) see true wave boundaries instead of
+        plan-based estimates.  Mutually exclusive with ``timeline``."""
+        if timeline_fn is not None and timeline:
+            raise ValueError("pass either timeline or timeline_fn, not both")
         backlog = deque(requests)
         bundles: list[BundleStats] = []
         first = True
+        wave_idx = 0
         while backlog:
             live = self.live_replicas()
             if not live:
@@ -133,16 +144,21 @@ class FleetServer:
                 )
             quota = self.max_queue_depth * len(live)
             wave = [backlog.popleft() for _ in range(min(quota, len(backlog)))]
+            if timeline_fn is not None:
+                wave_timeline = tuple(timeline_fn(wave_idx))
+            else:
+                wave_timeline = timeline if first else ()
             res, run = self.dispatcher.dispatch_to_engines(
                 {n: self.engines[n] for n in live if n in self.engines},
                 wave,
-                timeline=timeline if first else (),
+                timeline=wave_timeline,
                 batched=batched,
                 engine_factory=(
                     self._factory if self.engine_factory is not None else None
                 ),
             )
             first = False
+            wave_idx += 1
             tokens = sum(len(r.out_tokens) for r in wave)
             wave_start = run.end_s - run.makespan if run is not None else 0.0
             bundles.append(BundleStats(

@@ -193,7 +193,7 @@ class _GrainGradExecutor(GrainExecutor):
 
 class HDPTrainer:
     def __init__(self, model: Model, pods: list[Pod], cfg: HDPConfig,
-                 opt_cfg: AdamWConfig | None = None):
+                 opt_cfg: AdamWConfig | None = None, authority=None):
         self.model = model
         self.pods = {p.name: p for p in pods}
         self.cfg = cfg
@@ -223,6 +223,8 @@ class HDPTrainer:
             if pod is None or not pod.alive:
                 self.tracker.mark_dead(name)
         live = [p for p in pods if p.alive]
+        # ``authority`` shards the coordination plane (coord.
+        # ShardedCoordinator); None keeps the single-coordinator default.
         self.runtime = AsyncRuntime(
             live,
             tracker=self.tracker,
@@ -230,6 +232,7 @@ class HDPTrainer:
             rehomogenize=cfg.adaptive and cfg.homogenize,
             steal=cfg.adaptive and cfg.homogenize,
             replan_threshold=cfg.replan_threshold,
+            authority=authority,
         )
         self.runtime.clock = clock
         self.residuals = (
@@ -242,6 +245,7 @@ class HDPTrainer:
             donate_argnums=(1,),
         )
         self._timeline: list[TimelineEvent] = []
+        self._step_hooks: list[Callable[[int, float], object]] = []
         self.history: list[dict] = []
 
     @property
@@ -272,6 +276,14 @@ class HDPTrainer:
         window covers it; events past a step's last completion carry over."""
         self._timeline.append(event)
 
+    def add_step_hook(self, hook: Callable[[int, float], object]) -> None:
+        """Register a *step-start callback*: ``hook(step_idx, clock_s)`` is
+        called as each step actually begins and returns an iterable of
+        ``TimelineEvent``s (absolute times) to schedule.  This is how
+        phase-anchored scenarios (``cluster.ScenarioSchedule``) see true
+        step boundaries instead of plan-based estimates."""
+        self._step_hooks.append(hook)
+
     # -- plan inspection -----------------------------------------------------
     def plan_preview(self) -> GrainPlan:
         """The allotment the next step would start from — exactly what the
@@ -287,6 +299,8 @@ class HDPTrainer:
         # grain data — which pod ran a grain (and in what completion order)
         # cannot change the update.
         combine = _PrefixCombine(cfg.compress_grads, self.residuals)
+        for hook in self._step_hooks:
+            self._timeline.extend(hook(step_idx, self.runtime.clock))
         events, self._timeline = tuple(self._timeline), []
         res = self.runtime.run(
             cfg.total_grains,

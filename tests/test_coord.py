@@ -1,0 +1,537 @@
+"""Coordination plane: sharded dispatch, gossip convergence, coordinator
+faults.
+
+The invariants the K-sharded authority must hold:
+
+  - K=1 sharding is *exactly* the single coordinator (same executed_by, same
+    makespan) — the seam changes who decides, never what happens,
+  - gossip converges: every shard's perf view equals the single-tracker view
+    within the dissemination bound (ceil(log2 K) rounds at fanout 1),
+  - no grain is ever executed twice or lost — under ckill (coordinator
+    death + successor takeover), partition/heal, and cross-shard steals,
+  - a ckill mid-matmul leaves the product bitwise identical to the no-fault
+    run; partition/heal runs are deterministic under fixed seeds,
+  - quality at K=4 stays within tolerance of K=1 (the homogenization
+    invariant survives decentralization).
+
+Plus the PR's satellites: /cK grammar, ckill/partition/heal scenario
+clauses, phase-anchored scheduling, dead-worker-exclusion in quality, and
+heartbeat-based backend-profile auto-selection.
+"""
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    Cluster,
+    CoordSpec,
+    FleetSpec,
+    MatmulJob,
+    Scenario,
+    SimJob,
+)
+from repro.coord import GossipBus, ShardedCoordinator, rendezvous_shard
+from repro.core import (
+    AsyncRuntime,
+    PerformanceTracker,
+    PerfReport,
+    SimWorker,
+    TimelineEvent,
+)
+
+
+def mk_runtime(perfs, k=None, fanout=1, period_s=None, **rt_kw):
+    """Oracle-seeded fleet on a (possibly sharded) runtime."""
+    workers = [SimWorker(f"w{i}", float(p)) for i, p in enumerate(perfs)]
+    tracker = PerformanceTracker(alpha=0.5)
+    for w in workers:
+        tracker.observe(PerfReport(w.name, w.perf, 1.0, 0.0))
+    authority = None
+    if k is not None:
+        authority = ShardedCoordinator(
+            CoordSpec(coordinators=k, fanout=fanout, period_s=period_s)
+        )
+    return AsyncRuntime(workers, tracker=tracker, authority=authority, **rt_kw)
+
+
+# ============================================================== spec grammar
+def test_fleet_spec_coordinator_suffix_round_trip():
+    f = FleetSpec.parse("4:3:2:1/c2")
+    assert f.coordinators == 2
+    assert str(f) == "w0=4,w1=3,w2=2,w3=1/c2"
+    assert FleetSpec.parse(str(f)) == f
+    assert FleetSpec.parse("4:2").coordinators == 1
+    assert "/c" not in str(FleetSpec.parse("4:2"))
+    assert FleetSpec.parse("1.0*8/c4").coordinators == 4
+
+
+def test_fleet_spec_coordinator_suffix_threads_through_views():
+    f = FleetSpec.parse("8x4:4x2:2x1/c2")
+    assert f.take(2).coordinators == 2
+    assert f.with_coordinators(4).coordinators == 4
+    assert f.with_worker(f.workers[0]).coordinators == 2
+
+
+@pytest.mark.parametrize("bad,match", [
+    ("4:2/c0", "needs K >= 1"),
+    ("4:2/k2", "want '/cK'"),
+    ("4:2/c", "want '/cK'"),
+])
+def test_fleet_spec_bad_coordinator_suffix_rejected(bad, match):
+    with pytest.raises(ValueError, match=match):
+        FleetSpec.parse(bad)
+
+
+# =========================================================== scenario clauses
+def test_scenario_coord_clauses_round_trip():
+    text = "ckill:1@25%;partition:0+1|2@5;heal@2:50%"
+    sc = Scenario.parse(text)
+    assert str(sc) == text
+    assert str(Scenario.parse(str(sc))) == text
+
+
+def test_scenario_coord_clauses_compile_to_plane_events():
+    fleet = FleetSpec.parse("4:3:2:1/c4")
+    tl = Scenario.parse("ckill:1@2;partition:0+1|2+3@4;heal@6").compile(fleet)
+    assert tl[0] == TimelineEvent(2.0, "ckill", 1)
+    assert tl[1] == TimelineEvent(4.0, "partition", ((0, 1), (2, 3)))
+    assert tl[2] == TimelineEvent(6.0, "heal", None)
+
+
+@pytest.mark.parametrize("bad,match", [
+    ("ckill:x@5", "want ckill:SHARD@TIME"),
+    ("partition:0,1@5", "bad scenario clause"),       # ',' splits clauses
+    ("partition:0+1@5", "partition:GROUPS@TIME"),     # a single group
+    ("heal:now@5", "want heal@TIME"),
+])
+def test_scenario_coord_clauses_malformed_rejected(bad, match):
+    with pytest.raises(ValueError, match=match):
+        Scenario.parse(bad)
+
+
+def test_scenario_coord_clauses_validated_against_fleet():
+    single = FleetSpec.parse("4:2")
+    with pytest.raises(ValueError, match="'/cK'"):
+        Scenario.parse("ckill:0@5").compile(single)
+    sharded = FleetSpec.parse("4:2/c2")
+    with pytest.raises(ValueError, match="shards 0..1"):
+        Scenario.parse("ckill:2@5").compile(sharded)
+    with pytest.raises(ValueError, match="shards 0..1"):
+        Scenario.parse("partition:0|5@1").compile(sharded)
+    with pytest.raises(ValueError, match="twice"):
+        Scenario.parse("partition:0+1|1@1").compile(sharded)
+
+
+# ================================================================= gossip bus
+@pytest.mark.parametrize("k", [2, 4, 8])
+def test_gossip_converges_within_log2_rounds(k):
+    """Satellite acceptance: every shard's view equals the union (the
+    single-tracker view) after <= ceil(log2 K) rounds at fanout 1."""
+    bus = GossipBus(k, fanout=1, period_s=1.0)
+    for s in range(k):
+        bus.views[s].update(f"w{s}", perf=float(s + 1), stamp=float(s))
+    for _ in range(bus.rounds_to_converge(k)):
+        bus.run_round(list(range(k)))
+    for s in range(k):
+        view = bus.views[s]
+        assert set(view.entries) == {f"w{i}" for i in range(k)}, (s, view.entries)
+        for i in range(k):
+            assert view.entries[f"w{i}"].perf == float(i + 1)
+
+
+def test_gossip_higher_fanout_converges_faster():
+    bus = GossipBus(4, fanout=2, period_s=1.0)
+    assert bus.rounds_to_converge(4) == 1
+    for s in range(4):
+        bus.views[s].update(f"w{s}", perf=1.0, stamp=0.0)
+    bus.run_round([0, 1, 2, 3])
+    assert all(len(v.entries) == 4 for v in bus.views)
+
+
+def test_gossip_merge_is_staleness_aware():
+    """A delayed message must never roll a view backwards."""
+    bus = GossipBus(2, period_s=1.0)
+    bus.views[0].update("w", perf=2.0, stamp=10.0)
+    bus.views[1].update("w", perf=9.0, stamp=3.0)       # older observation
+    bus.run_round([0, 1])
+    assert bus.views[0].entries["w"].perf == 2.0        # not overwritten
+    assert bus.views[1].entries["w"].perf == 2.0        # updated forward
+    assert bus.views[1].entries["w"].stamp == 10.0
+
+
+def test_rendezvous_assignment_consistent_and_minimal_movement():
+    workers = [f"w{i}" for i in range(64)]
+    full = {w: rendezvous_shard(w, [0, 1, 2, 3]) for w in workers}
+    # deterministic
+    assert full == {w: rendezvous_shard(w, [0, 1, 2, 3]) for w in workers}
+    # every shard gets a reasonable share of 64 workers
+    counts = {s: sum(1 for v in full.values() if v == s) for s in range(4)}
+    assert all(c >= 4 for c in counts.values()), counts
+    # removing shard 3: only its workers move
+    reduced = {w: rendezvous_shard(w, [0, 1, 2]) for w in workers}
+    moved = [w for w in workers if reduced[w] != full[w]]
+    assert set(moved) == {w for w in workers if full[w] == 3}
+
+
+# ========================================================== sharded dispatch
+def test_k1_sharded_is_exactly_the_single_coordinator():
+    """The seam invariant: one shard that owns everyone makes the same
+    decisions as the default authority — bit-for-bit the same run."""
+    perfs = [4.0, 3.0, 2.0, 1.0] * 4
+    timeline = (TimelineEvent(2.0, "perf", "w0", perf=1.0),)
+    base = mk_runtime(perfs).run(400, timeline=timeline)
+    shard = mk_runtime(perfs, k=1).run(400, timeline=timeline)
+    assert shard.executed_by == base.executed_by
+    assert shard.makespan == base.makespan
+    assert shard.coord is not None and base.coord is None
+
+
+def test_k4_exactly_once_and_quality_within_10pct_of_k1():
+    perfs = [2.0, 1.5, 1.0, 0.5] * 8
+    timeline = (TimelineEvent(1.0, "perf", "w0", perf=1.0),)
+    r1 = mk_runtime(perfs).run(1024, timeline=timeline)
+    r4 = mk_runtime(perfs, k=4).run(1024, timeline=timeline)
+    assert sorted(r4.executed_by) == list(range(1024))
+    assert r4.homogenization_quality() <= r1.homogenization_quality() * 1.1
+    stats = r4.coord
+    assert stats.total_events >= 1024
+    # the event stream actually decentralizes: no shard hoards it
+    assert stats.max_shard_events <= 0.5 * stats.total_events
+    assert stats.dispatch_throughput > 2.0 / stats.event_cost_s
+
+
+def test_sharded_views_converge_to_tracker_after_gossip():
+    """Integration form of the convergence bound: after a run plus the
+    dissemination bound's worth of rounds, every live shard's raw view
+    equals the tracker's EMA for every live worker."""
+    rt = mk_runtime([2.0, 1.0] * 8, k=4)
+    rt.run(512)
+    auth = rt.authority
+    for _ in range(auth.bus.rounds_to_converge(len(auth.alive))):
+        auth.bus.run_round(sorted(auth.alive))
+    for s in sorted(auth.alive):
+        for w in rt.workers:
+            assert auth.bus.views[s].entries[w].perf == pytest.approx(
+                rt.tracker.perf(w)), (s, w)
+
+
+def test_cross_shard_steal_fills_drained_shard():
+    """A shard whose queues drain pulls work from a remote shard's worst
+    queue instead of idling (the gossiped-perf proportional steal).  Perfs
+    are assigned *by shard* — everything shard 0 owns is 8x faster — so the
+    fast shard must drain first and cross the shard boundary for work."""
+    names = [f"w{i}" for i in range(12)]
+    shard_of = {w: rendezvous_shard(w, [0, 1]) for w in names}
+    assert set(shard_of.values()) == {0, 1}
+    workers = [SimWorker(w, 8.0 if shard_of[w] == 0 else 1.0) for w in names]
+    tracker = PerformanceTracker(alpha=0.5)
+    for w in workers:
+        tracker.observe(PerfReport(w.name, w.perf, 1.0, 0.0))
+    rt = AsyncRuntime(workers, tracker=tracker,
+                      authority=ShardedCoordinator(CoordSpec(2)))
+    res = rt.run(400)
+    assert sorted(res.executed_by) == list(range(400))
+    assert res.coord.cross_steals > 0
+    assert res.homogenization_quality() <= 1.3
+
+
+# ========================================================= coordinator faults
+def test_ckill_successor_takeover_exactly_once():
+    rt = mk_runtime([1.0] * 8, k=4)
+    res = rt.run(
+        400, timeline=(TimelineEvent(5.0, "ckill", 1),)
+    )
+    assert sorted(res.executed_by) == list(range(400))
+    auth = rt.authority
+    assert auth.alive == {0, 2, 3}
+    assert res.coord.takeovers == 1 and res.coord.n_ckills == 1
+    # shard 1's workers now answer to its ring successor (shard 2)
+    adopted = [w for w, s in auth.owner.items() if s == 2]
+    assert any(rendezvous_shard(w, [0, 1, 2, 3]) == 1 for w in adopted)
+    assert not [w for w, s in auth.owner.items() if s == 1]
+
+
+def test_ckill_is_sticky_and_stale_ckill_is_noop():
+    rt = mk_runtime([1.0] * 4, k=2)
+    rt.run(40, timeline=(TimelineEvent(1.0, "ckill", 0),
+                         TimelineEvent(2.0, "ckill", 0)))
+    assert rt.authority.alive == {1}
+    assert rt.authority.n_ckills == 1          # the second was stale
+    # the survivor keeps dispatching later jobs
+    res = rt.run(40)
+    assert sorted(res.executed_by) == list(range(40))
+
+
+def test_ckill_of_last_shard_raises():
+    rt = mk_runtime([1.0] * 4, k=2)
+    with pytest.raises(RuntimeError, match="coordination plane"):
+        rt.run(100, timeline=(TimelineEvent(1.0, "ckill", 0),
+                              TimelineEvent(2.0, "ckill", 1)))
+
+
+def test_coord_event_on_single_coordinator_rejected():
+    rt = mk_runtime([1.0] * 2)
+    with pytest.raises(ValueError, match="single coordinator"):
+        rt.run(50, timeline=(TimelineEvent(1.0, "ckill", 0),))
+
+
+def test_ckill_midjob_matmul_bitwise_identical():
+    """The acceptance criterion: coordinator death mid-matmul never double-
+    executes or loses a grain — the product is bitwise the no-fault run's."""
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((80, 24)).astype(np.float32)
+    b = rng.standard_normal((24, 24)).astype(np.float32)
+    fleet = "1*8/c2"
+    faulted = Cluster(fleet, priors="spec").simulate(
+        MatmulJob(a, b), scenario="ckill:0@25%")
+    clean = Cluster(fleet, priors="spec").simulate(MatmulJob(a, b))
+    assert faulted.metrics["max_abs_err"] == 0.0
+    assert np.array_equal(faulted.artifact, clean.artifact)
+    assert np.array_equal(faulted.artifact, a @ b)
+    assert faulted.coord.takeovers == 1
+
+
+def test_partition_heal_deterministic_and_counted():
+    def run_once():
+        rt = mk_runtime([2.0, 1.0] * 4, k=4, period_s=0.5)
+        res = rt.run(300, timeline=(
+            TimelineEvent(2.0, "partition", ((0, 1), (2, 3))),
+            TimelineEvent(20.0, "heal", None),
+        ))
+        return res, rt.authority
+
+    r1, a1 = run_once()
+    r2, a2 = run_once()
+    assert sorted(r1.executed_by) == list(range(300))
+    assert r1.executed_by == r2.executed_by          # fixed seed determinism
+    assert r1.makespan == r2.makespan
+    assert a1.bus.n_suppressed == a2.bus.n_suppressed
+    assert a1.bus.n_suppressed > 0                   # the partition bit
+    assert a1.groups is None                         # healed
+
+
+def test_partition_suppresses_cross_shard_steals():
+    """During a partition, a drained shard must not steal across the cut."""
+    rt = mk_runtime([8.0, 8.0, 1.0, 1.0], k=2, period_s=0.5)
+    # w0/w1 (fast) and w2/w3 (slow) — rendezvous may mix them across the two
+    # shards, so assert the conservative invariant: the run completes with
+    # grains exactly-once and no cross-group steal while partitioned.
+    res = rt.run(200, timeline=(
+        TimelineEvent(0.0, "partition", ((0,), (1,))),
+    ))
+    assert sorted(res.executed_by) == list(range(200))
+    assert rt.authority.groups is not None
+    assert res.coord.cross_steals == 0
+
+
+# ===================================================== facade + run reports
+def test_cluster_facade_coord_stats_on_report():
+    rep = Cluster("1.0*16/c4", priors="spec").simulate(
+        SimJob(size=256, n_jobs=2), scenario="halve:w0@25%")
+    st = rep.coord
+    assert st is not None and st.n_shards == 4
+    assert sum(st.events_per_shard.values()) == st.total_events
+    assert st.gossip_rounds > 0 and st.gossip_messages > 0
+    assert st.staleness_max_s >= st.staleness_mean_s >= 0.0
+    d = st.as_dict()
+    assert d["dispatch_throughput"] == pytest.approx(st.dispatch_throughput)
+    assert "coord[" in rep.summary()
+    # unsharded cluster: no coord block
+    assert Cluster("4:2", priors="spec").simulate(SimJob(size=64)).coord is None
+
+
+def test_cluster_coord_kwarg_without_fleet_suffix():
+    rep = Cluster("1.0*8", priors="spec", coord=CoordSpec(2)).simulate(
+        SimJob(size=128))
+    assert rep.coord.n_shards == 2
+
+
+def test_coord_spec_validation():
+    with pytest.raises(ValueError, match="coordinators"):
+        CoordSpec(0)
+    with pytest.raises(ValueError, match="fanout"):
+        CoordSpec(2, fanout=0)
+    with pytest.raises(ValueError, match="period"):
+        CoordSpec(2, period_s=0.0)
+    with pytest.raises(ValueError, match="event_cost_s"):
+        CoordSpec(2, event_cost_s=0.0)
+
+
+# ===================================================== satellites: anchoring
+def test_phase_anchored_scenario_does_not_drift():
+    """'@5:50%' must land inside phase 5 even when earlier faults make every
+    phase run far longer than the plan-based estimate (the old compile-time
+    resolution fired such events phases too early)."""
+    fleet = "4:4"
+    sc = "degrade:w0*0.2@0:10%;kill:w1@5:50%"
+    rep = Cluster(fleet, priors="spec").simulate(
+        SimJob(size=200, n_jobs=8), scenario=sc)
+    # w1 is alive and working through phase 4...
+    for k in range(5):
+        assert rep.phases[k].shares.get("w1", 0) > 0, (k, rep.phases[k])
+    # ...dies inside phase 5, so it executes nothing from phase 6 on
+    for k in range(6, 8):
+        assert rep.phases[k].shares.get("w1", 0) == 0, (k, rep.phases[k])
+
+
+def test_scenario_schedule_anchors_ramp_stages_per_phase():
+    """A fully phase-relative ramp anchors *each stage* to its own phase
+    (interpolated in phase-fraction space), not all stages to the start
+    phase with estimate-based offsets."""
+    sched = Scenario.parse("ramp:w0*0.25@0:50%..4:50%/5").schedule(
+        FleetSpec.parse("4:2"), phase_s=10.0)
+    starts = [0.0, 30.0, 65.0, 100.0, 140.0]     # drifted true phase starts
+    times = []
+    for k, start in enumerate(starts):
+        evs = sched.phase_events(k, start)
+        assert len(evs) == 1, (k, evs)           # one stage per phase
+        times.append(evs[0].time_s)
+    assert times == [start + 5.0 for start in starts]
+    assert sched.exhausted
+
+
+def test_scenario_schedule_requires_monotonic_phases():
+    sched = Scenario.parse("halve:w0@1:50%").schedule(
+        FleetSpec.parse("4:2"), phase_s=10.0)
+    sched.phase_events(0, 0.0)
+    sched.phase_events(1, 10.0)
+    with pytest.raises(ValueError, match="increasing order"):
+        sched.phase_events(1, 20.0)
+
+
+def test_scenario_schedule_skipped_phase_fires_at_restart():
+    """A clause for a phase the run never visited (checkpoint restore) fires
+    at the next visited phase start instead of vanishing."""
+    sched = Scenario.parse("halve:w0@2:50%").schedule(
+        FleetSpec.parse("4:2"), phase_s=10.0)
+    evs = sched.phase_events(5, 100.0)
+    assert len(evs) == 1 and evs[0].time_s == 100.0
+
+
+# ============================================== satellites: quality + profiles
+def test_quality_excludes_workers_dead_for_the_phase():
+    """A worker killed mid-phase leaves a truncated span; the quality number
+    must measure the *survivors'* spread, not the death artifact."""
+    rep = Cluster("4:3:2:1", priors="spec").simulate(
+        SimJob(size=128, n_jobs=3), scenario="kill:w0@25%")
+    assert rep.phases[0].shares.get("w0", 0) > 0     # it did work, then died
+    for p in rep.phases:
+        assert p.quality <= 1.5, (p.index, p.quality)
+    assert rep.homogenization_quality() <= 1.5
+    # the explicit workers= override still measures the raw spread
+    rt = Cluster("4:4", priors="spec")
+    r = rt.simulate(SimJob(size=100), scenario="kill:w0@50%")
+    assert r.homogenization_quality() <= 1.5
+
+
+def test_runtime_quality_override_includes_dead():
+    rt = mk_runtime([1.0, 1.0])
+    res = rt.run(40, timeline=(TimelineEvent(5.0, "kill", "w1"),))
+    assert res.dead_workers == {"w1"}
+    assert res.homogenization_quality() == 1.0       # sole survivor
+    spread = res.homogenization_quality(list(res.worker_finish))
+    assert spread > 1.5                              # w1's truncated span
+
+
+def test_backend_profile_autoselected_from_heartbeats():
+    """FleetSpec omits @PROFILE -> the profile is picked from measured
+    heartbeats (perf bands), never silently defaulted; declared profiles and
+    the report's fleet string stay untouched."""
+    c = Cluster("12:4:1:fixed=2@dcn", priors="spec")
+    rep = c.simulate(SimJob(size=400))
+    auto = rep.metrics["auto_profiles"]
+    assert auto["w0"] == "dcn"            # measured ~12 units/s
+    assert auto["w1"] == "lan-1g"         # measured ~4
+    assert auto["w2"] == "paper-ethernet"  # measured ~1
+    assert "fixed" not in auto            # declared profile wins
+    assert c.fleet.worker("fixed").profile == "dcn"
+    assert c.fleet.worker("w0").profile == "dcn"
+    assert rep.fleet == "w0=12,w1=4,w2=1,fixed=2@dcn"   # declared, not refined
+    # the refined fleet drives later overhead models
+    assert c._overhead_model().m > 20.0
+
+
+def test_autoselect_skipped_with_explicit_default_profile():
+    c = Cluster("4:1", priors="spec", default_profile="lan-1g")
+    rep = c.simulate(SimJob(size=200))
+    assert "auto_profiles" not in rep.metrics
+    assert all(w.profile is None for w in c.fleet.workers)
+
+
+def test_zero_cost_grains_do_not_spin_the_gossip_bus():
+    """Regression: a degenerate makespan estimate (zero-cost grains) must
+    not derive a ~0 gossip period and hang the event loop in round
+    catch-up; the run completes like the single-coordinator one."""
+    rt = mk_runtime([1.0, 1.0, 1.0, 1.0], k=2)
+    res = rt.run(8, grain_cost=lambda g: 0.0,
+                 duration_fn=lambda w, c, t: 1.0)
+    assert sorted(res.executed_by) == list(range(8))
+    # and a mis-set tiny explicit period degrades to bounded catch-up
+    rt = mk_runtime([1.0, 1.0], k=2, period_s=1e-9)
+    res = rt.run(20)
+    assert sorted(res.executed_by) == list(range(20))
+
+
+def test_serve_autoselect_classifies_per_slot():
+    """Regression: serving trackers measure rate units (perf x slots); the
+    profile bands are per-worker perf, so two replicas on identical
+    backends must classify alike whatever their slot counts."""
+    from stub_engine import StubEngine, mk_requests
+
+    from repro.cluster import ServeJob
+
+    c = Cluster("a=2x1,b=2x8")
+    c.serve(ServeJob(
+        mk_requests(48),
+        engine_factory=lambda s: StubEngine(max_batch=s.concurrency,
+                                            name=s.name),
+        max_queue_depth=64,
+    ))
+    profiles = {w.name: w.profile for w in c.fleet.workers}
+    assert profiles["a"] == profiles["b"], profiles
+
+
+def test_select_profile_bands():
+    from repro.cluster import select_profile
+
+    assert select_profile(1.0).name == "paper-ethernet"
+    assert select_profile(5.0).name == "lan-1g"
+    assert select_profile(50.0).name == "dcn"
+    with pytest.raises(ValueError, match="> 0"):
+        select_profile(0.0)
+
+
+# =============================================== slow tier: real train values
+@pytest.mark.slow
+def test_ckill_midstep_train_bitwise_identical():
+    """The acceptance criterion at training scale: a coordinator-shard kill
+    mid-step never double-executes or loses a gradient grain — the update
+    stream (and final params) are bitwise the no-fault run's."""
+    import jax
+
+    from repro.cluster import TrainJob
+    from repro.models import LayerSpec, Model, ModelConfig
+
+    cfg = ModelConfig(
+        name="tiny", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+        d_ff=64, vocab_size=64, head_dim=16,
+        layer_pattern=(LayerSpec("attn", "dense"),),
+        param_dtype="float32", compute_dtype="float32", use_pallas=False,
+        rope_theta=1e4,
+    )
+
+    def run(scenario):
+        return Cluster("1*4/c2", priors="spec").train(
+            TrainJob(Model(cfg), steps=3, grains=8, seq_len=8),
+            scenario=scenario,
+        )
+
+    faulted = run("ckill:0@1:25%")
+    clean = run(None)
+    assert faulted.coord.takeovers == 1
+    assert ([p.metrics["loss"] for p in faulted.phases]
+            == [p.metrics["loss"] for p in clean.phases])
+    for a, b in zip(jax.tree.leaves(faulted.artifact.state.params),
+                    jax.tree.leaves(clean.artifact.state.params),
+                    strict=True):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
