@@ -14,9 +14,21 @@ measurements on the same request distribution:
             mid-bundle* (``halve:r0@25%``) after a warm wave — the
             homogenization-quality number under mid-bundle degradation.
 
+A fourth measurement exercises the open-loop stack end to end:
+
+  sustained  requests *arrive* (Poisson + a burst) instead of being planned
+             as waves; full queues shed; the first replica's clock halves
+             mid-stream and a ``scale:`` rule joins a replica from a
+             measured p99-TTFT breach.  Reports tokens/sec, p50/p99 TTFT,
+             shed rate, goodput under deadline, and the autoscaled
+             replica's share of the work.
+
 Acceptance (ISSUE 3): batched >= 2x serial tokens/sec on the same request
-set; fault quality <= 1.3.  The fleet spec and scenario DSL strings ride
-into the JSON for traceability.  Output: ``BENCH_serve.json``.
+set; fault quality <= 1.3.  Acceptance (ISSUE 6): the sustained entry has
+non-null p50/p99 TTFT, a nonzero shed rate under the Poisson overload, the
+autoscaled join visible in the shares, and survivor quality <= 1.3 under the
+mid-stream halve.  The fleet spec and scenario DSL strings ride into the
+JSON for traceability.  Output: ``BENCH_serve.json``.
 
 Run:   PYTHONPATH=src python -m benchmarks.bench_serve
 Toy:   PYTHONPATH=src python -m benchmarks.bench_serve --requests 12 --max-new 4
@@ -66,8 +78,8 @@ def run_bench(n_requests: int, max_new: int, fleet: FleetSpec | str,
     scenario = Scenario.parse(f"halve:{fleet.names[0]}@25%")
 
     def job(reqs, **kw):
-        return ServeJob(reqs, model=model, params=params, max_seq=max_seq,
-                        max_queue_depth=queue_depth, **kw)
+        kw.setdefault("max_queue_depth", queue_depth)
+        return ServeJob(reqs, model=model, params=params, max_seq=max_seq, **kw)
 
     out = {"config": {
         "n_requests": n_requests, "max_new": max_new,
@@ -100,6 +112,43 @@ def run_bench(n_requests: int, max_new: int, fleet: FleetSpec | str,
     out["fault"] = summarize(rep, time.perf_counter() - t0)
     out["fault"]["n_migrated"] = rep.n_migrated
     out["fault"]["scenario"] = str(scenario)
+
+    # Sustained load: open-loop arrivals, shed-on-overflow, a mid-stream
+    # halve, and a reactive scale-up from a measured p99-TTFT breach.  The
+    # pool is oversized — the arrival process decides how many requests the
+    # stream actually has.
+    stream_sc = Scenario.parse(
+        f"arrive:poisson(6)@0-10 burst:24@5 halve:{fleet.names[0]}@30% "
+        "scale:+1@p99>1.0/12"
+    )
+    pool = make_requests(max(4 * n_requests, 160), vocab, max_new, seed=seed)
+    t0 = time.perf_counter()
+    rep = Cluster(fleet, priors="spec").serve(
+        job(pool, max_queue_depth=4, overflow="shed", deadline_s=4.0),
+        scenario=stream_sc,
+    )
+    lat = rep.latency
+    out["sustained"] = {
+        "scenario": str(stream_sc),
+        "n_requests": rep.metrics["n_requests"],
+        "n_served": rep.metrics["n_served"],
+        "n_shed": rep.metrics["n_shed"],
+        "shed_rate": lat.shed_rate,
+        "tokens_out": int(rep.work_done),
+        "tokens_per_s": rep.throughput,
+        "p50_ttft_s": lat.p50_ttft_s,
+        "p99_ttft_s": lat.p99_ttft_s,
+        "p50_token_s": lat.p50_token_s,
+        "goodput_rps": lat.goodput_rps,
+        "deadline_s": lat.deadline_s,
+        "quality": rep.homogenization_quality(),
+        "joined": list(rep.metrics["joined"]),
+        "joined_shares": {
+            w: n for w, n in rep.shares().items()
+            if w in rep.metrics["joined"]
+        },
+        "wall_s": time.perf_counter() - t0,
+    }
     return out
 
 
@@ -127,6 +176,12 @@ def main(argv: list[str] | None = None) -> dict:
           f"[{result['fault']['scenario']}] mid-bundle, quality "
           f"{result['fault']['worst_quality']:.2f}, "
           f"{result['fault']['n_migrated']} requests migrated")
+    sus = result["sustained"]
+    print(f"sustained: {sus['tokens_per_s']:8.2f} tok/s open-loop, "
+          f"p50/p99 TTFT {sus['p50_ttft_s']:.2f}/{sus['p99_ttft_s']:.2f}s, "
+          f"shed {sus['n_shed']}/{sus['n_requests']} ({sus['shed_rate']:.1%}), "
+          f"quality {sus['quality']:.2f}, "
+          f"autoscaled {sus['joined_shares'] or 'none'}")
     print(f"wrote {args.out}")
     return result
 

@@ -20,8 +20,9 @@ from .profiles import (
     select_profile,
 )
 from .report import PhaseStats, RunReport, WorkerTimeline
-from .scenario import Clause, Scenario, ScenarioSchedule, TimeRef
+from .scenario import Clause, ScaleRule, Scenario, ScenarioSchedule, TimeRef
 from .spec import FleetSpec, WorkerSpec
+from .workload import ArrivalPlan, materialize_workload
 
 __all__ = [
     "Cluster",
@@ -34,7 +35,10 @@ __all__ = [
     "Scenario",
     "ScenarioSchedule",
     "Clause",
+    "ScaleRule",
     "TimeRef",
+    "ArrivalPlan",
+    "materialize_workload",
     "CoordSpec",
     "CoordStats",
     "BackendProfile",

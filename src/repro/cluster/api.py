@@ -116,6 +116,13 @@ class ServeJob:
     max_queue_depth: int = 8
     batched: bool = True
     fresh: bool = False          # force a new fleet server (fresh engines + tracker)
+    # Open-loop knobs (used when the scenario has workload clauses —
+    # ``arrive:``/``burst:``/``mix:``/``scale:``; ignored in wave mode):
+    overflow: str = "queue"      # full queues: 'queue' (backlog) or 'shed'
+    deadline_s: float | None = None   # SLO deadline for goodput accounting
+    window_s: float | None = None     # SLO-window length (phase anchor);
+                                      # default: one admission quota's
+                                      # estimated homogenized drain time
 
 
 # ------------------------------------------------------------------ facade
@@ -230,6 +237,15 @@ class Cluster:
             default=0.0,
         )
 
+    @staticmethod
+    def _reject_workload(sc: Scenario, kind: str) -> None:
+        if sc.has_workload:
+            raise ValueError(
+                f"scenario {str(sc)!r} drives a request workload "
+                "(arrive:/burst:/mix:/scale: clauses), which only "
+                f"Cluster.serve supports — {kind} takes fault clauses only"
+            )
+
     def _speedups(self, work: float, rates: Sequence[float], measured_s: float,
                   overhead=None, load: float = 0.0) -> tuple[float, float]:
         """(predicted, measured) speedup vs the best single worker, paper
@@ -249,6 +265,7 @@ class Cluster:
         """Run a granulized job (timing-only ``SimJob`` or real-values
         ``MatmulJob``) under an optional fault ``scenario``."""
         sc = Scenario.parse(scenario)
+        self._reject_workload(sc, "simulate")
         if isinstance(job, int):
             job = SimJob(size=job)
         if isinstance(job, MatmulJob):
@@ -425,6 +442,7 @@ class Cluster:
         from ..train.loop import HDPConfig, HDPTrainer, Pod
 
         sc = Scenario.parse(scenario)
+        self._reject_workload(sc, "train")
         vocab = job.vocab_size or job.model.cfg.vocab_size
         ovh_model = self._overhead_model()
         cfg = HDPConfig(
@@ -559,6 +577,11 @@ class Cluster:
         server = self._server
         server.max_queue_depth = job.max_queue_depth
 
+        if sc.has_workload:
+            # Workload clauses turn the job open-loop: requests *arrive* on
+            # the scenario's schedule instead of being planned as waves.
+            return self._serve_stream(job, sc, server)
+
         requests = list(job.requests)
         cost = sum(len(r.prompt) + r.max_new_tokens for r in requests)
         quota = job.max_queue_depth * max(len(server.live_replicas()), 1)
@@ -622,6 +645,138 @@ class Cluster:
             metrics=metrics,
             artifact=requests, coord=self._coord_stats(
                 server.dispatcher.runtime),
+        )
+
+    def _serve_stream(self, job: ServeJob, sc: Scenario, server) -> RunReport:
+        """Open-loop serving: materialize the scenario's workload clauses
+        into concrete arrival times, stream ``job.requests`` through
+        ``FleetServer.serve_stream`` (continuous admission, per-request
+        latency traces, SLO autoscaling), and wrap the result as a
+        single-phase ``RunReport`` carrying ``LatencyStats``."""
+        from ..serve.dispatch import Replica
+        from .workload import materialize_workload
+
+        requests = list(job.requests)
+        rates = [w.rate for w in self.fleet.workers]
+        # The SLO window is the open-loop phase: window k starts at exactly
+        # k * window_s on the stream clock.  Default to one admission
+        # quota's estimated homogenized drain time — the same phase estimate
+        # wave mode uses, so '@k:frac%' clauses mean comparable spans in
+        # both modes.
+        quota = job.max_queue_depth * max(len(server.live_replicas()), 1)
+        quota_cost = sum(
+            len(r.prompt) + r.max_new_tokens for r in requests[:quota]
+        )
+        window_s = job.window_s or max(
+            self._phase_estimate(quota_cost, 1.0, rates), _EPS
+        )
+
+        def join_replica(spec: WorkerSpec) -> Replica:
+            self._serve_specs[spec.name] = spec
+            return Replica(spec.name, spec.perf)
+
+        sched = sc.schedule(self.fleet, phase_s=window_s, stride_s=window_s,
+                            make_worker=join_replica,
+                            coordinators=self._n_coordinators(),
+                            seed=self.seed)
+        plan = materialize_workload(sched, window_s)
+
+        if plan.n_requests == 0:
+            # Scale-only scenario: every pooled request arrives at t=0 (an
+            # implicit burst), so the SLO rules still have traffic to watch.
+            used, arrive = requests, [0.0] * len(requests)
+        else:
+            if plan.n_requests > len(requests):
+                raise ValueError(
+                    f"scenario {str(sc)!r} generates {plan.n_requests} "
+                    f"arrivals but ServeJob.requests holds only "
+                    f"{len(requests)}; provide a request pool at least as "
+                    "large as the arrival process (lower the rate / window "
+                    "or pass more requests)"
+                )
+            used, arrive = requests[:plan.n_requests], list(plan.arrive_s)
+        # mix:len*F shifts the *composition* of later traffic: requests
+        # arriving at/after the shift get their decode budget scaled (in
+        # place — the pool objects are the report artifact), clamped to what
+        # the engines can hold.
+        if plan.mix:
+            for g, t in enumerate(arrive):
+                f = plan.lengths_factor(t)
+                if f != 1.0:
+                    r = used[g]
+                    r.max_new_tokens = max(1, min(
+                        int(round(r.max_new_tokens * f)),
+                        job.max_seq - len(r.prompt),
+                    ))
+
+        # Fault-clause joiners' priors go in rate units (see wave_events).
+        faults = tuple(
+            dataclasses.replace(
+                ev, perf=self._serve_specs[ev.worker.name].rate)
+            if ev.kind == "join" else ev
+            for ev in plan.timeline
+        )
+
+        def scale_worker(i: int) -> Replica:
+            # Autoscaled replicas clone the fastest declared spec so
+            # _engine_for_worker can build a real engine for them.
+            fastest = max(self._serve_specs.values(), key=lambda s: s.rate)
+            spec = dataclasses.replace(fastest, name=f"scale{i}")
+            self._serve_specs[spec.name] = spec
+            return Replica(spec.name, spec.perf)
+
+        srep = server.serve_stream(
+            used, arrive,
+            timeline=faults,
+            overflow=job.overflow,
+            deadline_s=job.deadline_s,
+            scale_rules=sc.scale_rules,
+            scale_worker=scale_worker,
+        )
+
+        # Speedup compares *served* work only — shed requests cost the fleet
+        # nothing, so counting them would flatter the measured speedup.
+        cost = sum(
+            len(r.prompt) + r.max_new_tokens
+            for r, t in zip(used, srep.traces) if not t.shed
+        )
+        pred, meas = self._speedups(float(cost), rates, srep.sim_time_s)
+        self._autoselect_profiles(server.tracker, per_slot=True)
+        lat = srep.latency
+        phase = PhaseStats(
+            0, "stream", float(srep.tokens_out), srep.sim_time_s,
+            srep.quality, srep.n_migrated, dict(srep.shares),
+            metrics={"n_requests": srep.n_requests,
+                     "n_shed": srep.n_shed,
+                     "tokens_per_s": srep.tokens_per_s,
+                     "p50_ttft_s": lat.p50_ttft_s,
+                     "p99_ttft_s": lat.p99_ttft_s},
+        )
+        spans = [(dict(srep.worker_busy), dict(srep.worker_finish),
+                  {w: n for w, n in srep.shares.items() if n > 0})]
+        metrics: dict[str, Any] = {
+            "mode": "open-loop",
+            "window_s": window_s,
+            "n_requests": srep.n_requests,
+            "n_served": srep.n_served,
+            "n_shed": srep.n_shed,
+            "shed_rate": srep.shed_rate,
+            "joined": list(srep.joined),
+            "p50_ttft_s": lat.p50_ttft_s,
+            "p99_ttft_s": lat.p99_ttft_s,
+            "goodput_rps": lat.goodput_rps,
+        }
+        if self._auto_profiles:
+            metrics["auto_profiles"] = dict(self._auto_profiles)
+        return RunReport(
+            kind="serve", fleet=self._declared_fleet, scenario=str(sc),
+            phases=(phase,), work_done=float(srep.tokens_out),
+            sim_time_s=srep.sim_time_s, throughput=srep.tokens_per_s,
+            predicted_speedup=pred, measured_speedup=meas,
+            worker_timelines=merge_worker_timelines(spans),
+            metrics=metrics, artifact=used,
+            coord=self._coord_stats(server.dispatcher.runtime),
+            latency=lat,
         )
 
     # -- serve internals -----------------------------------------------------

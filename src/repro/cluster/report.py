@@ -68,6 +68,7 @@ class RunReport:
     metrics: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     artifact: Any = None
     coord: Any = None                # coord.CoordStats when dispatch is sharded
+    latency: Any = None              # serve.LatencyStats for open-loop serves
 
     # -- the uniform questions ----------------------------------------------
     def shares(self) -> dict[str, int]:
@@ -109,6 +110,12 @@ class RunReport:
         )
         if self.coord is not None:
             s += f", coord[{self.coord.summary()}]"
+        if self.latency is not None:
+            s += (
+                f", latency[p50_ttft={self.latency.p50_ttft_s:.3f}s "
+                f"p99_ttft={self.latency.p99_ttft_s:.3f}s "
+                f"shed={self.latency.shed_rate:.1%}]"
+            )
         return s
 
 

@@ -9,6 +9,8 @@ the exact ``TimelineEvent`` stream the async runtime already consumes.
 
 Grammar — clauses separated by ``;`` (or ``,``):
 
+Fault clauses (the fleet plane: what the *servers* do):
+
     halve:W@T          worker W's true perf halves at time T
     degrade:W*F@T      perf becomes F x current scripted perf (F > 0)
     perf:W=V@T         perf becomes the absolute value V
@@ -27,6 +29,24 @@ Coordinator-plane clauses (need a multi-coordinator fleet, ``/cK``):
     partition:0+1|2@T  gossip/steal connectivity splits into groups
                        (shards joined by '+', groups separated by '|')
     heal@T             the partition heals
+
+Workload clauses (the traffic plane: what the *clients* do — open-loop
+serving only; ``simulate``/``train`` reject them):
+
+    arrive:poisson(L)@T1-T2   Poisson request arrivals at rate L per
+                              simulated second over [T1, T2); omitting
+                              ``-T2`` spans one phase estimate from T1
+    burst:N@T                 N requests arrive at once at time T
+    mix:len*F@T               request-mix shift: max-new-token lengths of
+                              requests arriving at or after T scale by F
+    scale:+N@pQQ>X            reactive autoscaling rule (not a timed event):
+                              join N replicas when the rolling TTFT pQQ
+                              percentile exceeds X seconds; optional ``/W``
+                              suffix sets the rolling-window sample count
+
+Arrival randomness is seeded per clause (``seed`` argument to ``compile`` /
+``schedule``), so the same Scenario string always materializes the same
+arrival timeline — bitwise.
 
 Times ``T``:
 
@@ -50,20 +70,25 @@ import dataclasses
 import re
 from typing import Any, Callable
 
+import numpy as np
+
 from ..core.runtime import SimWorker, TimelineEvent
 from .spec import FleetSpec, WorkerSpec
 
-__all__ = ["TimeRef", "Clause", "Scenario", "ScenarioSchedule"]
+__all__ = ["TimeRef", "Clause", "ScaleRule", "Scenario", "ScenarioSchedule"]
 
 _ACTIONS = ("halve", "degrade", "perf", "kill", "join", "ramp",
-            "ckill", "partition", "heal")
+            "ckill", "partition", "heal", "arrive", "burst", "mix")
 _COORD_ACTIONS = ("ckill", "partition", "heal")
+_WORKLOAD_ACTIONS = ("arrive", "burst", "mix")
 
 _GRAMMAR_HINT = (
-    "clauses are ACTION:WORKER...@TIME separated by ';' — e.g. "
+    "clauses are ACTION:WORKER...@TIME separated by ';' (or ',' or "
+    "whitespace) — e.g. "
     "'halve:w0@25%', 'degrade:w1*0.2@3:30%', 'kill:w2@9', 'join:w3=1.5x4@12', "
     "'ramp:w0*0.25@2..8/4', 'ckill:1@25%', 'partition:0+1|2@5', 'heal@9', "
-    "'jitter:0.1'"
+    "'jitter:0.1', 'arrive:poisson(8)@0-30', 'burst:64@10', 'mix:len*1.5@12', "
+    "'scale:+2@p99>0.5'"
 )
 
 
@@ -118,19 +143,61 @@ class TimeRef:
 
 
 @dataclasses.dataclass(frozen=True)
+class ScaleRule:
+    """A reactive autoscaling rule (``scale:+N@pQQ>X[/W]``): join ``add``
+    replicas when the rolling-window TTFT percentile breaches ``threshold``
+    seconds.  Not a timed event — the serving layer evaluates it on every
+    completed decode and fires at most once per rule."""
+
+    add: int
+    metric: str                      # "p50" | "p99" | any "pQQ"
+    threshold: float                 # seconds
+    window: int = 20                 # rolling TTFT sample count
+
+    def __post_init__(self):
+        if self.add < 1:
+            raise ValueError(f"scale rule must add >= 1 replicas, got {self.add}")
+        if not re.match(r"^p\d+(\.\d+)?$", self.metric) or \
+                not 0 < float(self.metric[1:]) <= 100:
+            raise ValueError(
+                f"bad scale metric {self.metric!r}: want a TTFT percentile "
+                "like 'p50' or 'p99'"
+            )
+        if self.threshold <= 0:
+            raise ValueError("scale threshold must be > 0 seconds")
+        if self.window < 1:
+            raise ValueError("scale window must be >= 1 samples")
+
+    def __str__(self) -> str:
+        s = f"scale:+{self.add}@{self.metric}>{self.threshold:g}"
+        if self.window != 20:
+            s += f"/{self.window}"
+        return s
+
+
+@dataclasses.dataclass(frozen=True)
 class Clause:
     action: str                      # halve | degrade | perf | kill | join | ramp
     worker: str
     at: TimeRef
     value: float | None = None       # degrade/ramp factor, perf value, join perf
     concurrency: int | None = None   # join slot count
-    until: TimeRef | None = None     # ramp end time
+    until: TimeRef | None = None     # ramp / arrive-window end time
     steps: int | None = None         # ramp step count
 
     def __str__(self) -> str:
         a = self.action
         if a == "heal":
             return f"heal@{self.at}"
+        if a == "arrive":
+            head = f"arrive:{self.worker}({self.value:g})"
+            if self.until is not None:
+                return f"{head}@{self.at}-{self.until}"
+            return f"{head}@{self.at}"
+        if a == "burst":
+            return f"burst:{int(self.value)}@{self.at}"
+        if a == "mix":
+            return f"mix:{self.worker}*{self.value:g}@{self.at}"
         if a == "halve" or a == "kill" or a == "ckill" or a == "partition":
             head = f"{a}:{self.worker}"
         elif a == "degrade":
@@ -188,6 +255,45 @@ def _parse_clause(text: str) -> Clause:
             f"bad heal clause {text!r}: want heal@TIME (no target)"
         )
 
+    if action == "arrive":
+        m = re.match(r"^poisson\((\d+(?:\.\d+)?(?:e-?\d+)?)\)$", body)
+        if m is None:
+            raise ValueError(
+                f"bad arrive clause {text!r}: want arrive:poisson(RATE)@T1-T2 "
+                "(RATE in requests per simulated second; '-T2' optional, "
+                "defaulting the window to one phase from T1)"
+            )
+        rate = float(m.group(1))
+        if rate <= 0:
+            raise ValueError(f"bad arrive clause {text!r}: rate must be > 0")
+        parts = t.split("-")
+        if len(parts) == 1:
+            at, until = TimeRef.parse(parts[0]), None
+        elif len(parts) == 2:
+            at, until = TimeRef.parse(parts[0]), TimeRef.parse(parts[1])
+        else:
+            raise ValueError(
+                f"bad arrive clause {text!r}: want a T1-T2 window"
+            )
+        return Clause("arrive", "poisson", at, value=rate, until=until)
+    if action == "burst":
+        at = TimeRef.parse(t)
+        if not re.match(r"^\d+$", body) or int(body) < 1:
+            raise ValueError(
+                f"bad burst clause {text!r}: want burst:N@TIME (N >= 1 "
+                "requests arriving at once)"
+            )
+        return Clause("burst", "", at, value=float(int(body)))
+    if action == "mix":
+        at = TimeRef.parse(t)
+        m = re.match(r"^len\*(\d+(?:\.\d+)?(?:e-?\d+)?)$", body)
+        if m is None or float(m.group(1)) <= 0:
+            raise ValueError(
+                f"bad mix clause {text!r}: want mix:len*FACTOR@TIME "
+                "(FACTOR > 0 scales max-new-token lengths of later arrivals)"
+            )
+        return Clause("mix", "len", at, value=float(m.group(1)))
+
     if action == "ramp":
         m = re.match(r"^(.+?)\.\.(.+?)/(\d+)$", t.strip())
         if m is None:
@@ -244,12 +350,21 @@ def _parse_clause(text: str) -> Clause:
     return Clause("join", m.group(1), at, value=perf, concurrency=conc)
 
 
+_SCALE_RE = re.compile(
+    r"^scale:\+(\d+)@(p\d+(?:\.\d+)?)>(\d+(?:\.\d+)?(?:e-?\d+)?)(?:/(\d+))?$"
+)
+
+
 @dataclasses.dataclass(frozen=True)
 class Scenario:
-    """A parsed fault script.  Immutable; compile against any fleet."""
+    """A parsed fault + workload script.  Immutable; compile against any
+    fleet.  ``scale_rules`` ride alongside the timed clauses: they are
+    metric-triggered, so they compile to no ``TimelineEvent`` — the serving
+    layer evaluates them against live TTFT measurements."""
 
     clauses: tuple[Clause, ...] = ()
     jitter: float = 0.0
+    scale_rules: tuple[ScaleRule, ...] = ()
 
     # -- construction --------------------------------------------------------
     @classmethod
@@ -264,8 +379,12 @@ class Scenario:
                 "DSL string or a Scenario"
             )
         clauses: list[Clause] = []
+        scale_rules: list[ScaleRule] = []
         jitter = 0.0
-        for raw in re.split(r"[;,\n]", text):
+        # Clauses never contain whitespace, so spaces separate too — shell
+        # one-liners read naturally: --scenario 'arrive:poisson(8)@0-30
+        # burst:64@10 scale:+2@p99>0.5'.
+        for raw in re.split(r"[;,\n\s]+", text):
             raw = raw.strip()
             if not raw:
                 continue
@@ -279,8 +398,23 @@ class Scenario:
                 if jitter < 0:
                     raise ValueError(f"bad jitter clause {raw!r}: sigma must be >= 0")
                 continue
+            if raw.startswith("scale:"):
+                m = _SCALE_RE.match(raw)
+                if m is None:
+                    raise ValueError(
+                        f"bad scale clause {raw!r}: want scale:+N@pQQ>X "
+                        "(join N replicas when the rolling TTFT pQQ "
+                        "percentile exceeds X seconds; optional /W window)"
+                    )
+                scale_rules.append(ScaleRule(
+                    add=int(m.group(1)),
+                    metric=m.group(2),
+                    threshold=float(m.group(3)),
+                    window=int(m.group(4)) if m.group(4) else 20,
+                ))
+                continue
             clauses.append(_parse_clause(raw))
-        return cls(tuple(clauses), jitter)
+        return cls(tuple(clauses), jitter, tuple(scale_rules))
 
     @classmethod
     def none(cls) -> "Scenario":
@@ -301,17 +435,28 @@ class Scenario:
 
     # -- views ---------------------------------------------------------------
     def __bool__(self) -> bool:
-        return bool(self.clauses) or self.jitter > 0
+        return bool(self.clauses) or bool(self.scale_rules) or self.jitter > 0
 
     @property
     def needs_estimates(self) -> bool:
         return any(
             c.at.relative or (c.until is not None and c.until.relative)
+            or (c.action == "arrive" and c.until is None)
             for c in self.clauses
+        )
+
+    @property
+    def has_workload(self) -> bool:
+        """True when the script drives traffic (``arrive:``/``burst:``/
+        ``mix:`` clauses or ``scale:`` rules) — open-loop serving territory;
+        ``simulate``/``train`` reject such scenarios."""
+        return bool(self.scale_rules) or any(
+            c.action in _WORKLOAD_ACTIONS for c in self.clauses
         )
 
     def __str__(self) -> str:
         parts = [str(c) for c in self.clauses]
+        parts.extend(str(r) for r in self.scale_rules)
         if self.jitter:
             parts.append(f"jitter:{self.jitter:g}")
         return ";".join(parts)
@@ -325,6 +470,7 @@ class Scenario:
         stride_s: float | None = None,
         make_worker: Callable[[WorkerSpec], Any] | None = None,
         coordinators: int | None = None,
+        seed: int = 0,
     ) -> tuple[TimelineEvent, ...]:
         """Compile to the runtime's ``TimelineEvent`` stream (times relative
         to the run start — feed with ``timeline_relative=True`` or offset by
@@ -335,7 +481,9 @@ class Scenario:
         (``phase_s`` + any inter-phase overhead).  ``make_worker`` builds the
         runtime worker object for ``join`` clauses (default: ``SimWorker``).
         ``coordinators`` overrides the fleet's declared shard count for
-        coordinator-plane clause validation.
+        coordinator-plane clause validation.  ``seed`` drives per-clause
+        arrival randomness (``arrive:poisson``): the same (scenario, seed)
+        always materializes the same arrival offsets.
 
         Every time resolves against the *estimates* here; prefer
         ``schedule`` when the workload can report true phase starts.
@@ -343,7 +491,7 @@ class Scenario:
         return tuple(
             dataclasses.replace(p.event, time_s=p.est_t)
             for p in self._plan(fleet, phase_s, stride_s, make_worker,
-                                coordinators)
+                                coordinators, seed)
         )
 
     def schedule(
@@ -354,17 +502,19 @@ class Scenario:
         stride_s: float | None = None,
         make_worker: Callable[[WorkerSpec], Any] | None = None,
         coordinators: int | None = None,
+        seed: int = 0,
     ) -> "ScenarioSchedule":
         """The phase-anchored form of ``compile``: returns a
         ``ScenarioSchedule`` the workload drains via ``phase_events(k,
         start_s)`` at each *true* phase start (job/step/wave callback), so
         ``@k:frac%`` times never accumulate plan-estimate drift."""
         return ScenarioSchedule(
-            self._plan(fleet, phase_s, stride_s, make_worker, coordinators)
+            self._plan(fleet, phase_s, stride_s, make_worker, coordinators,
+                       seed)
         )
 
     def _plan(self, fleet, phase_s, stride_s, make_worker,
-              coordinators) -> "list[_Planned]":
+              coordinators, seed: int = 0) -> "list[_Planned]":
         make_worker = make_worker or (lambda spec: SimWorker(spec.name, spec.perf))
         n_shards = coordinators if coordinators is not None else fleet.coordinators
         # Scripted perf is cumulative: two halves quarter the worker.  Track
@@ -387,9 +537,43 @@ class Scenario:
             else:
                 planned.append(_Planned(t, None, c.at.abs_s, event))
 
-        for t, _, c in resolved:
+        for t, idx, c in resolved:
             if c.action in _COORD_ACTIONS:
                 emit(t, c, self._coord_event(c, t, n_shards))
+                continue
+            if c.action == "arrive":
+                # Per-clause seeded stream: the same (scenario, seed) pair
+                # materializes bitwise-identical arrival offsets no matter
+                # what other clauses say.
+                if c.until is not None:
+                    window = c.until.resolve(phase_s, stride_s) - t
+                    if window <= 0:
+                        raise ValueError(
+                            f"arrive clause {c}: window end precedes start"
+                        )
+                elif phase_s is not None:
+                    window = phase_s
+                else:
+                    raise ValueError(
+                        f"arrive clause {c} has no -T2 window end; resolving "
+                        "the default one-phase window needs a phase_s "
+                        "estimate (the Cluster facade supplies one)"
+                    )
+                rng = np.random.default_rng([seed, idx])
+                offsets, cum = [], 0.0
+                while True:
+                    cum += float(rng.exponential(1.0 / c.value))
+                    if cum >= window:
+                        break
+                    offsets.append(cum)
+                emit(t, c, TimelineEvent(t, "arrive", tuple(offsets)))
+                continue
+            if c.action == "burst":
+                emit(t, c, TimelineEvent(
+                    t, "arrive", tuple(0.0 for _ in range(int(c.value)))))
+                continue
+            if c.action == "mix":
+                emit(t, c, TimelineEvent(t, "mix", c.worker, perf=c.value))
                 continue
             if c.action == "join":
                 spec = known.get(c.worker)

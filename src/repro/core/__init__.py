@@ -24,6 +24,7 @@ from .homogenization import (
 )
 from .performance import PerformanceTracker, PerfReport, WorkerState
 from .runtime import (
+    ArrivalSource,
     AsyncRuntime,
     CallableGrainExecutor,
     DispatchAuthority,
@@ -56,6 +57,7 @@ __all__ = [
     "GrainPlan",
     "HomogenizedScheduler",
     "should_replan",
+    "ArrivalSource",
     "AsyncRuntime",
     "CallableGrainExecutor",
     "DispatchAuthority",

@@ -63,6 +63,7 @@ __all__ = [
     "GrainRecord",
     "GrainExecutor",
     "CallableGrainExecutor",
+    "ArrivalSource",
     "RuntimeResult",
     "AsyncRuntime",
     "JobContext",
@@ -73,6 +74,7 @@ __all__ = [
 _EPS = 1e-12
 
 _COORD_KINDS = ("ckill", "partition", "heal")
+_WORKLOAD_KINDS = ("arrive", "mix")
 
 
 @dataclasses.dataclass
@@ -289,6 +291,32 @@ class CallableGrainExecutor(GrainExecutor):
         return self._execute(worker, grain) if self._execute else None
 
 
+class ArrivalSource:
+    """The open-loop seam: grains *arrive* at scheduled logical times instead
+    of all existing at job start.
+
+    ``times[g]`` is grain ``g``'s arrival, in simulated seconds after the
+    job's start.  A job run with an ArrivalSource skips the up-front
+    homogenized plan (there is nothing to plan yet); each grain is admitted
+    on arrival to the live worker with the earliest predicted drain time
+    (ETA under the tracker's learned perfs — join-the-homogenized-shortest
+    queue).  Admission control happens here too: with a ``max_queue_depth``
+    bound, a grain arriving when every live worker's unstarted queue is full
+    is either held in a runtime backlog (``overflow='queue'``, drained as
+    queues free up) or *shed* with an explicit reject record
+    (``overflow='shed'``, ``RuntimeResult.shed``) — arrivals never wait for
+    the fleet.  Once admitted, grains migrate/steal exactly as in the
+    closed-loop path."""
+
+    def __init__(self, times):
+        self.times = tuple(float(t) for t in times)
+        if any(t < 0 for t in self.times):
+            raise ValueError("arrival times must be >= 0 (job-relative)")
+
+    def __len__(self) -> int:
+        return len(self.times)
+
+
 @dataclasses.dataclass
 class SimWorker:
     """Minimal runtime worker: a name and a *true* instantaneous perf
@@ -322,6 +350,15 @@ class TimelineEvent:
     kind = "partition": gossip/steal connectivity splits into the groups in
                         ``worker`` (a tuple of tuples of shard ids),
     kind = "heal":      the partition heals (``worker`` is None).
+
+    Workload-plane kinds (compiled from Scenario ``arrive:``/``burst:``/
+    ``mix:`` clauses; *consumed by the serving layer* when it materializes an
+    ``ArrivalSource`` — a runtime handed one directly rejects it):
+
+    kind = "arrive":    ``worker`` is a tuple of arrival offsets (seconds
+                        after ``time_s``) — one grain arrives per offset,
+    kind = "mix":       request-mix shift: lengths of requests arriving at or
+                        after ``time_s`` scale by ``perf``.
     """
 
     time_s: float
@@ -330,8 +367,18 @@ class TimelineEvent:
     perf: float | None = None
 
     def __post_init__(self):
-        if self.kind not in ("perf", "kill", "join", *_COORD_KINDS):
+        if self.kind not in ("perf", "kill", "join", *_COORD_KINDS,
+                             *_WORKLOAD_KINDS):
             raise ValueError(f"unknown timeline kind {self.kind!r}")
+        if self.kind == "arrive" and not (
+            isinstance(self.worker, tuple)
+            and all(isinstance(o, float) and o >= 0 for o in self.worker)
+        ):
+            raise ValueError(
+                "arrive event needs a tuple of float arrival offsets >= 0"
+            )
+        if self.kind == "mix" and (self.perf is None or self.perf <= 0):
+            raise ValueError("mix event needs a scale factor perf > 0")
         if self.kind == "perf" and (self.perf is None or self.perf <= 0):
             raise ValueError("perf event needs perf > 0")
         if self.kind == "ckill" and not (
@@ -374,6 +421,9 @@ class RuntimeResult:
     end_s: float                     # absolute clock at job end
     dead_workers: set[str] = dataclasses.field(default_factory=set)
     coord: Any = None                # coordination-plane stats (CoordStats)
+    # Open-loop extras (ArrivalSource jobs; empty for closed-loop jobs):
+    arrive_s: dict[int, float] = dataclasses.field(default_factory=dict)
+    shed: list[int] = dataclasses.field(default_factory=list)
 
     def shares(self) -> dict[str, int]:
         counts: dict[str, int] = {}
@@ -439,6 +489,9 @@ class AsyncRuntime:
         # Timeline events scheduled past a job's last completion don't fire in
         # that job; they carry over and fire during a later job's window.
         self._pending: list[TimelineEvent] = []
+        # Set while run() is looping: pushes an event into the live heap
+        # (inject_event's reactive path).
+        self._live_push: Callable[[TimelineEvent], None] | None = None
         for w in workers:
             self._register(w, now_s=0.0)
 
@@ -481,6 +534,9 @@ class AsyncRuntime:
         timeline_relative: bool = False,
         initial_plan: GrainPlan | None = None,
         start_s: float | None = None,
+        arrivals: ArrivalSource | None = None,
+        max_queue_depth: int | None = None,
+        overflow: str = "queue",
     ) -> RuntimeResult:
         """Run one job of ``n_grains`` grains to completion.
 
@@ -497,9 +553,41 @@ class AsyncRuntime:
                           job's last completion carry over to the next job.
         ``initial_plan``— caller-provided allotment (e.g. ``TDAServer``'s);
                           otherwise planned from the tracker's perf vector.
+        ``arrivals``    — open-loop mode: ``ArrivalSource`` (or a sequence of
+                          job-relative arrival seconds, one per grain).  The
+                          up-front plan is skipped; grains are admitted on
+                          arrival to the min-ETA live worker with queue room.
+        ``max_queue_depth`` — per-worker unstarted-queue bound for open-loop
+                          admission control (requires ``arrivals``).
+        ``overflow``    — what happens to a grain arriving when every live
+                          queue is full: ``'queue'`` holds it in a runtime
+                          backlog, ``'shed'`` rejects it
+                          (``RuntimeResult.shed``).
         """
         if n_grains < 0:
             raise ValueError("n_grains must be >= 0")
+        if overflow not in ("queue", "shed"):
+            raise ValueError("overflow must be 'queue' or 'shed'")
+        if arrivals is not None and not isinstance(arrivals, ArrivalSource):
+            arrivals = ArrivalSource(arrivals)
+        if arrivals is not None and initial_plan is not None:
+            raise ValueError(
+                "arrivals and initial_plan are mutually exclusive: an "
+                "open-loop job has no up-front allotment to execute"
+            )
+        if arrivals is not None and len(arrivals) != n_grains:
+            raise ValueError(
+                f"arrivals covers {len(arrivals)} grains, job has {n_grains}"
+            )
+        if max_queue_depth is not None:
+            if arrivals is None:
+                raise ValueError(
+                    "max_queue_depth bounds open-loop admission; pass "
+                    "arrivals= (closed-loop admission control lives in the "
+                    "serving layer's wave quota)"
+                )
+            if max_queue_depth < 1:
+                raise ValueError("max_queue_depth must be >= 1")
         if executor is None:
             executor = CallableGrainExecutor(grain_cost, execute, duration_fn)
         elif (execute is not None or duration_fn is not None
@@ -529,7 +617,11 @@ class AsyncRuntime:
             self.clock = now
             return res
 
-        queues = self._initial_queues(n_grains, now, initial_plan)
+        if arrivals is not None:
+            queues = {w: deque() for w in self.workers}
+        else:
+            queues = self._initial_queues(n_grains, now, initial_plan)
+        backlog: deque[int] = deque()
         incremental = executor.incremental
         inflight: dict[str, _Inflight] = {}
         # Incremental mode: several grains in flight per worker (engine
@@ -544,6 +636,11 @@ class AsyncRuntime:
 
         for ev in sorted(events, key=lambda e: e.time_s):
             heapq.heappush(heap, (max(ev.time_s, now), 0, next(seq), ev))
+        if arrivals is not None:
+            # Priority 2: an arrival at time t sees completions at t first,
+            # so a slot freed at exactly t is visible to admission control.
+            for g, t in enumerate(arrivals.times):
+                heapq.heappush(heap, (now + t, 2, next(seq), g))
 
         def alive() -> list[str]:
             return [w for w in self.workers if w not in dead]
@@ -639,18 +736,61 @@ class AsyncRuntime:
                 ticks[w] = (now + d, d)
                 heapq.heappush(heap, (now + d, 1, next(seq), w))
 
+        def admit_arrival(g: int) -> str | None:
+            """Join-the-homogenized-shortest-queue admission: the live worker
+            with the earliest predicted drain time among those with queue
+            room, or None when every live queue is at max_queue_depth."""
+            room = [
+                w for w in alive()
+                if max_queue_depth is None or len(queues[w]) < max_queue_depth
+            ]
+            if not room:
+                return None
+            w = min(room, key=eta)
+            queues[w].append(g)
+            return w
+
         def kick_idle() -> None:
             for w in alive():
                 start_next(w)
+            while backlog:
+                w = admit_arrival(backlog[0])
+                if w is None:
+                    break
+                backlog.popleft()
+                start_next(w)
 
+        def live_push(ev: TimelineEvent) -> None:
+            # Reactive injection (autoscaler join on an SLO breach): the
+            # event enters the running loop no earlier than the current clock.
+            heapq.heappush(heap, (max(ev.time_s, now), 0, next(seq), ev))
+
+        self._live_push = live_push
         kick_idle()
-        while len(res.values) < n_grains:
+        while len(res.values) + len(res.shed) < n_grains:
             if not heap:
                 if not alive():
                     raise RuntimeError("all workers dead with grains pending")
                 raise RuntimeError("runtime stalled with grains pending")
             now, prio, _, payload = heapq.heappop(heap)
             self.authority.advance(now, ctx)
+
+            if prio == 2:  # open-loop arrival
+                g = payload
+                res.arrive_s[g] = now
+                if not alive():
+                    raise RuntimeError("all workers dead with grains pending")
+                w = admit_arrival(g)
+                if w is None:
+                    if overflow == "shed":
+                        res.shed.append(g)
+                        self.authority.count_event(None, "shed", ctx)
+                        continue
+                    backlog.append(g)
+                    continue
+                self.authority.count_event(w, "arrive", ctx)
+                start_next(w)
+                continue
 
             if prio == 0:  # timeline event
                 self.authority.count_event(
@@ -717,6 +857,7 @@ class AsyncRuntime:
 
         # Unfired timeline events (scheduled past the last completion) carry
         # over so a later job on this runtime still sees them.
+        self._live_push = None
         self._pending = [p for _, prio, _, p in heap if prio == 0]
         self.clock = now
         res.end_s = now
@@ -725,6 +866,19 @@ class AsyncRuntime:
         self.authority.end_job(ctx)
         res.coord = self.authority.stats()
         return res
+
+    def inject_event(self, ev: TimelineEvent) -> None:
+        """Schedule a timeline event reactively.
+
+        During a ``run`` the event enters the live loop at
+        ``max(ev.time_s, clock)`` — this is how a metric-driven controller
+        (the serve-layer autoscaler on a p99 breach) turns an observation
+        into a mid-job ``join`` without scripting it up front.  Outside a run
+        it lands in the carry-over set the next job replays."""
+        if self._live_push is not None:
+            self._live_push(ev)
+        else:
+            self._pending.append(ev)
 
     def plan(self, n_grains: int, now_s: float | None = None) -> GrainPlan:
         """The allotment a job of ``n_grains`` would start from — a pure
@@ -822,6 +976,13 @@ class AsyncRuntime:
 
     def _apply_timeline(self, ev: TimelineEvent, now, queues, abort_inflight,
                         dead, ctx: JobContext):
+        if ev.kind in _WORKLOAD_KINDS:
+            raise ValueError(
+                f"timeline event {ev.kind!r} is workload-plane: it is "
+                "consumed by the serving layer when materializing an "
+                "ArrivalSource (FleetServer.serve_stream / Cluster.serve), "
+                "not executed by the runtime"
+            )
         if ev.kind in _COORD_KINDS:
             self.authority.apply_coord_event(ev, now, ctx)
             return

@@ -13,6 +13,15 @@ their engines.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
       --requests 24 --fleet 8x4:4x2:2x1 --scenario halving --compare-serial
+
+Workload clauses (``arrive:``/``burst:``/``mix:``/``scale:``) switch the run
+open-loop: requests *arrive* on the scenario's schedule, full queues shed or
+backlog (``--overflow``), the report gains p50/p99 TTFT and goodput under
+``--deadline``, and ``scale:`` rules join replicas on a measured SLO breach:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
+      --requests 256 --fleet 8x4:4x2 --overflow shed --deadline 2 \
+      --scenario 'arrive:poisson(8)@0-30 burst:64@10 scale:+2@p99>0.5'
 """
 
 from __future__ import annotations
@@ -103,6 +112,19 @@ def main() -> None:
     ap.add_argument("--compare-serial", action="store_true",
                     help="also run the per-request-serial baseline on a "
                          "fresh fleet and report the batched speedup")
+    ap.add_argument("--overflow", choices=("queue", "shed"), default="queue",
+                    help="open-loop admission when every replica queue is "
+                         "full: backlog the arrival or shed it (reject trace)")
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="open-loop SLO deadline in simulated seconds "
+                         "(drives goodput accounting)")
+    ap.add_argument("--window", type=float, default=None,
+                    help="open-loop SLO-window seconds (phase anchor for "
+                         "'@k:frac%%' clauses); default: one admission "
+                         "quota's estimated drain time")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the run's headline metrics (throughput, "
+                         "p50/p99 TTFT, shed rate, joined replicas) as JSON")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, reduced=True)
@@ -124,11 +146,12 @@ def main() -> None:
           f"scenario {scenario or 'none'})")
     rep = cluster.serve(
         ServeJob(requests, model=model, params=params, max_seq=args.max_seq,
-                 max_queue_depth=args.queue_depth),
+                 max_queue_depth=args.queue_depth, overflow=args.overflow,
+                 deadline_s=args.deadline, window_s=args.window),
         scenario=scenario,
     )
     for p in rep.phases:
-        print(f"wave {p.index}: {p.metrics['n_requests']:3d} reqs  "
+        print(f"{p.label} {p.index}: {p.metrics['n_requests']:3d} reqs  "
               f"{int(p.work):4d} tokens  {p.sim_time_s:7.2f}s  "
               f"{p.metrics['tokens_per_s']:7.2f} tok/s  "
               f"quality={p.quality:.2f}  migrated={p.n_migrated}  "
@@ -139,8 +162,41 @@ def main() -> None:
           f"(worst quality {rep.homogenization_quality():.2f}, "
           f"{rep.measured_speedup:.2f}x measured vs "
           f"{rep.predicted_speedup:.2f}x predicted speedup)")
+    if rep.latency is not None:
+        lat = rep.latency
+        print(f"open-loop latency: p50 TTFT {lat.p50_ttft_s:.3f}s, "
+              f"p99 TTFT {lat.p99_ttft_s:.3f}s, "
+              f"p50 per-token {lat.p50_token_s:.4f}s; "
+              f"shed {rep.metrics['n_shed']}/{rep.metrics['n_requests']} "
+              f"({lat.shed_rate:.1%})"
+              + (f", goodput {lat.goodput_rps:.2f} req/s under "
+                 f"{lat.deadline_s:g}s deadline" if lat.deadline_s else "")
+              + (f", autoscaled in {rep.metrics['joined']}"
+                 if rep.metrics.get("joined") else ""))
     if rep.coord is not None:
         print(f"coordination plane: {rep.coord.summary()}")
+    if args.json:
+        import json
+
+        payload = {
+            "fleet": rep.fleet,
+            "scenario": rep.scenario,
+            "mode": rep.metrics.get("mode", "waves"),
+            "tokens_per_s": rep.throughput,
+            "quality": rep.homogenization_quality(),
+            "n_requests": rep.metrics["n_requests"],
+        }
+        if rep.latency is not None:
+            payload.update(
+                p50_ttft_s=rep.latency.p50_ttft_s,
+                p99_ttft_s=rep.latency.p99_ttft_s,
+                shed_rate=rep.latency.shed_rate,
+                goodput_rps=rep.latency.goodput_rps,
+                joined=list(rep.metrics.get("joined", [])),
+            )
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"wrote {args.json}")
 
     if args.compare_serial:
         serial = Cluster(fleet).serve(

@@ -1,7 +1,14 @@
 from .dispatch import DispatchResult, HomogenizedDispatcher, Replica
 from .engine import DecodeEngine, Request
 from .executor import EngineExecutor
-from .fleet import BundleStats, FleetReport, FleetServer
+from .fleet import (
+    BundleStats,
+    FleetReport,
+    FleetServer,
+    LatencyStats,
+    RequestTrace,
+    StreamReport,
+)
 
 __all__ = [
     "DispatchResult",
@@ -13,4 +20,7 @@ __all__ = [
     "BundleStats",
     "FleetReport",
     "FleetServer",
+    "LatencyStats",
+    "RequestTrace",
+    "StreamReport",
 ]

@@ -108,6 +108,51 @@ class HomogenizedDispatcher:
         self._sync_replicas()
         return self._result(run)
 
+    def dispatch_stream(
+        self,
+        engines: dict[str, object],
+        requests: list,
+        arrive_s,
+        *,
+        timeline: tuple[TimelineEvent, ...] = (),
+        max_queue_depth: int | None = None,
+        overflow: str = "queue",
+        engine_factory=None,
+        on_finish=None,
+    ) -> tuple[DispatchResult, RuntimeResult, EngineExecutor]:
+        """Open-loop real-execution path: requests *arrive* at job-relative
+        times ``arrive_s[i]`` instead of being planned up front.  Each arrival
+        is admitted to the min-ETA replica with queue room
+        (``max_queue_depth``); saturation queues or sheds per ``overflow``
+        (``RuntimeResult.shed``).  Always batched — continuous open-loop
+        admission is only meaningful against live engine slots.  Returns the
+        executor too, so callers can read per-grain first-token times."""
+        self._validate_engines(engines, engine_factory)
+        executor = EngineExecutor(engines, requests,
+                                  engine_factory=engine_factory,
+                                  on_finish=on_finish)
+        run = self.runtime.run(
+            len(requests),
+            executor=executor,
+            timeline=timeline, timeline_relative=True,
+            arrivals=[float(t) for t in arrive_s],
+            max_queue_depth=max_queue_depth,
+            overflow=overflow,
+        )
+        self._sync_replicas()
+        return self._result(run), run, executor
+
+    def _validate_engines(self, engines: dict[str, object],
+                          engine_factory) -> None:
+        unknown = set(engines) - set(self.replicas)
+        if unknown:
+            raise ValueError(f"engines for unknown replicas {sorted(unknown)}")
+        unbacked = set(self.tracker.workers()) - set(engines)
+        if unbacked and engine_factory is None:
+            # A live replica with no engine would be scheduled grains it
+            # cannot execute (KeyError mid-bundle after partial decode).
+            raise ValueError(f"live replicas without engines {sorted(unbacked)}")
+
     def dispatch_to_engines(
         self,
         engines: dict[str, object],
@@ -115,6 +160,7 @@ class HomogenizedDispatcher:
         timeline: tuple[TimelineEvent, ...] = (),
         batched: bool = True,
         engine_factory=None,
+        initial_plan=None,
     ) -> tuple[DispatchResult, RuntimeResult | None]:
         """Real-execution path: route ``requests`` (serve.engine.Request) to
         named DecodeEngines via the runtime.
@@ -132,15 +178,10 @@ class HomogenizedDispatcher:
         migrates between replica queues (or off a killed replica) mid-bundle.
         ``engine_factory(worker)`` backs replicas that join mid-bundle (or
         arrive live-but-engineless) by building their engine on demand.
+        ``initial_plan`` overrides the tracker-derived allotment (the fleet
+        layer's per-replica admission caps).
         """
-        unknown = set(engines) - set(self.replicas)
-        if unknown:
-            raise ValueError(f"engines for unknown replicas {sorted(unknown)}")
-        unbacked = set(self.tracker.workers()) - set(engines)
-        if unbacked and engine_factory is None:
-            # A live replica with no engine would be scheduled grains it
-            # cannot execute (KeyError mid-bundle after partial decode).
-            raise ValueError(f"live replicas without engines {sorted(unbacked)}")
+        self._validate_engines(engines, engine_factory)
 
         if batched:
             run = self.runtime.run(
@@ -148,6 +189,7 @@ class HomogenizedDispatcher:
                 executor=EngineExecutor(engines, requests,
                                         engine_factory=engine_factory),
                 timeline=timeline, timeline_relative=True,
+                initial_plan=initial_plan,
             )
             self._sync_replicas()
             return self._result(run), run
@@ -173,6 +215,7 @@ class HomogenizedDispatcher:
         run = self.runtime.run(
             len(requests), grain_cost=cost, execute=execute,
             timeline=timeline, timeline_relative=True,
+            initial_plan=initial_plan,
         )
         self._sync_replicas()
         return self._result(run), run

@@ -57,10 +57,21 @@ class EngineExecutor(GrainExecutor):
     uniform_cost = None
 
     def __init__(self, engines: Mapping[str, object], requests: Sequence,
-                 engine_factory=None):
+                 engine_factory=None, on_finish=None):
         self.engines = dict(engines)
         self.engine_factory = engine_factory
         self.requests = list(requests)
+        # Streaming observability: grain -> simulated time of its first
+        # output token (TTFT numerator).  A cancelled decode's entry is
+        # dropped — the discarded tokens were never delivered, so TTFT is
+        # measured on the surviving (exactly-once) decode.
+        self.first_token_s: dict[int, float] = {}
+        self._watch: dict[str, set[int]] = {}
+        # on_finish(grain, request, worker_name, now_s, first_token_s):
+        # fires at each completed decode, inside the tick — the hook a
+        # reactive controller (SLO autoscaler) uses to observe latency while
+        # the job runs.
+        self.on_finish = on_finish
         rids = [r.rid for r in self.requests]
         if len(set(rids)) != len(rids):
             raise ValueError("request rids must be unique within a bundle")
@@ -139,13 +150,26 @@ class EngineExecutor(GrainExecutor):
 
     def begin(self, worker, grain: int, now_s: float) -> None:
         self.engine_for(worker).submit(self.requests[grain])
+        self._watch.setdefault(worker.name, set()).add(grain)
 
     def tick(self, worker, now_s: float) -> list[tuple[int, object]]:
         finished = self.engines[worker.name].step()
-        return [(self._grain_of[r.rid], r) for r in finished]
+        watch = self._watch.get(worker.name)
+        if watch:
+            for g in [g for g in watch if self.requests[g].out_tokens]:
+                self.first_token_s[g] = now_s
+                watch.discard(g)
+        out = [(self._grain_of[r.rid], r) for r in finished]
+        if self.on_finish is not None:
+            for g, r in out:
+                self.on_finish(g, r, worker.name, now_s,
+                               self.first_token_s.get(g, now_s))
+        return out
 
     def abort(self, worker, grain: int) -> None:
         self.engines[worker.name].cancel(self.requests[grain].rid)
+        self._watch.get(worker.name, set()).discard(grain)
+        self.first_token_s.pop(grain, None)
 
     def heartbeat(self, worker, now_s: float) -> PerfReport | None:
         return self.engines[worker.name].heartbeat(

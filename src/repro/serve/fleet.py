@@ -19,13 +19,112 @@ to its start; events landing past a wave's end carry over to the next wave
 from __future__ import annotations
 
 import dataclasses
+import math
 from collections import deque
 from typing import Sequence
 
+from ..core.homogenization import scope_lengths
 from ..core.runtime import TimelineEvent
+from ..core.scheduler import GrainPlan
 from .dispatch import HomogenizedDispatcher, Replica
 
-__all__ = ["BundleStats", "FleetReport", "FleetServer"]
+__all__ = [
+    "BundleStats",
+    "FleetReport",
+    "FleetServer",
+    "LatencyStats",
+    "RequestTrace",
+    "StreamReport",
+]
+
+
+def _percentile(sorted_vals: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile of an already-sorted sample (empty -> nan)."""
+    n = len(sorted_vals)
+    if n == 0:
+        return float("nan")
+    return sorted_vals[min(n - 1, max(0, math.ceil(q * n) - 1))]
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestTrace:
+    """One request's open-loop lifecycle, in stream-relative seconds.
+    A shed request has ``shed=True`` and no timing past ``arrive_s`` — the
+    explicit reject record admission control owes the client."""
+
+    rid: int
+    arrive_s: float
+    first_token_s: float | None      # None until a token was produced / shed
+    finish_s: float | None           # None when shed
+    worker: str | None
+    tokens: int
+    shed: bool = False
+
+    @property
+    def ttft_s(self) -> float | None:
+        if self.first_token_s is None:
+            return None
+        return self.first_token_s - self.arrive_s
+
+    @property
+    def latency_s(self) -> float | None:
+        if self.finish_s is None:
+            return None
+        return self.finish_s - self.arrive_s
+
+
+@dataclasses.dataclass(frozen=True)
+class LatencyStats:
+    """Latency-percentile view of one open-loop stream: TTFT percentiles,
+    per-token latency, goodput under a deadline, and the shed rate."""
+
+    n_served: int
+    n_shed: int
+    p50_ttft_s: float
+    p99_ttft_s: float
+    mean_ttft_s: float
+    p50_token_s: float               # total latency / tokens, per request
+    p99_token_s: float
+    deadline_s: float | None = None
+    n_within_deadline: int = 0
+    goodput_rps: float = 0.0         # deadline-met completions / sim second
+    shed_rate: float = 0.0
+
+    @classmethod
+    def from_traces(
+        cls,
+        traces: Sequence[RequestTrace],
+        sim_time_s: float,
+        deadline_s: float | None = None,
+    ) -> "LatencyStats":
+        served = [t for t in traces if not t.shed]
+        ttfts = sorted(t.ttft_s for t in served if t.ttft_s is not None)
+        per_tok = sorted(
+            t.latency_s / max(t.tokens, 1)
+            for t in served if t.latency_s is not None
+        )
+        n_met = sum(
+            1 for t in served
+            if deadline_s is not None and t.latency_s is not None
+            and t.latency_s <= deadline_s
+        )
+        n_shed = len(traces) - len(served)
+        return cls(
+            n_served=len(served),
+            n_shed=n_shed,
+            p50_ttft_s=_percentile(ttfts, 0.50),
+            p99_ttft_s=_percentile(ttfts, 0.99),
+            mean_ttft_s=sum(ttfts) / len(ttfts) if ttfts else float("nan"),
+            p50_token_s=_percentile(per_tok, 0.50),
+            p99_token_s=_percentile(per_tok, 0.99),
+            deadline_s=deadline_s,
+            n_within_deadline=n_met,
+            goodput_rps=(
+                n_met / max(sim_time_s, 1e-12)
+                if deadline_s is not None else 0.0
+            ),
+            shed_rate=n_shed / max(len(traces), 1),
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,6 +157,31 @@ class FleetReport:
     sim_time_s: float          # waves run back-to-back: sum of makespans
     tokens_per_s: float
     worst_quality: float
+
+
+@dataclasses.dataclass(frozen=True)
+class StreamReport:
+    """One open-loop stream: continuous admission, per-request latency
+    traces, and any replicas the autoscaler joined mid-stream."""
+
+    n_requests: int
+    n_served: int
+    n_shed: int
+    tokens_out: int
+    sim_time_s: float
+    tokens_per_s: float
+    quality: float             # survivor drain-time spread at stream end
+    n_migrated: int
+    shares: dict[str, int]
+    traces: tuple[RequestTrace, ...]
+    latency: LatencyStats
+    joined: tuple[str, ...] = ()
+    worker_busy: dict[str, float] = dataclasses.field(default_factory=dict)
+    worker_finish: dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def shed_rate(self) -> float:
+        return self.n_shed / max(self.n_requests, 1)
 
 
 class FleetServer:
@@ -156,6 +280,7 @@ class FleetServer:
                 engine_factory=(
                     self._factory if self.engine_factory is not None else None
                 ),
+                initial_plan=self._wave_plan(len(wave)),
             )
             first = False
             wave_idx += 1
@@ -183,6 +308,178 @@ class FleetServer:
             sim_time_s=total_time,
             tokens_per_s=total_tokens / max(total_time, 1e-12),
             worst_quality=max((b.quality for b in bundles), default=1.0),
+        )
+
+    def _wave_plan(self, n: int) -> GrainPlan | None:
+        """Per-replica admission enforcement for one wave: the homogenized
+        allotment, with every replica's initial queue capped at
+        ``max_queue_depth``.  The old quota was *global* (depth x live
+        count), so a fast replica could be handed another replica's share of
+        the wave and start it depth-deep — exactly the unbounded-queue risk
+        admission control exists to prevent.  Returns None when no cap binds,
+        which keeps the uncapped path (and its plans) bitwise-identical."""
+        plan = self.dispatcher.runtime.plan(n)
+        cap = self.max_queue_depth
+        if all(s <= cap for s in plan.shares):
+            return None
+        now = self.dispatcher.clock
+        capped: dict[str, int] = {}
+        free = dict(zip(plan.workers, plan.shares))
+        while True:
+            over = {w: s for w, s in free.items() if s > cap}
+            if not over:
+                break
+            excess = sum(s - cap for s in over.values())
+            for w in over:
+                capped[w] = cap
+                free.pop(w)
+            if not free:
+                # n <= cap * n_live (the wave quota), so nothing is left over
+                # once everyone sits at the cap.
+                break
+            names = list(free)
+            add = scope_lengths(
+                excess, [self.tracker.perf(w, now) for w in names]
+            )
+            for w, a in zip(names, add):
+                free[w] += a
+        shares = {**capped, **free}
+        return GrainPlan(
+            workers=plan.workers,
+            shares=tuple(shares[w] for w in plan.workers),
+            total_grains=n,
+        )
+
+    def serve_stream(
+        self,
+        requests: Sequence,
+        arrive_s: Sequence[float],
+        *,
+        timeline: tuple[TimelineEvent, ...] = (),
+        overflow: str = "queue",
+        deadline_s: float | None = None,
+        scale_rules: Sequence = (),
+        scale_worker=None,
+    ) -> StreamReport:
+        """Open-loop continuous serving: request ``i`` arrives ``arrive_s[i]``
+        seconds into the stream and is admitted to the min-ETA replica with
+        queue room (per-replica ``max_queue_depth``); arrivals finding every
+        queue full are backlogged (``overflow='queue'``) or shed with a
+        reject trace (``overflow='shed'``).  Per-request enqueue /
+        first-token / completion timestamps land in ``StreamReport.traces``
+        and roll up into ``LatencyStats`` (p50/p99 TTFT, per-token latency,
+        goodput under ``deadline_s``, shed rate).
+
+        ``scale_rules`` close the metrics->membership loop: each rule (duck
+        type: ``add``, ``metric`` 'p50'|'p99', ``threshold`` seconds,
+        ``window`` samples) watches a rolling TTFT window as decodes finish
+        and, on breach, joins ``add`` new replicas mid-stream through the
+        engine-factory path.  ``scale_worker(i)`` builds the i-th joined
+        replica (default: a clone of the fastest live replica's step clock,
+        named ``scale{i}``)."""
+        requests = list(requests)
+        arrive = [float(t) for t in arrive_s]
+        if len(arrive) != len(requests):
+            raise ValueError(
+                f"arrive_s covers {len(arrive)} requests, got {len(requests)}"
+            )
+        if scale_rules and self.engine_factory is None:
+            raise ValueError(
+                "scale rules join new replicas mid-stream, which needs an "
+                "engine_factory to build their engines; construct the "
+                "FleetServer with engine_factory= (or drop the scale: clause)"
+            )
+        live = self.live_replicas()
+        if not live:
+            raise RuntimeError(
+                f"no live replicas; {len(requests)} requests stranded"
+            )
+
+        rt = self.dispatcher.runtime
+        start = rt.clock
+        joined: list[str] = []
+        fired = [False] * len(scale_rules)
+        ttfts: deque[float] = deque(
+            maxlen=max((r.window for r in scale_rules), default=1)
+        )
+
+        def default_scale_worker(i: int) -> Replica:
+            fastest = max(self.dispatcher.replicas.values(),
+                          key=lambda r: r.perf)
+            return Replica(f"scale{i}", fastest.perf)
+
+        def on_finish(g, req, wname, now_s, first_token_s):
+            ttfts.append(first_token_s - (start + arrive[g]))
+            for i, rule in enumerate(scale_rules):
+                if fired[i] or len(ttfts) < rule.window:
+                    continue
+                vals = sorted(list(ttfts)[-rule.window:])
+                q = float(rule.metric[1:]) / 100.0
+                if _percentile(vals, q) <= rule.threshold:
+                    continue
+                fired[i] = True
+                pv = self.tracker.perf_vector()
+                for _ in range(rule.add):
+                    rep = (scale_worker or default_scale_worker)(len(joined))
+                    # Prior: the best learned effective rate, so the joiner
+                    # is offered real work immediately instead of ramping a
+                    # neutral 1.0 through heartbeats.
+                    prior = max(pv.values(), default=rep.perf)
+                    rt.inject_event(
+                        TimelineEvent(now_s, "join", rep, perf=prior)
+                    )
+                    joined.append(rep.name)
+
+        res, run, executor = self.dispatcher.dispatch_stream(
+            {n: self.engines[n] for n in live if n in self.engines},
+            requests,
+            arrive,
+            timeline=timeline,
+            max_queue_depth=self.max_queue_depth,
+            overflow=overflow,
+            engine_factory=(
+                self._factory if self.engine_factory is not None else None
+            ),
+            on_finish=on_finish,
+        )
+
+        shed = set(run.shed)
+        recs = {rec.grain: rec for rec in run.records}
+        traces = []
+        for g, r in enumerate(requests):
+            if g in shed:
+                traces.append(RequestTrace(
+                    r.rid, arrive[g], None, None, None, 0, shed=True))
+                continue
+            ft = executor.first_token_s.get(g)
+            rec = recs[g]
+            traces.append(RequestTrace(
+                r.rid, arrive[g],
+                None if ft is None else ft - start,
+                rec.end_s - start,
+                run.executed_by[g],
+                len(r.out_tokens),
+            ))
+        tokens = sum(t.tokens for t in traces)
+        stream_start = run.end_s - run.makespan
+        return StreamReport(
+            n_requests=len(requests),
+            n_served=len(requests) - len(shed),
+            n_shed=len(shed),
+            tokens_out=tokens,
+            sim_time_s=run.makespan,
+            tokens_per_s=tokens / max(run.makespan, 1e-12),
+            quality=res.quality,
+            n_migrated=run.n_migrated,
+            shares=res.shares,
+            traces=tuple(traces),
+            latency=LatencyStats.from_traces(
+                traces, run.makespan, deadline_s=deadline_s),
+            joined=tuple(joined),
+            worker_busy=dict(run.worker_busy),
+            worker_finish={
+                w: f - stream_start for w, f in run.worker_finish.items()
+            },
         )
 
     # -- fleet management (between waves) ------------------------------------
