@@ -1,0 +1,205 @@
+"""Block-size sweep harness over the Pallas kernels -> BENCH_kernels.json.
+
+For each kernel (matmul / flash-attention / mamba-scan) the sweep times the
+op's built-in default blocks against a candidate grid and records the winner,
+keyed by shape bucket and backend.  ``--update-registry`` persists winners
+into the checked-in registry (``src/repro/kernels/autotune_registry.json``)
+that the public ops consult when callers don't pass explicit block sizes.
+
+Backend honesty: on TPU the sweep times the compiled Pallas kernels (the
+real tuning target).  On CPU there is no compiled Pallas path — matmul and
+flash-attention sweep the *interpreted* kernel at reduced shapes (block
+choice still changes grid-step count, so the mechanics and registry plumbing
+are exercised end to end; rows are marked ``"mode": "interpret"``), and the
+mamba-scan sweeps its chunked-jnp path, where the chunk size is a genuine
+CPU-perf knob.
+
+The persistent JAX compilation cache is enabled for the whole sweep, so
+repeat runs skip XLA recompiles (``kernels/autotune.py``).
+
+Run:    PYTHONPATH=src python -m benchmarks.bench_kernels
+Update: PYTHONPATH=src python -m benchmarks.bench_kernels --update-registry
+Iters:  REPRO_BENCH_ITERS=25 PYTHONPATH=src python -m benchmarks.bench_kernels
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.autotune import (
+    REGISTRY_PATH, enable_compilation_cache, load_registry, registry_key,
+    save_registry,
+)
+from repro.kernels.flash_attention.ops import mha
+from repro.kernels.mamba_scan.ops import ssd
+from repro.kernels.matmul.ops import matmul
+
+try:
+    from .kernel_bench import _time
+    from .run import write_bench_json
+except ImportError:          # executed as a loose script, not a module
+    from kernel_bench import _time
+    from run import write_bench_json
+
+
+def _sweep(name: str, dims: dict, default_blocks: dict,
+           candidates: list[dict], make_fn, mode: str) -> dict:
+    """Time the default blocks and every candidate; return the row for the
+    JSON artifact (winner = fastest, ties to the default)."""
+    rows = []
+    default_us = None
+    for blocks in [default_blocks] + candidates:
+        fn, args = make_fn(blocks)
+        us = _time(fn, *args)
+        rows.append({"blocks": blocks, "us_per_call": us})
+        if blocks == default_blocks:
+            default_us = us
+    best = min(rows, key=lambda r: r["us_per_call"])
+    if best["us_per_call"] >= default_us:
+        best = rows[0]
+    return {
+        "dims": dims,
+        "mode": mode,
+        "default_blocks": default_blocks,
+        "default_us_per_call": default_us,
+        "candidates": rows,
+        "winner": best["blocks"],
+        "winner_us_per_call": best["us_per_call"],
+        "speedup_vs_default": default_us / best["us_per_call"],
+    }
+
+
+def sweep_matmul(on_tpu: bool) -> dict:
+    rng = np.random.default_rng(0)
+    if on_tpu:
+        m = k = n = 1024
+        cands = [{"block_m": bm, "block_n": bn, "block_k": bk}
+                 for bm in (128, 256, 512)
+                 for bn in (128, 256, 512)
+                 for bk in (256, 512)]
+        mode = "compiled"
+        kw = {}
+    else:
+        m = k = n = 128     # interpreter laps are slow; keep the grid small
+        cands = [{"block_m": b, "block_n": b, "block_k": b}
+                 for b in (32, 64, 128)]
+        mode = "interpret"
+        kw = {"use_pallas": True, "interpret": True}
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    y = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+
+    def make(blocks):
+        return (lambda x, y: matmul(x, y, **blocks, **kw)), (x, y)
+
+    return _sweep("matmul", {"m": m, "k": k, "n": n},
+                  {"block_m": 256, "block_n": 256, "block_k": 512},
+                  cands, make, mode)
+
+
+def sweep_mha(on_tpu: bool) -> dict:
+    rng = np.random.default_rng(1)
+    if on_tpu:
+        b, s, h, d = 4, 2048, 8, 128
+        cands = [{"block_q": bq, "block_k": bk}
+                 for bq in (128, 256, 512) for bk in (128, 256, 512)]
+        mode = "compiled"
+        kw = {}
+    else:
+        b, s, h, d = 1, 128, 2, 64
+        cands = [{"block_q": bq, "block_k": bk}
+                 for bq in (32, 64, 128) for bk in (64, 128)]
+        mode = "interpret"
+        kw = {"use_pallas": True, "interpret": True}
+    q = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, h, d)), jnp.float32)
+
+    def make(blocks):
+        return (lambda q, k, v: mha(q, k, v, **blocks, **kw)), (q, k, v)
+
+    return _sweep("mha", {"sq": s, "skv": s, "d": d},
+                  {"block_q": 512, "block_k": 512}, cands, make, mode)
+
+
+def sweep_ssd(on_tpu: bool) -> dict:
+    rng = np.random.default_rng(2)
+    b, s, h, p, g, n = 1, 512, 8, 64, 1, 64
+    if on_tpu:
+        cands = [{"chunk": c} for c in (64, 128, 256)]
+        mode = "compiled"
+        kw = {}
+    else:
+        cands = [{"chunk": c} for c in (32, 64, 256)]
+        mode = "chunked_jnp"    # chunk is a real CPU knob on this path
+        kw = {"use_pallas": False}
+    x = jnp.asarray(rng.standard_normal((b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(np.abs(rng.standard_normal((b, s, h))) * 0.1, jnp.float32)
+    a = jnp.asarray(-np.ones(h), jnp.float32)
+    bm = jnp.asarray(rng.standard_normal((b, s, g, n)), jnp.float32)
+    cm = jnp.asarray(rng.standard_normal((b, s, g, n)), jnp.float32)
+
+    def make(blocks):
+        f = jax.jit(lambda *args: ssd(*args, **blocks, **kw)[0])
+        return f, (x, dt, a, bm, cm)
+
+    return _sweep("ssd", {"s": s, "p": p, "n": n}, {"chunk": 128},
+                  cands, make, mode)
+
+
+def run_bench() -> dict:
+    cache_dir = enable_compilation_cache()
+    backend = jax.default_backend()
+    on_tpu = backend == "tpu"
+    return {
+        "backend": backend,
+        "compilation_cache": cache_dir,
+        "ops": {
+            "matmul": sweep_matmul(on_tpu),
+            "mha": sweep_mha(on_tpu),
+            "ssd": sweep_ssd(on_tpu),
+        },
+    }
+
+
+def update_registry(result: dict) -> None:
+    registry = dict(load_registry())
+    for op, row in result["ops"].items():
+        key = registry_key(op, row["dims"], result["backend"])
+        registry[key] = {
+            "blocks": row["winner"],
+            "mode": row["mode"],
+            "us_per_call": row["winner_us_per_call"],
+            "speedup_vs_default": row["speedup_vs_default"],
+        }
+    save_registry(registry)
+    print(f"updated {REGISTRY_PATH} ({len(registry)} entries)")
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    ap.add_argument("--update-registry", action="store_true",
+                    help="persist winners into the checked-in registry")
+    args = ap.parse_args(argv)
+
+    result = run_bench()
+    for op, row in result["ops"].items():
+        print(
+            f"{op:8s} [{row['mode']:11s}] default {row['default_blocks']} "
+            f"{row['default_us_per_call']:10.0f} us -> winner "
+            f"{row['winner']} {row['winner_us_per_call']:10.0f} us "
+            f"({row['speedup_vs_default']:.2f}x)"
+        )
+    if args.update_registry:
+        update_registry(result)
+    write_bench_json(args.out, result)
+    print(f"wrote {args.out}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

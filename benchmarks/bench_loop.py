@@ -1,0 +1,171 @@
+"""Event-loop microbenchmark: pure dispatch events/sec, no workload compute.
+
+``bench_coord`` times whole simulated jobs (planning, scenario compilation,
+report assembly); this bench isolates the number the raw-speed pass actually
+optimizes — how many dispatch events (completions, ticks, gossip rounds,
+timeline changes) the coordinator loop retires per host-second when the
+executor is a stub (``SimJob`` carries no real compute, every grain is
+timing-only).  Fleet sizes are kept small so the bench doubles as the CI
+``loop-smoke`` gate: a >30% events/sec regression against the committed
+``BENCH_loop.json`` fails the build (``--check``).
+
+Each K also gets a same-machine reference wall from the retained
+``eta_mode='recompute'`` path (the pre-fast-path hot loop, bitwise-identical
+decisions), so the artifact carries a self-certifying speedup instead of a
+wall recorded on somebody else's machine.
+
+Run:    PYTHONPATH=src python -m benchmarks.bench_loop
+Check:  PYTHONPATH=src python -m benchmarks.bench_loop --check BENCH_loop.json
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.cluster import Cluster, CoordSpec, FleetSpec, SimJob
+
+try:
+    from .run import write_bench_json
+except ImportError:          # executed as a loose script, not a module
+    from run import write_bench_json
+
+DEFAULT_WORKERS = 16
+DEFAULT_GRAINS = 1024
+DEFAULT_JOBS = 3
+DEFAULT_KS = (1, 2, 4)
+#: CI regression tolerance: fail if events/sec drops below this fraction of
+#: the committed baseline.
+CHECK_FLOOR = 0.7
+
+
+def fleet_for(n_workers: int, coordinators: int) -> FleetSpec:
+    perfs = [2.0, 1.5, 1.0, 0.5]
+    spec = ",".join(f"{perfs[i % 4]:g}" for i in range(n_workers))
+    return FleetSpec.parse(spec).with_coordinators(coordinators)
+
+
+def run_k(k: int, *, n_workers: int, n_grains: int, n_jobs: int,
+          eta_mode: str = "incremental", repeats: int = 3) -> dict:
+    """Best-of-``repeats`` pure-dispatch run at K shards (best-of damps
+    scheduler noise without inflating the rate the way a mean of warm+cold
+    laps would)."""
+    best = None
+    for _ in range(repeats):
+        fleet = fleet_for(n_workers, k)
+        cluster = Cluster(fleet, priors="spec",
+                          coord=CoordSpec(coordinators=k))
+        saved = os.environ.get("REPRO_ETA_MODE")
+        os.environ["REPRO_ETA_MODE"] = eta_mode
+        try:
+            wall0 = time.perf_counter()
+            rep = cluster.simulate(SimJob(size=n_grains, n_jobs=n_jobs))
+            wall_s = time.perf_counter() - wall0
+        finally:
+            if saved is None:
+                os.environ.pop("REPRO_ETA_MODE", None)
+            else:
+                os.environ["REPRO_ETA_MODE"] = saved
+        total = rep.coord.as_dict()["total_events"]
+        r = {
+            "k": k,
+            "eta_mode": eta_mode,
+            "total_events": total,
+            "wall_s": wall_s,
+            "events_per_s": total / wall_s if wall_s > 0 else 0.0,
+            "sim_time_s": rep.sim_time_s,
+        }
+        if best is None or r["events_per_s"] > best["events_per_s"]:
+            best = r
+    return best
+
+
+def run_bench(n_workers: int, n_grains: int, n_jobs: int,
+              ks=DEFAULT_KS) -> dict:
+    out = {
+        "config": {
+            "n_workers": n_workers, "n_grains": n_grains, "n_jobs": n_jobs,
+            "ks": list(ks),
+        },
+        "scaling": {},
+    }
+    for k in ks:
+        r = run_k(k, n_workers=n_workers, n_grains=n_grains, n_jobs=n_jobs)
+        ref = run_k(k, n_workers=n_workers, n_grains=n_grains,
+                    n_jobs=n_jobs, eta_mode="recompute")
+        if ref["sim_time_s"] != r["sim_time_s"]:
+            raise AssertionError(
+                f"K={k}: recompute reference diverged "
+                f"(sim {ref['sim_time_s']} vs {r['sim_time_s']})"
+            )
+        r["reference_events_per_s"] = ref["events_per_s"]
+        r["speedup_vs_reference"] = (
+            r["events_per_s"] / ref["events_per_s"]
+            if ref["events_per_s"] > 0 else 0.0
+        )
+        out["scaling"][str(k)] = r
+    return out
+
+
+def check(result: dict, baseline_path: str) -> list[str]:
+    """CI gate: events/sec per K must stay within ``CHECK_FLOOR`` of the
+    committed baseline (same config, same machine class)."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    errors = []
+    if baseline.get("config") != result["config"]:
+        errors.append(
+            f"config drift: baseline {baseline.get('config')} vs "
+            f"current {result['config']} — regenerate {baseline_path}"
+        )
+        return errors
+    for k, base in baseline.get("scaling", {}).items():
+        cur = result["scaling"].get(k)
+        if cur is None:
+            errors.append(f"K={k} missing from current run")
+            continue
+        floor = CHECK_FLOOR * base["events_per_s"]
+        if cur["events_per_s"] < floor:
+            errors.append(
+                f"K={k}: {cur['events_per_s']:.0f} ev/s < 70% of baseline "
+                f"{base['events_per_s']:.0f} ev/s"
+            )
+    return errors
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workers", type=int, default=DEFAULT_WORKERS)
+    ap.add_argument("--grains", type=int, default=DEFAULT_GRAINS)
+    ap.add_argument("--jobs", type=int, default=DEFAULT_JOBS)
+    ap.add_argument("--out", default="BENCH_loop.json")
+    ap.add_argument("--check", metavar="BASELINE",
+                    help="compare against a committed BENCH_loop.json "
+                         "instead of writing one; exit 1 on >30% regression")
+    args = ap.parse_args(argv)
+
+    result = run_bench(args.workers, args.grains, args.jobs)
+    for k, r in result["scaling"].items():
+        print(
+            f"K={k}: {r['events_per_s']:10.0f} ev/s "
+            f"({r['total_events']} events in {r['wall_s']:.3f}s), "
+            f"{r['speedup_vs_reference']:.2f}x vs recompute reference"
+        )
+    if args.check:
+        errors = check(result, args.check)
+        for e in errors:
+            print(f"LOOP-SMOKE FAIL: {e}", file=sys.stderr)
+        if errors:
+            sys.exit(1)
+        print(f"loop-smoke OK vs {args.check}")
+    else:
+        write_bench_json(args.out, result)
+        print(f"wrote {args.out}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,8 @@ analysis that stands in for device timing)."""
 
 from __future__ import annotations
 
+import os
+import statistics
 import time
 
 import jax
@@ -15,15 +17,25 @@ from repro.kernels.flash_attention.ops import mha
 from repro.kernels.mamba_scan.ops import ssd
 from repro.kernels.matmul.ref import matmul_ref
 
+#: Nightly runs crank this up; the default keeps CI fast.
+DEFAULT_ITERS = int(os.environ.get("REPRO_BENCH_ITERS", "5"))
 
-def _time(fn, *args, iters=5) -> float:
-    out = fn(*args)
-    out[0].block_until_ready() if isinstance(out, tuple) else jax.block_until_ready(out)
-    t0 = time.perf_counter()
+
+def _time(fn, *args, iters: int | None = None, warmup: int = 2) -> float:
+    """Median us/call over ``iters`` timed laps, after ``warmup`` untimed
+    laps of *this* function (each callsite compiles its own jit — a shared
+    warmup would leave later functions timing their first compile).  The
+    median is robust to the one-off scheduler hiccups a mean smears in."""
+    if iters is None:
+        iters = DEFAULT_ITERS
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    laps = []
     for _ in range(iters):
-        out = fn(*args)
-        jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        laps.append(time.perf_counter() - t0)
+    return statistics.median(laps) * 1e6
 
 
 def bench() -> list[tuple]:

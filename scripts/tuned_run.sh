@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Tuned-substrate launcher: run any repo command under the checked-in env
+# profile (tcmalloc preload, XLA host-device pinning, quiet TF, persistent
+# JAX compile cache).  The profile itself lives in src/repro/launch/env.py —
+# this wrapper only evals it, because LD_PRELOAD must be set before the
+# Python process starts.
+#
+# Usage:
+#   scripts/tuned_run.sh python -m benchmarks.bench_coord
+#   REPRO_DEVICES=8 scripts/tuned_run.sh python -m repro.launch.train --mode hdp
+set -euo pipefail
+
+REPO="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+export PYTHONPATH="${REPO}/src${PYTHONPATH:+:${PYTHONPATH}}"
+
+DEVICES_ARG=()
+if [[ -n "${REPRO_DEVICES:-}" ]]; then
+  DEVICES_ARG=(--devices "${REPRO_DEVICES}")
+fi
+
+eval "$(python3 -m repro.launch.env --export "${DEVICES_ARG[@]}")"
+
+exec "$@"

@@ -27,7 +27,7 @@ import math
 __all__ = ["PerfEntry", "PerfView", "GossipBus"]
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class PerfEntry:
     perf: float                # homogenized perf as last observed/gossiped
     stamp: float               # observation time (staleness ordering key)
@@ -47,12 +47,18 @@ class PerfView:
 
     def merge_from(self, other: "PerfView") -> int:
         """Staleness-aware merge: an entry crosses only if strictly newer.
-        Returns how many entries were refreshed."""
+        Returns how many entries were refreshed.
+
+        Refreshed entries are *shared* with the source view, not copied:
+        entries are replace-only (``update``/``merge_from`` always bind a new
+        ``PerfEntry``, never mutate one in place), so aliasing is safe and
+        keeps gossip ingest allocation-free on the heartbeat hot path."""
         fresh = 0
+        mine = self.entries
         for w, e in other.entries.items():
-            mine = self.entries.get(w)
-            if mine is None or e.stamp > mine.stamp:
-                self.entries[w] = PerfEntry(e.perf, e.stamp, e.alive)
+            m = mine.get(w)
+            if m is None or e.stamp > m.stamp:
+                mine[w] = e
                 fresh += 1
         return fresh
 
@@ -70,6 +76,28 @@ class PerfView:
         if now_s > e.stamp:
             p *= 0.5 ** ((now_s - e.stamp) / staleness_half_life_s)
         return p
+
+    def perf_floor_map(self, workers, now_s: float,
+                       staleness_half_life_s: float = 60.0,
+                       default: float = 1.0,
+                       floor: float = 0.0) -> dict[str, float]:
+        """Bulk ``perf_at`` with a floor, in one pass.  Bitwise-identical to
+        ``max(self.perf_at(w, now_s, half_life, default), floor)`` per
+        worker — the semantic reference for the runtime's fused
+        ``etas_under_view`` hot path, which inlines this decay per worker."""
+        out: dict[str, float] = {}
+        get = self.entries.get
+        for w in workers:
+            e = get(w)
+            if e is None:
+                p = default
+            else:
+                p = e.perf
+                stamp = e.stamp
+                if now_s > stamp:
+                    p *= 0.5 ** ((now_s - stamp) / staleness_half_life_s)
+            out[w] = p if p >= floor else floor
+        return out
 
     def staleness(self, worker: str, truth_stamp: float) -> float | None:
         """How far this view lags the owner's latest observation (None if the

@@ -153,6 +153,9 @@ class ShardedCoordinator(DispatchAuthority):
         self.takeovers = 0
         self.n_ckills = 0
         self._staleness: tuple[float, float] = (0.0, 0.0)   # (max, mean)
+        # shard -> live-worker list, rebuilt lazily; every membership change
+        # (join, worker kill, ckill takeover) clears it.
+        self._shard_cache: dict[int, list[str]] = {}
 
     # -- membership ----------------------------------------------------------
     def bind(self, runtime) -> None:
@@ -161,6 +164,7 @@ class ShardedCoordinator(DispatchAuthority):
             self.on_join(name)
 
     def on_join(self, name: str, ctx: JobContext | None = None) -> None:
+        self._shard_cache.clear()
         if name not in self.owner:
             self.owner[name] = rendezvous_shard(name, sorted(self.alive))
         now = getattr(self.runtime, "clock", 0.0)
@@ -171,6 +175,7 @@ class ShardedCoordinator(DispatchAuthority):
         self.bus.views[self.owner[name]].update(name, perf, now)
 
     def on_worker_kill(self, name: str, ctx: JobContext | None = None) -> None:
+        self._shard_cache.clear()
         shard = self.owner.get(name)
         if shard is not None:
             entry = self.bus.views[shard].entries.get(name)
@@ -178,14 +183,22 @@ class ShardedCoordinator(DispatchAuthority):
             self.bus.views[shard].update(name, _EPS, stamp, alive=False)
 
     def shard_workers(self, shard: int, ctx: JobContext) -> list[str]:
-        """The live workers shard ``shard`` currently has authority over."""
-        return [
-            w for w, s in self.owner.items()
-            if s == shard and w in self.runtime.workers and w not in ctx.dead
-        ]
+        """The live workers shard ``shard`` currently has authority over.
+        Cached per shard (membership changes clear it) — callers must not
+        mutate the returned list."""
+        ws = self._shard_cache.get(shard)
+        if ws is None or self.runtime.eta_mode == "recompute":
+            ws = [
+                w for w, s in self.owner.items()
+                if s == shard and w in self.runtime.workers
+                and w not in ctx.dead
+            ]
+            self._shard_cache[shard] = ws
+        return ws
 
     # -- lifecycle -----------------------------------------------------------
     def begin_job(self, ctx: JobContext) -> None:
+        self._shard_cache.clear()
         now = ctx.clock()
         for name in self.runtime.workers:
             if name not in self.owner:
@@ -211,6 +224,14 @@ class ShardedCoordinator(DispatchAuthority):
         self.bus.next_round_s = now + self.bus.period_s
 
     def advance(self, now_s: float, ctx: JobContext) -> None:
+        # Called before *every* event: bail without touching the bus unless a
+        # round is actually due (exact complement of GossipBus.advance's fire
+        # condition), so per-event cost is two float compares.  The reference
+        # recompute mode keeps the old always-snapshot behavior for honest
+        # before/after timing.
+        if (now_s + 1e-12 < self.bus.next_round_s
+                and self.runtime.eta_mode != "recompute"):
+            return
         before = dict(self.bus.messages_by_shard)
         if self.bus.advance(now_s, sorted(self.alive), self.groups):
             # Each message a shard actually handled costs it one event — a
@@ -262,20 +283,34 @@ class ShardedCoordinator(DispatchAuthority):
 
     # -- decisions -----------------------------------------------------------
     def rebalance(self, ctx: JobContext, worker: str | None = None) -> None:
-        shards = sorted(self.alive) if worker is None else [
-            self.owner.get(worker, next(iter(sorted(self.alive))))
-        ]
+        if worker is None:
+            shards = sorted(self.alive)
+        else:
+            s = self.owner.get(worker)
+            shards = (min(self.alive) if s is None else s,)
+        recompute = self.runtime.eta_mode == "recompute"
         for s in shards:
             if s not in self.alive:
                 continue
             live = self.shard_workers(s, ctx)
             if len(live) < 2:
                 continue
-            perf_of = self._perf_of(s, ctx)
+            if recompute:
+                # Reference path: per-worker view lookups through the
+                # closure chain, recomputed from scratch every event.
+                perf_of = self._perf_of(s, ctx)
+                self.runtime._rebalance_reference(
+                    live, {w: ctx.queues[w] for w in live},
+                    lambda w: ctx.eta_with(w, perf_of), ctx.cost_of,
+                    perf_of, ctx.res,
+                )
+                continue
+            est, etas = ctx.etas_under_view(
+                live, self.bus.views[s].entries.get,
+                self.runtime.tracker.staleness_half_life_s,
+            )
             self.runtime._rebalance(
-                live, {w: ctx.queues[w] for w in live},
-                lambda w: ctx.eta_with(w, perf_of), ctx.cost_of, perf_of,
-                ctx.res,
+                live, ctx.queues, ctx.cost_of, est, ctx.res, etas,
             )
 
     def steal_for(self, thief: str, ctx: JobContext) -> int:
@@ -386,6 +421,7 @@ class ShardedCoordinator(DispatchAuthority):
         adopted = [w for w, s in self.owner.items() if s == shard]
         for w in adopted:
             self.owner[w] = successor
+        self._shard_cache.clear()
         # The dead shard's private view dies with it; the successor governs
         # the adopted workers from its own (gossiped, possibly stale) view —
         # fresh heartbeats re-teach it within an EMA window.

@@ -139,6 +139,27 @@ class PerformanceTracker:
             p *= 0.5 ** (age / self.staleness_half_life_s)
         return p
 
+    def perf_map(self, workers: Iterable[str], now_s: float | None = None,
+                 floor: float = 0.0) -> dict[str, float]:
+        """Bulk ``perf`` lookups in one pass — the runtime's per-event ETA
+        hot path.  Unknown workers get ``floor``; known perfs are floored at
+        ``floor`` after staleness decay.  Bitwise-identical to
+        ``max(self.perf(w, now_s), floor)`` per worker (with KeyError mapping
+        to ``floor``)."""
+        out: dict[str, float] = {}
+        states = self._workers
+        hl = self.staleness_half_life_s
+        for w in workers:
+            st = states.get(w)
+            if st is None:
+                out[w] = floor
+                continue
+            p = st.perf
+            if now_s is not None and now_s > st.last_report_s:
+                p *= 0.5 ** ((now_s - st.last_report_s) / hl)
+            out[w] = p if p >= floor else floor
+        return out
+
     def last_report_s(self, worker: str) -> float | None:
         """When the worker last heartbeat (None if never seen) — the truth
         stamp gossiped perf views are measured against."""

@@ -50,6 +50,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import os
 from collections import deque
 from typing import Any, Callable
 
@@ -77,13 +78,61 @@ _COORD_KINDS = ("ckill", "partition", "heal")
 _WORKLOAD_KINDS = ("arrive", "mix")
 
 
+class _CostedQueue(deque):
+    """A grain queue that maintains its total cost incrementally: every
+    mutation folds the grain's cost in or out at O(1), so queue-drain ETAs
+    never re-sum the queue.  Used for non-uniform cost models (uniform-cost
+    queues read ``len(q) * uniform``, which is exact without tracking).
+
+    ``cost_of`` must be pure (same grain -> same cost) — the invariant the
+    whole ETA machinery already assumes.  The running total equals a fresh
+    in-order sum bitwise whenever per-grain costs add exactly (integers and
+    dyadic rationals — every in-repo cost model); arbitrary float costs can
+    drift by ulps from a fresh sum, which ``AsyncRuntime(eta_mode=
+    'recompute')`` exists to measure."""
+
+    __slots__ = ("cost", "cost_of")
+
+    def __init__(self, cost_of: Callable[[int], float], grains=()):
+        super().__init__()
+        self.cost = 0.0
+        self.cost_of = cost_of
+        if grains:
+            self.extend(grains)
+
+    def append(self, g):
+        deque.append(self, g)
+        self.cost += self.cost_of(g)
+
+    def appendleft(self, g):
+        deque.appendleft(self, g)
+        self.cost += self.cost_of(g)
+
+    def extend(self, grains):
+        for g in grains:
+            self.append(g)
+
+    def pop(self):
+        g = deque.pop(self)
+        self.cost -= self.cost_of(g)
+        return g
+
+    def popleft(self):
+        g = deque.popleft(self)
+        self.cost -= self.cost_of(g)
+        return g
+
+
 @dataclasses.dataclass
 class JobContext:
     """The per-job state a ``DispatchAuthority`` decides over: the live
     queues, the death set, the cost model and the ETA machinery.  ``eta_with``
     lets an authority compute finish-time predictions under *its own* perf
     view (a coordinator shard's gossiped table) instead of the runtime's
-    global tracker estimate."""
+    global tracker estimate; ``etas_under`` is its bulk form — one tight pass
+    over many workers given a precomputed perf map (the per-event hot path).
+    ``live`` is the runtime-maintained alive-worker list (insertion order,
+    updated on kill/join) — read it, never mutate it."""
 
     queues: dict[str, deque]
     dead: set[str]
@@ -94,6 +143,21 @@ class JobContext:
     eta_with: Callable[[str, Callable[[str], float]], float]
     clock: Callable[[], float]
     n_grains: int = 0
+    live: list[str] = dataclasses.field(default_factory=list)
+    # Bulk ETAs: etas_under(workers, perf_map) -> {worker: eta}; perf values
+    # must already be floored at _EPS (perf_map/authority maps are).
+    etas_under: Callable[[list[str], dict[str, float]], dict[str, float]] = None
+    # Bulk global-tracker perf estimates, floored at _EPS (== est_perf per
+    # worker, computed in one pass).
+    perf_map: Callable[[list[str]], dict[str, float]] = None
+    # Fused decay+ETA over a gossip view: etas_under_view(workers,
+    # entries.get, half_life) -> (est, etas), bitwise-identical to
+    # perf_floor_map followed by etas_under but in one lazy pass (est is a
+    # memoized per-worker decayed-perf accessor).
+    etas_under_view: Callable = None
+    new_queue: Callable[[], deque] = deque
+    # Runtime-internal: workers that may need a (re)start (see run()).
+    idle: set = dataclasses.field(default_factory=set)
 
 
 class DispatchAuthority:
@@ -144,9 +208,21 @@ class DispatchAuthority:
         ``worker`` hints which worker's completion triggered the call so a
         sharded authority can rebalance only the affected shard."""
         rt = self.runtime
-        live = [w for w in rt.workers if w not in ctx.dead]
-        rt._rebalance(live, ctx.queues, ctx.eta, ctx.cost_of, ctx.est_perf,
-                      ctx.res)
+        live = ctx.live
+        if len(live) < 2:
+            return
+        if rt.eta_mode == "recompute":
+            # Reference path: per-worker closure chain, recomputed from
+            # scratch (the pre-fast-path implementation, kept for bitwise
+            # A/B — see AsyncRuntime eta_mode).
+            rt._rebalance_reference(
+                live, ctx.queues, ctx.eta, ctx.cost_of, ctx.est_perf,
+                ctx.res)
+            return
+        pmap = ctx.perf_map(live)
+        etas = ctx.etas_under(live, pmap)
+        rt._rebalance(live, ctx.queues, ctx.cost_of, pmap.__getitem__,
+                      ctx.res, etas)
 
     def steal_for(self, thief: str, ctx: JobContext) -> int:
         return self.runtime._steal_into(
@@ -453,7 +529,7 @@ class RuntimeResult:
         return max(spans) / max(min(spans), _EPS)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class _Inflight:
     grain: int
     start_s: float
@@ -476,13 +552,25 @@ class AsyncRuntime:
         steal: bool = True,
         replan_threshold: float = 0.05,
         authority: DispatchAuthority | None = None,
+        eta_mode: str | None = None,
     ):
+        if eta_mode is None:
+            # Benchmark/debug override: lets harnesses A/B the reference
+            # recompute path through facades that don't expose the knob.
+            eta_mode = os.environ.get("REPRO_ETA_MODE", "incremental")
+        if eta_mode not in ("incremental", "recompute"):
+            raise ValueError("eta_mode must be 'incremental' or 'recompute'")
         self.tracker = tracker or PerformanceTracker(alpha=0.5)
         self.workers: dict[str, Any] = {}
         self.homogenize = homogenize
         self.rehomogenize = rehomogenize
         self.steal = steal
         self.replan_threshold = replan_threshold
+        # 'incremental' (default) maintains per-worker queue/in-flight cost
+        # totals at O(1) per mutation; 'recompute' re-sums queues on every ETA
+        # call — the pre-optimization reference path, kept for the bitwise
+        # property sweep (tests/test_eta_incremental.py) and A/B benching.
+        self.eta_mode = eta_mode
         self.clock = 0.0
         self.authority = authority or SingleCoordinator()
         self.authority.bind(self)
@@ -617,10 +705,17 @@ class AsyncRuntime:
             self.clock = now
             return res
 
-        if arrivals is not None:
-            queues = {w: deque() for w in self.workers}
+        track_cost = uniform is None and self.eta_mode == "incremental"
+        if track_cost:
+            def make_queue(grains=()):
+                return _CostedQueue(cost_of, grains)
         else:
-            queues = self._initial_queues(n_grains, now, initial_plan)
+            make_queue = deque
+        if arrivals is not None:
+            queues = {w: make_queue() for w in self.workers}
+        else:
+            queues = self._initial_queues(n_grains, now, initial_plan,
+                                          make_queue)
         backlog: deque[int] = deque()
         incremental = executor.incremental
         inflight: dict[str, _Inflight] = {}
@@ -642,14 +737,58 @@ class AsyncRuntime:
             for g, t in enumerate(arrivals.times):
                 heapq.heappush(heap, (now + t, 2, next(seq), g))
 
+        # Alive-worker list, maintained on kill/join instead of rebuilt per
+        # event; mirrors [w for w in self.workers if w not in dead] exactly
+        # (dict insertion order; kills remove, joins append).
+        live_list: list[str] = [w for w in self.workers if w not in dead]
+        # Workers that may need a (re)start: a superset of {live and not
+        # in-flight}, pruned on start/kill.  kick_idle iterates it in
+        # live-list order, so the sequence of *acting* start_next calls is
+        # identical to scanning every live worker (start_next is a no-op for
+        # busy/dead workers).  Modeled path only; incremental admit() has
+        # its own slot logic.
+        idle: set[str] = set(live_list)
+        # In-flight remaining-cost totals per worker (incremental executors).
+        # remaining_cost only changes through begin/tick/abort — the three
+        # sites that invalidate this cache — so cached sums stay exact.
+        icost_cache: dict[str, float] = {}
+        recompute = self.eta_mode == "recompute"
+
         def alive() -> list[str]:
-            return [w for w in self.workers if w not in dead]
+            if recompute:
+                # Reference: rebuild per call, as the pre-fast-path loop did.
+                return [w for w in self.workers if w not in dead]
+            return live_list
 
         def est_perf(w: str) -> float:
             try:
                 return max(self.tracker.perf(w, now), _EPS)
             except KeyError:
                 return _EPS
+
+        def inflight_cost(w: str) -> float:
+            """Total remaining work units in w's occupied slots (caller
+            guarantees islots[w] is non-empty)."""
+            if recompute:
+                sl = islots[w]
+                return sum(
+                    executor.remaining_cost(self.workers[w], g) for g in sl
+                )
+            c = icost_cache.get(w)
+            if c is None:
+                sl = islots[w]
+                c = sum(
+                    executor.remaining_cost(self.workers[w], g) for g in sl
+                )
+                icost_cache[w] = c
+            return c
+
+        def queue_cost(q) -> float:
+            if uniform is not None:
+                return len(q) * uniform
+            if recompute:
+                return sum(cost_of(g) for g in q)
+            return q.cost
 
         def eta_with(w: str, perf_of: Callable[[str], float]) -> float:
             """Predicted seconds until worker w's queue drains (from `now`)
@@ -658,27 +797,133 @@ class AsyncRuntime:
             one.  The scheduler never peeks at true perf."""
             p = max(perf_of(w), _EPS)
             if incremental:
-                sl = islots.get(w)
-                t = sum(
-                    executor.remaining_cost(self.workers[w], g) for g in sl
-                ) / p if sl else 0.0
+                t = inflight_cost(w) / p if islots.get(w) else 0.0
             else:
                 t = inflight[w].end_s - now if w in inflight else 0.0
             q = queues.get(w)
             if q:
-                qcost = len(q) * uniform if uniform is not None else sum(
-                    cost_of(g) for g in q
-                )
-                t += qcost / p
+                t += queue_cost(q) / p
             return t
 
         def eta(w: str) -> float:
             return eta_with(w, est_perf)
 
+        def etas_under(ws, pmap) -> dict[str, float]:
+            """Bulk ``eta_with``: one tight pass over ``ws`` given perf
+            estimates already floored at _EPS.  Bitwise-identical to calling
+            eta_with per worker — this is the per-event hot path, specialized
+            per mode so the inner loop carries no per-worker branching."""
+            out = {}
+            if incremental:
+                for w in ws:
+                    p = pmap[w]
+                    t = inflight_cost(w) / p if islots.get(w) else 0.0
+                    q = queues.get(w)
+                    if q:
+                        t += queue_cost(q) / p
+                    out[w] = t
+            elif uniform is not None:
+                fl_get = inflight.get
+                for w in ws:
+                    fl = fl_get(w)
+                    t = fl.end_s - now if fl is not None else 0.0
+                    q = queues[w]
+                    if q:
+                        t += len(q) * uniform / pmap[w]
+                    out[w] = t
+            else:
+                fl_get = inflight.get
+                for w in ws:
+                    fl = fl_get(w)
+                    t = fl.end_s - now if fl is not None else 0.0
+                    q = queues[w]
+                    if q:
+                        t += queue_cost(q) / pmap[w]
+                    out[w] = t
+            return out
+
+        def perf_map(ws) -> dict[str, float]:
+            return self.tracker.perf_map(ws, now, floor=_EPS)
+
+        def etas_under_view(ws, entries_get, half_life):
+            """Fused gossip-view decay + bulk ETA: one pass per worker
+            computing the ETA under the view's floored, staleness-decayed
+            perf (bitwise-identical to ``PerfView.perf_floor_map`` followed
+            by ``etas_under``) — the sharded authority's per-event hot path.
+            The decay is evaluated lazily: a worker with nothing queued and
+            nothing in flight has ETA 0.0 under *any* perf, so its decay
+            never runs.  Returns ``(est, etas)`` where ``est(w)`` yields the
+            decayed perf on demand (memoized; for the rebalance move loop)."""
+            pmap: dict[str, float] = {}
+            etas: dict[str, float] = {}
+
+            def est(w: str) -> float:
+                p = pmap.get(w)
+                if p is None:
+                    e = entries_get(w)
+                    if e is None:
+                        p = 1.0
+                    else:
+                        p = e.perf
+                        stamp = e.stamp
+                        if now > stamp:
+                            p *= 0.5 ** ((now - stamp) / half_life)
+                    p = p if p >= _EPS else _EPS
+                    pmap[w] = p
+                return p
+
+            if incremental:
+                for w in ws:
+                    sl = islots.get(w)
+                    q = queues.get(w)
+                    if sl or q:
+                        e = entries_get(w)
+                        if e is None:
+                            p = 1.0
+                        else:
+                            p = e.perf
+                            stamp = e.stamp
+                            if now > stamp:
+                                p *= 0.5 ** ((now - stamp) / half_life)
+                        p = p if p >= _EPS else _EPS
+                        pmap[w] = p
+                        t = inflight_cost(w) / p if sl else 0.0
+                        if q:
+                            t += queue_cost(q) / p
+                    else:
+                        t = 0.0
+                    etas[w] = t
+            else:
+                fl_get = inflight.get
+                for w in ws:
+                    fl = fl_get(w)
+                    t = fl.end_s - now if fl is not None else 0.0
+                    q = queues[w]
+                    if q:
+                        e = entries_get(w)
+                        if e is None:
+                            p = 1.0
+                        else:
+                            p = e.perf
+                            stamp = e.stamp
+                            if now > stamp:
+                                p *= 0.5 ** ((now - stamp) / half_life)
+                        p = p if p >= _EPS else _EPS
+                        pmap[w] = p
+                        if uniform is not None:
+                            t += len(q) * uniform / p
+                        else:
+                            t += queue_cost(q) / p
+                    etas[w] = t
+            return est, etas
+
         ctx = JobContext(
             queues=queues, dead=dead, res=res, cost_of=cost_of,
             est_perf=est_perf, eta=eta, eta_with=eta_with,
             clock=lambda: now, n_grains=n_grains,
+            live=live_list, etas_under=etas_under, perf_map=perf_map,
+            etas_under_view=etas_under_view,
+            new_queue=make_queue, idle=idle,
         )
         self.authority.begin_job(ctx)
 
@@ -688,6 +933,7 @@ class AsyncRuntime:
             grains.  Returns the orphaned grain ids in admission order."""
             if incremental:
                 sl = islots.pop(w, {})
+                icost_cache.pop(w, None)
                 gs = sorted(sl, key=sl.get)
                 for g in gs:
                     executor.abort(self.workers[w], g)
@@ -711,6 +957,7 @@ class AsyncRuntime:
             c = cost_of(g)
             d = max(dur_of(self.workers[w], c, now), _EPS)
             inflight[w] = _Inflight(g, now, now + d, c)
+            idle.discard(w)
             heapq.heappush(heap, (now + d, 1, next(seq), w))
 
         def admit(w: str) -> None:
@@ -730,6 +977,7 @@ class AsyncRuntime:
                 g = q.popleft()
                 executor.begin(worker, g, now)
                 sl[g] = now
+                icost_cache.pop(w, None)
                 free -= 1
             if sl and w not in ticks:
                 d = max(executor.tick_s(worker, now), _EPS)
@@ -741,18 +989,34 @@ class AsyncRuntime:
             with the earliest predicted drain time among those with queue
             room, or None when every live queue is at max_queue_depth."""
             room = [
-                w for w in alive()
+                w for w in (alive() if recompute else live_list)
                 if max_queue_depth is None or len(queues[w]) < max_queue_depth
             ]
             if not room:
                 return None
-            w = min(room, key=eta)
+            if recompute:
+                w = min(room, key=eta)   # reference: per-worker closure chain
+            else:
+                em = etas_under(room, perf_map(room))
+                w = min(room, key=em.__getitem__)
             queues[w].append(g)
             return w
 
         def kick_idle() -> None:
-            for w in alive():
-                start_next(w)
+            if incremental:
+                for w in list(live_list):
+                    admit(w)
+            elif recompute:
+                # Reference: scan every live worker (start_next no-ops on
+                # busy ones) instead of consulting the idle set.
+                for w in alive():
+                    start_next(w)
+            elif len(idle) == 1:
+                start_next(next(iter(idle)))
+            elif idle:
+                # live-list order, same as scanning every live worker.
+                for w in sorted(idle, key=live_list.index):
+                    start_next(w)
             while backlog:
                 w = admit_arrival(backlog[0])
                 if w is None:
@@ -813,6 +1077,7 @@ class AsyncRuntime:
                 self.authority.count_event(w, "tick", ctx)
                 worker = self.workers[w]
                 finished = executor.tick(worker, now)
+                icost_cache.pop(w, None)
                 sl = islots.get(w, {})
                 res.worker_busy[w] = res.worker_busy.get(w, 0.0) + tk[1]
                 for g, val in finished:
@@ -840,6 +1105,7 @@ class AsyncRuntime:
             if fl is None or w in dead or abs(fl.end_s - now) > 1e-9:
                 continue  # stale event (worker died or grain was aborted)
             del inflight[w]
+            idle.add(w)
             self.authority.count_event(w, "completion", ctx)
             dur = now - fl.start_s
             res.records.append(GrainRecord(fl.grain, w, fl.start_s, now, fl.cost))
@@ -897,7 +1163,8 @@ class AsyncRuntime:
 
     # -- internals ---------------------------------------------------------
     def _initial_queues(
-        self, n_grains: int, now: float, plan: GrainPlan | None
+        self, n_grains: int, now: float, plan: GrainPlan | None,
+        make_queue: Callable[[], deque] = deque,
     ) -> dict[str, deque[int]]:
         if plan is None:
             plan = self.plan(n_grains, now_s=now)
@@ -908,7 +1175,7 @@ class AsyncRuntime:
         unknown = set(plan.workers) - set(self.workers)
         if unknown:
             raise ValueError(f"plan names unknown workers {sorted(unknown)}")
-        queues = {w: deque() for w in self.workers}
+        queues = {w: make_queue() for w in self.workers}
         start = 0
         for w, share in zip(plan.workers, plan.shares, strict=True):
             queues[w].extend(range(start, start + share))
@@ -937,13 +1204,69 @@ class AsyncRuntime:
         res.n_migrated += take
         return take
 
-    def _rebalance(self, live, queues, eta, cost_of, est_perf, res):
+    def _rebalance(self, live, queues, cost_of, est_perf, res, etas):
         """Hysteresis-gated migration of unstarted grains from the
         latest-finishing worker to the earliest-finishing one.  Each move must
         strictly reduce the fleet's max predicted finish time, so the loop
         terminates and never thrashes.  ``live``/``queues`` scope the
         decision: the whole fleet for the single coordinator, one shard's
-        workers for a sharded one."""
+        workers for a sharded one.  ``etas`` is the caller's bulk-computed
+        finish-time prediction per live worker (``JobContext.etas_under``)."""
+        if len(live) < 2:
+            return
+        # Inline should_replan(etas.values(), threshold): the hysteresis
+        # spread gate, sans list copy — this runs on every completion.
+        vals = etas.values()
+        if not max(vals) > min(vals) * (1.0 + self.replan_threshold) + 1e-12:
+            return
+        moved = 0
+        # Move budget (total queued grains + 1) guarantees termination; it is
+        # computed lazily at the first actual move since most calls pass the
+        # hysteresis gate yet move nothing.
+        budget = None
+        while True:
+            # Fused argmax-over-donors / argmin-over-live pass.  Strict
+            # comparisons keep the first-occurrence tie-breaks of
+            # max(donors, key=...) / min(live, key=...) — bitwise-identical
+            # selection, one scan instead of three.
+            hi = lo = None
+            hi_e = lo_e = 0.0
+            for w in live:
+                e = etas[w]
+                if queues[w] and (hi is None or e > hi_e):
+                    hi, hi_e = w, e
+                if lo is None or e < lo_e:
+                    lo, lo_e = w, e
+            if hi is None:
+                break  # no donors
+            if hi == lo:
+                break
+            g = queues[hi][-1]
+            c = cost_of(g)
+            new_lo = lo_e + c / est_perf(lo)
+            if new_lo >= hi_e - _EPS:
+                break  # no strict improvement left
+            if budget is None:
+                budget = sum(len(queues[w]) for w in live) + 1
+            if moved >= budget:
+                break
+            queues[hi].pop()
+            queues[lo].append(g)
+            etas[hi] = hi_e - c / est_perf(hi)
+            etas[lo] = new_lo
+            moved += 1
+        if moved:
+            res.n_replans += 1
+            res.n_migrated += moved
+
+    def _rebalance_reference(self, live, queues, eta, cost_of, est_perf, res):
+        """The pre-fast-path ``_rebalance``, kept verbatim as the
+        ``eta_mode='recompute'`` reference: per-worker ``eta`` closure calls,
+        ``should_replan`` on a list copy, eager move budget, and
+        rebuilt-per-iteration donor scans with key lambdas.  Decision-
+        equivalent to ``_rebalance`` (the property sweep asserts bitwise-
+        identical RunReports); kept so before/after loop timings compare the
+        real historical hot path, not a strawman."""
         if len(live) < 2:
             return
         etas = {w: eta(w) for w in live}
@@ -997,7 +1320,10 @@ class AsyncRuntime:
             self._register(worker, now_s=now,
                            perf_prior=ev.perf or getattr(worker, "perf", 1.0))
             dead.discard(worker.name)
-            queues.setdefault(worker.name, deque())
+            queues.setdefault(worker.name, ctx.new_queue())
+            if worker.name not in ctx.live:
+                ctx.live.append(worker.name)
+            ctx.idle.add(worker.name)
             return
         # kill
         name = ev.worker
@@ -1013,8 +1339,11 @@ class AsyncRuntime:
         self.workers.pop(name)
         self.tracker.mark_dead(name)
         self.authority.on_worker_kill(name, ctx)
-        queues[name] = deque()
-        live = [w for w in self.workers if w not in dead]
+        queues[name] = ctx.new_queue()
+        if name in ctx.live:
+            ctx.live.remove(name)
+        ctx.idle.discard(name)
+        live = ctx.live
         if not live and orphans:
             raise RuntimeError("all workers dead with grains pending")
         if orphans:

@@ -5,8 +5,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..autotune import lookup
 from .flash_attention import flash_attention as _flash_call
 from .ref import attention_ref
+
+_DEFAULT_BLOCKS = {"block_q": 512, "block_k": 512}
 
 
 def mha(
@@ -15,12 +18,14 @@ def mha(
     v: jax.Array,  # (B, Skv, Hkv, D)
     *,
     causal: bool = True,
-    block_q: int = 512,
-    block_k: int = 512,
+    block_q: int | None = None,
+    block_k: int | None = None,
     use_pallas: bool | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Multi-head attention with GQA (Hkv divides Hq).  Returns (B, Sq, Hq, D)."""
+    """Multi-head attention with GQA (Hkv divides Hq).  Returns (B, Sq, Hq, D).
+    Block sizes default to the autotune registry's winner for this shape
+    bucket (``kernels/autotune.py``), falling back to 512/512."""
     b, sq, hq, d = q.shape
     _, skv, hkv, _ = k.shape
     if hq % hkv:
@@ -44,6 +49,11 @@ def mha(
     else:
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
+        if block_q is None or block_k is None:
+            tuned = {**_DEFAULT_BLOCKS,
+                     **lookup("mha", {"sq": sq, "skv": skv, "d": d})}
+            block_q = block_q if block_q is not None else tuned["block_q"]
+            block_k = block_k if block_k is not None else tuned["block_k"]
         bq = min(block_q, sq)
         bk = min(block_k, skv)
         while sq % bq:

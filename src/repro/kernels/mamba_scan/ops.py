@@ -13,8 +13,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..autotune import lookup
 from .mamba_scan import ssd_scan as _ssd_kernel_call
 from .ref import ssd_scan_ref
+
+_DEFAULT_CHUNK = 128
 
 
 def ssd_chunked_jnp(
@@ -150,15 +153,20 @@ def ssd(
     c: jax.Array,       # (B, S, G, N)
     d: jax.Array | None = None,   # (H,) skip connection
     *,
-    chunk: int = 128,
+    chunk: int | None = None,
     use_pallas: bool | None = None,
     interpret: bool | None = None,
     h0: jax.Array | None = None,   # (B, H, P, N)
     unroll: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
-    """Mamba-2 SSD layer core.  Returns (y (B,S,H,P), state (B,H,P,N))."""
+    """Mamba-2 SSD layer core.  Returns (y (B,S,H,P), state (B,H,P,N)).
+    ``chunk=None`` takes the autotune registry's winner for this shape bucket
+    (``kernels/autotune.py``), falling back to 128."""
     bsz, s, h, p = x.shape
     g, n = b.shape[2], b.shape[3]
+    if chunk is None:
+        chunk = lookup("ssd", {"s": s, "p": p, "n": n}).get(
+            "chunk", _DEFAULT_CHUNK)
     if h % g:
         raise ValueError(f"n_groups {g} must divide heads {h}")
     rep = h // g

@@ -5,8 +5,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..autotune import lookup
 from .matmul import matmul as _matmul_kernel_call
 from .ref import matmul_ref
+
+_DEFAULT_BLOCKS = {"block_m": 256, "block_n": 256, "block_k": 512}
 
 
 def _round_up(x: int, mult: int) -> int:
@@ -17,14 +20,16 @@ def matmul(
     x: jax.Array,
     y: jax.Array,
     *,
-    block_m: int = 256,
-    block_n: int = 256,
-    block_k: int = 512,
+    block_m: int | None = None,
+    block_n: int | None = None,
+    block_k: int | None = None,
     use_pallas: bool | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """x @ y.  ``use_pallas=None`` auto-selects the kernel on TPU backends and
-    the jnp oracle elsewhere (tests force the kernel with interpret=True)."""
+    the jnp oracle elsewhere (tests force the kernel with interpret=True).
+    Block sizes default to the autotune registry's winner for this shape
+    bucket (``kernels/autotune.py``), falling back to 256/256/512."""
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
     if not use_pallas:
@@ -33,6 +38,12 @@ def matmul(
         interpret = jax.default_backend() != "tpu"
     m, k = x.shape
     _, n = y.shape
+    if block_m is None or block_n is None or block_k is None:
+        tuned = {**_DEFAULT_BLOCKS,
+                 **lookup("matmul", {"m": m, "k": k, "n": n})}
+        block_m = block_m if block_m is not None else tuned["block_m"]
+        block_n = block_n if block_n is not None else tuned["block_n"]
+        block_k = block_k if block_k is not None else tuned["block_k"]
     bm, bn, bk = (min(block_m, _round_up(m, 8)),
                   min(block_n, _round_up(n, 128)),
                   min(block_k, _round_up(k, 128)))

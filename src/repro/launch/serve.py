@@ -27,6 +27,7 @@ backlog (``--overflow``), the report gains p50/p99 TTFT and goodput under
 from __future__ import annotations
 
 import argparse
+import os
 
 import jax
 import numpy as np
@@ -125,7 +126,14 @@ def main() -> None:
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the run's headline metrics (throughput, "
                          "p50/p99 TTFT, shed rate, joined replicas) as JSON")
+    ap.add_argument("--tuned", action="store_true",
+                    help="apply the tuned-substrate env profile "
+                         "(launch/env.py; LD_PRELOAD needs "
+                         "scripts/tuned_run.sh)")
     args = ap.parse_args()
+    if args.tuned or os.environ.get("REPRO_TUNED") == "1":
+        from .env import apply as _apply_tuned
+        _apply_tuned()
 
     cfg = get_config(args.arch, reduced=True)
     if cfg.input_mode == "embeds" or cfg.is_enc_dec:

@@ -23,6 +23,7 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import os
 
 from ..cluster import Cluster, FleetSpec, Scenario, TrainJob
 from ..configs import ARCH_IDS, get_config
@@ -59,7 +60,14 @@ def main() -> None:
     ap.add_argument("--ckpt", default=None)
     ap.add_argument("--peak-lr", type=float, default=1e-3)
     ap.add_argument("--compress-grads", action="store_true")
+    ap.add_argument("--tuned", action="store_true",
+                    help="apply the tuned-substrate env profile "
+                         "(launch/env.py; LD_PRELOAD needs "
+                         "scripts/tuned_run.sh)")
     args = ap.parse_args()
+    if args.tuned or os.environ.get("REPRO_TUNED") == "1":
+        from .env import apply as _apply_tuned
+        _apply_tuned()
 
     cfg = get_config(args.arch, reduced=not args.full_config)
     model = Model(cfg)

@@ -1,0 +1,138 @@
+"""Property sweep: the incremental-ETA fast path is bitwise-identical to the
+retained recompute reference across random fleets x scenarios.
+
+The raw-speed pass (incrementally maintained queue-cost totals, cached alive
+lists, bulk perf/ETA passes, fused rebalance scans) promises *bitwise equal*
+dispatch decisions, not approximately-equal ones — grain->worker assignment,
+simulated times and homogenization quality must not move by an ulp.  These
+tests run the same randomized job through ``eta_mode='incremental'`` and
+``eta_mode='recompute'`` (the pre-optimization implementation, kept verbatim
+— see ``AsyncRuntime._rebalance_reference``) and compare full result
+fingerprints.
+
+Grain costs are drawn from dyadic values (0.25/0.5/1/2/4) so running queue
+totals are exact float sums in any association order — the regime where the
+bitwise claim is unconditional (the ``_CostedQueue`` docstring covers the
+arbitrary-float caveat).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.cluster import Cluster, CoordSpec as ClusterCoordSpec, FleetSpec, Scenario, SimJob
+from repro.coord import CoordSpec, ShardedCoordinator
+from repro.core import (
+    AsyncRuntime, PerformanceTracker, PerfReport, SimWorker, TimelineEvent,
+)
+
+DYADIC_COSTS = (0.25, 0.5, 1.0, 2.0, 4.0)
+DYADIC_PERFS = (0.5, 1.0, 1.5, 2.0, 4.0)
+
+
+def _fingerprint(res) -> tuple:
+    """Everything a RunReport is built from, exact (no rounding)."""
+    return (
+        res.makespan,
+        res.end_s,
+        tuple(sorted(res.executed_by.items())),
+        tuple((r.grain, r.worker, r.start_s, r.end_s, r.cost)
+              for r in res.records),
+        res.n_replans,
+        res.n_migrated,
+        res.n_steals,
+        tuple(sorted(res.worker_finish.items())),
+        tuple(sorted(res.worker_busy.items())),
+    )
+
+
+def _random_job(seed: int, eta_mode: str):
+    """One randomized fleet + timeline + (maybe) open-loop arrivals, run to
+    completion under the given eta_mode."""
+    rng = np.random.default_rng(seed)
+    n_workers = int(rng.integers(3, 9))
+    n_grains = int(rng.integers(40, 160))
+    k = int(rng.choice([1, 2, 3]))
+    perfs = rng.choice(DYADIC_PERFS, size=n_workers)
+    workers = [SimWorker(f"w{i}", float(p)) for i, p in enumerate(perfs)]
+    tracker = PerformanceTracker(alpha=0.5, dead_after_s=1e18)
+    for w in workers:
+        tracker.observe(PerfReport(w.name, w.perf, 1.0, 0.0))
+    authority = ShardedCoordinator(CoordSpec(k)) if k > 1 else None
+    rt = AsyncRuntime(workers, tracker=tracker, authority=authority,
+                      eta_mode=eta_mode)
+
+    costs = rng.choice(DYADIC_COSTS, size=n_grains)
+    uniform = bool(rng.integers(0, 2))
+    cost_of = 1.0 if uniform else (lambda g: float(costs[g]))
+
+    # Scripted faults: a perf halving always; a kill + a later join half the
+    # time (never killing the whole fleet).
+    events = [TimelineEvent(3.0, "perf", "w0", float(perfs[0]) / 2)]
+    if n_workers > 3 and rng.integers(0, 2):
+        events.append(TimelineEvent(5.0, "kill", f"w{n_workers - 1}"))
+        events.append(
+            TimelineEvent(9.0, "join", SimWorker("wj", 2.0), 2.0))
+    if k > 1 and rng.integers(0, 2):
+        events.append(TimelineEvent(4.0, "ckill", 0))
+
+    arrivals = None
+    max_depth = None
+    if rng.integers(0, 2):
+        arrivals = np.sort(rng.exponential(0.4, size=n_grains)).tolist()
+        if rng.integers(0, 2):
+            max_depth = int(rng.integers(2, 6))
+    res = rt.run(
+        n_grains, grain_cost=cost_of, timeline=tuple(events),
+        arrivals=arrivals, max_queue_depth=max_depth,
+    )
+    return res
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_incremental_bitwise_identical_random_jobs(seed):
+    a = _random_job(seed, "incremental")
+    b = _random_job(seed, "recompute")
+    assert _fingerprint(a) == _fingerprint(b)
+
+
+@pytest.mark.parametrize("seed", [101, 202])
+def test_incremental_bitwise_identical_multi_job_runtime(seed):
+    """Back-to-back jobs on one runtime (carried clock, learned perfs) stay
+    bitwise identical across modes — the regime bench_coord pins."""
+    def run(eta_mode):
+        rng = np.random.default_rng(seed)
+        perfs = rng.choice(DYADIC_PERFS, size=6)
+        workers = [SimWorker(f"w{i}", float(p)) for i, p in enumerate(perfs)]
+        tracker = PerformanceTracker(alpha=0.5, dead_after_s=1e18)
+        for w in workers:
+            tracker.observe(PerfReport(w.name, w.perf, 1.0, 0.0))
+        rt = AsyncRuntime(workers, tracker=tracker,
+                          authority=ShardedCoordinator(CoordSpec(2)),
+                          eta_mode=eta_mode)
+        prints = []
+        for j in range(3):
+            res = rt.run(64, timeline=(
+                TimelineEvent(2.0, "perf", "w1", 0.5),
+            ), timeline_relative=True)
+            prints.append(_fingerprint(res))
+        return tuple(prints)
+
+    assert run("incremental") == run("recompute")
+
+
+@pytest.mark.parametrize("k", [1, 2])
+def test_cluster_report_identical_across_modes(k, monkeypatch):
+    """Facade-level: a Cluster simulation's RunReport quality and sim time
+    match bitwise across modes (the env-var knob the benches use)."""
+    def report(mode):
+        monkeypatch.setenv("REPRO_ETA_MODE", mode)
+        fleet = FleetSpec.parse("2,1.5,1,0.5,2,1").with_coordinators(k)
+        cluster = Cluster(fleet, priors="spec",
+                          coord=ClusterCoordSpec(coordinators=k))
+        rep = cluster.simulate(SimJob(size=256, n_jobs=2),
+                               scenario=Scenario.parse("halve:w0@25%"))
+        return rep.homogenization_quality(), rep.sim_time_s
+
+    assert report("incremental") == report("recompute")
