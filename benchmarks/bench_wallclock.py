@@ -1,0 +1,148 @@
+"""Sim-predicted vs wallclock-measured speedup on the same fleet + scenario.
+
+The wall-clock backend's whole claim is that the simulator's Eq. 6 prediction
+is not just self-consistent but *physical*: run the same granulized job as
+real chained JAX computations on host-platform devices and the measured
+homogenization speedup should land where the model said it would.  This bench
+makes that claim a recorded artifact:
+
+  - ``steady``  the canonical heterogeneous fleet runs a SimJob with no
+    faults.  ``sim_predicted`` is Eq. 6 through ``Cluster(priors='spec')``;
+    ``wallclock_measured`` is the same job on ``backend='wallclock'``, where
+    the facade computes T_standalone / T_fleet from *measured* grain wall
+    times (T_standalone from the backend's calibrated unit time).
+  - ``halving`` the same comparison with ``halve:<w0>@50%`` scripted
+    mid-job — the fault really slows the device work, so the measured
+    speedup must track the sim-measured (logical-clock) speedup, both
+    below the no-fault prediction.
+
+Each entry reports ``rel_err = |measured - predicted| / predicted`` and the
+bench asserts nothing itself — ``tests/test_wallclock.py`` (slow tier) runs
+this module and asserts every ``rel_err`` is within ``agreement_band``.
+The band is wide (0.35) on purpose: per-launch dispatch overhead amortizes
+differently across chain lengths (k=3 on the fast worker vs k=12 on the slow
+one), which compresses measured heterogeneity on small operands; what the
+band guards is "the measurement is the prediction's order and direction",
+not microsecond agreement.
+
+Output: ``BENCH_wallclock.json`` (backend-stamped via ``write_bench_json``).
+
+Run:   PYTHONPATH=src python -m benchmarks.bench_wallclock
+Toy:   PYTHONPATH=src python -m benchmarks.bench_wallclock --grains 48
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+DEFAULT_FLEET = "4:3:2:1"
+DEFAULT_BAND = 0.35
+
+
+def _pin_devices(n: int) -> None:
+    """Pin N host-platform devices; must run before jax initializes."""
+    import os
+
+    flag = f"--xla_force_host_platform_device_count={n}"
+    existing = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in existing:
+        os.environ["XLA_FLAGS"] = f"{existing} {flag}".strip()
+
+
+def run_case(label: str, fleet, scenario, *, n_grains: int) -> dict:
+    """One sim-predicted vs wallclock-measured pair on identical inputs."""
+    from repro.cluster import Cluster, SimJob
+
+    job = SimJob(size=n_grains)
+    # default_profile="local": the sim prediction with negligible modeled
+    # distribution overhead — the wallclock path pre-commits operands to
+    # devices before the job, so it pays no distribution cost either, and
+    # the comparable quantity is the compute-only Eq. 6 speedup.
+    sim = Cluster(fleet, priors="spec", default_profile="local").simulate(
+        job, scenario=scenario)
+
+    wall0 = time.perf_counter()
+    wc = Cluster(fleet, priors="spec", backend="wallclock").simulate(
+        job, scenario=scenario)
+    wall_s = time.perf_counter() - wall0
+
+    pred = sim.predicted_speedup
+    meas = wc.measured_speedup
+    return {
+        "label": label,
+        "scenario": str(scenario) if scenario else "",
+        "n_grains": n_grains,
+        "sim_predicted": pred,
+        "sim_measured": sim.measured_speedup,
+        "wallclock_measured": meas,
+        "wallclock_predicted": wc.predicted_speedup,
+        "rel_err": abs(meas - pred) / max(pred, 1e-12),
+        "wallclock_stats": wc.metrics.get("wallclock", ""),
+        "backend": wc.backend,
+        "sim_time_s": {"sim": sim.sim_time_s, "wallclock": wc.sim_time_s},
+        "bench_wall_s": wall_s,
+    }
+
+
+def run_bench(n_grains: int, fleet: str = DEFAULT_FLEET,
+              band: float = DEFAULT_BAND) -> dict:
+    from repro.cluster import FleetSpec
+
+    spec = FleetSpec.parse(fleet, prefix="w")
+    cases = {
+        "steady": run_case("steady", spec, None, n_grains=n_grains),
+        "halving": run_case(
+            "halving", spec, f"halve:{spec.names[0]}@50%",
+            n_grains=n_grains),
+    }
+    return {
+        "config": {
+            "fleet": str(spec), "perfs": list(spec.perfs),
+            "n_grains": n_grains, "agreement_band": band,
+        },
+        "cases": cases,
+        "agree": all(c["rel_err"] <= band for c in cases.values()),
+    }
+
+
+def main(argv: list[str] | None = None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--grains", type=int, default=96)
+    ap.add_argument("--fleet", default=DEFAULT_FLEET,
+                    help="FleetSpec grammar (colon-separated worker perfs)")
+    ap.add_argument("--band", type=float, default=DEFAULT_BAND,
+                    help="relative sim-vs-wallclock agreement band "
+                         "recorded in the artifact (asserted by the "
+                         "slow-tier test, not here)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="host-platform device count to pin (default: one "
+                         "per fleet worker)")
+    ap.add_argument("--out", default="BENCH_wallclock.json")
+    args = ap.parse_args(argv)
+
+    # Device pinning must precede the first jax import, so resolve the
+    # fleet size with a lazy repro import *after* pinning is impossible —
+    # parse the fleet string locally instead (colon/comma count is enough).
+    n_workers = len([s for s in args.fleet.replace(",", ":").split(":")
+                     if s.strip()])
+    _pin_devices(args.devices if args.devices is not None else n_workers)
+
+    from benchmarks.run import write_bench_json
+
+    result = run_bench(args.grains, fleet=args.fleet, band=args.band)
+    stamped = write_bench_json(
+        args.out, result,
+        backend=result["cases"]["steady"]["backend"])
+    for name, c in result["cases"].items():
+        print(f"{name:8s} [{c['scenario'] or 'no fault'}] "
+              f"sim predicted {c['sim_predicted']:.2f}x vs wallclock "
+              f"measured {c['wallclock_measured']:.2f}x "
+              f"(rel_err {c['rel_err']:.1%}, band {args.band:.0%}) "
+              f"[{c['wallclock_stats']}]")
+    print(f"agree={result['agree']}  wrote {args.out}")
+    return stamped
+
+
+if __name__ == "__main__":
+    main()

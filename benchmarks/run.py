@@ -60,11 +60,15 @@ def provenance() -> dict:
     }
 
 
-def write_bench_json(path: str, payload: dict) -> dict:
+def write_bench_json(path: str, payload: dict, *,
+                     backend: str = "sim") -> dict:
     """Write a ``BENCH_*.json`` artifact with the provenance block attached.
-    Returns the stamped payload."""
+    ``backend`` records which execution backend produced the numbers (the
+    ``RunReport.backend`` label: ``"sim"``, ``"wallclock[4d]"``, ...), so a
+    measured artifact is never mistaken for a modeled one.  Returns the
+    stamped payload."""
     stamped = dict(payload)
-    stamped["provenance"] = provenance()
+    stamped["provenance"] = dict(provenance(), backend=backend)
     with open(path, "w") as f:
         json.dump(stamped, f, indent=2)
         f.write("\n")

@@ -16,7 +16,10 @@ from .profiles import (
     PROFILES,
     BackendProfile,
     get_profile,
+    load_profiles,
+    refit_profile,
     register_profile,
+    save_profiles,
     select_profile,
 )
 from .report import PhaseStats, RunReport, WorkerTimeline
@@ -47,6 +50,9 @@ __all__ = [
     "get_profile",
     "register_profile",
     "select_profile",
+    "refit_profile",
+    "save_profiles",
+    "load_profiles",
     "RunReport",
     "PhaseStats",
     "WorkerTimeline",

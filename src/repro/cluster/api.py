@@ -23,6 +23,17 @@ Construction knobs (all fleet-wide):
   ``priors``      'neutral' (tracker learns perfs from heartbeats — the
                   closed-loop story) or 'spec' (the declared perfs are oracle
                   priors — isolates mid-run fault response, as benchmarks do),
+  ``backend``     where grain durations come from: 'sim' (default — logical
+                  clock over modeled costs, bitwise-stable and instant) or
+                  'wallclock' (each grain runs as a real async JAX
+                  computation on a host-platform device; durations, busy
+                  times and heartbeats are *measured* wall seconds — the
+                  paper's claim checked on real execution).  An
+                  ``ExecutionBackend`` instance plugs in a custom one,
+  ``eta_mode``    queue-ETA bookkeeping: 'incremental' (O(1) maintained
+                  totals, default) or 'recompute' (re-sum queues per ETA
+                  call — the pre-optimization reference path, for bitwise
+                  A/B checks).  None defers to ``REPRO_ETA_MODE``/default,
   ``coord``       the coordination plane: a ``coord.CoordSpec`` (or a bare K)
                   shards dispatch across K coordinator replicas with gossiped
                   perf views; defaults to the fleet's ``/cK`` declaration
@@ -44,9 +55,9 @@ from typing import Any, Callable, Mapping, Sequence
 import numpy as np
 
 from ..coord import CoordSpec, ShardedCoordinator
-from ..core.homogenization import predicted_speedup, scope_lengths
+from ..core.homogenization import OverheadModel, predicted_speedup, scope_lengths
 from ..core.performance import PerformanceTracker
-from ..core.runtime import AsyncRuntime, SimWorker
+from ..core.runtime import AsyncRuntime, ExecutionBackend, SimBackend, SimWorker
 from ..core.simulate import ClusterSim
 from .profiles import DEFAULT_PROFILE, select_profile
 from .report import PhaseStats, RunReport, merge_worker_timelines
@@ -139,6 +150,8 @@ class Cluster:
         seed: int = 0,
         name_prefix: str = "w",
         coord: CoordSpec | int | None = None,
+        backend: str | ExecutionBackend = "sim",
+        eta_mode: str | None = None,
     ):
         self.fleet = FleetSpec.parse(fleet, prefix=name_prefix)
         # Reports trace back to the *declared* spec (auto-selected backend
@@ -148,6 +161,29 @@ class Cluster:
             raise ValueError(
                 f"priors must be 'neutral' or 'spec', got {priors!r}"
             )
+        if isinstance(backend, str) and backend not in ("sim", "wallclock"):
+            raise ValueError(
+                f"backend must be 'sim' (logical clock, modeled durations — "
+                f"the default) or 'wallclock' (grains run as real JAX "
+                f"computations on host-platform devices, durations are "
+                f"measured), or an ExecutionBackend instance; got {backend!r}"
+            )
+        if not isinstance(backend, (str, ExecutionBackend)):
+            raise TypeError(
+                f"backend must be 'sim', 'wallclock' or an ExecutionBackend "
+                f"instance, got {type(backend).__name__}"
+            )
+        if eta_mode is not None and eta_mode not in (
+            "incremental", "recompute"
+        ):
+            raise ValueError(
+                f"eta_mode must be 'incremental' (O(1) maintained queue "
+                f"ETAs, the default) or 'recompute' (re-sum queues on every "
+                f"ETA call — the reference path for bitwise A/B checks), "
+                f"got {eta_mode!r}; None defers to $REPRO_ETA_MODE"
+            )
+        self.backend = backend
+        self.eta_mode = eta_mode
         self.homogenize = homogenize
         self.adaptive = adaptive
         self.priors = priors
@@ -160,6 +196,12 @@ class Cluster:
             coord = CoordSpec(coordinators=self.fleet.coordinators)
         self.coord = coord
         self._auto_profiles: dict[str, str] = {}
+        # One measuring backend per Cluster (lazy): its device assignments
+        # and unit-time calibration persist across simulate/train/serve
+        # calls, like the learned tracker state.
+        self._wallclock: ExecutionBackend | None = (
+            backend if isinstance(backend, ExecutionBackend) else None
+        )
         # Long-lived executors (lazy; learned perf state persists across calls).
         self._sim_rt: AsyncRuntime | None = None
         self._sim_rng: np.random.Generator | None = None
@@ -173,6 +215,49 @@ class Cluster:
     @property
     def _rehomogenize(self) -> bool:
         return self.adaptive and self.homogenize
+
+    def _new_backend(self) -> ExecutionBackend | None:
+        """The runtime execution backend: None keeps the sim fast path
+        (``backend='sim'``); 'wallclock' lazily builds one shared
+        ``WallclockBackend``; an explicit instance is used as-is."""
+        if self._wallclock is not None:
+            return self._wallclock
+        if self.backend == "sim":
+            return None
+        from ..core.wallclock import WallclockBackend
+
+        self._wallclock = WallclockBackend()
+        return self._wallclock
+
+    def _measured(self) -> bool:
+        """True when grain durations are measured (not the sim clock)."""
+        b = self._wallclock
+        if b is None:
+            return not isinstance(self.backend, str) or \
+                self.backend == "wallclock"
+        return type(b) not in (SimBackend, ExecutionBackend)
+
+    def _backend_label(self) -> str:
+        """RunReport provenance: 'sim' or '<name>[<n>d]' for measured
+        backends (device count included so two hosts' BENCH entries stay
+        distinguishable)."""
+        if not self._measured():
+            return "sim"
+        b = self._new_backend()
+        name = getattr(b, "name", type(b).__name__)
+        devices = getattr(b, "devices", None)
+        return f"{name}[{len(devices)}d]" if devices else name
+
+    def _time_scale(self, cost_ref: float) -> float:
+        """Wall seconds per modeled second for a job whose reference grain
+        cost is ``cost_ref`` (1.0 on the sim path).  Converts phase
+        estimates, spec priors and standalone-time baselines between the two
+        clocks."""
+        if not self._measured():
+            return 1.0
+        b = self._new_backend()
+        ts = getattr(b, "time_scale", None)
+        return ts(cost_ref) if ts is not None else 1.0
 
     def _overhead_model(self):
         return self.fleet.overhead_model(self.default_profile)
@@ -202,6 +287,11 @@ class Cluster:
         count."""
         if self.default_profile is not None:
             return {}   # an explicit cluster-wide default is not silent
+        if self._measured():
+            # Measured backends report perfs in wall units; the registry's
+            # bands are modeled work-units/sec, so classification would be
+            # meaningless.  launch/calibrate.py refits bands in wall units.
+            return {}
         updated = list(self.fleet.workers)
         chosen: dict[str, str] = {}
         for i, w in enumerate(updated):
@@ -220,9 +310,13 @@ class Cluster:
         return chosen
 
     def _spec_priors(self, tracker: PerformanceTracker, rate: bool = False,
-                     now_s: float = 0.0) -> None:
+                     now_s: float = 0.0, scale: float = 1.0) -> None:
+        """Seed declared perfs as oracle priors.  ``scale`` converts to the
+        tracker's clock: wall-time backends measure work-units per wall
+        second, so the modeled prior divides by the backend's time scale."""
         for w in self.fleet.workers:
-            tracker.rejoin(w.name, w.rate if rate else w.perf, now_s)
+            p = w.rate if rate else w.perf
+            tracker.rejoin(w.name, p if scale == 1.0 else p / scale, now_s)
 
     def _phase_estimate(self, work: int, unit: float,
                         rates: Sequence[float]) -> float:
@@ -275,10 +369,15 @@ class Cluster:
     def _simulate_timing(self, job: SimJob, sc: Scenario) -> RunReport:
         if job.size < 1 or job.n_jobs < 1:
             raise ValueError("SimJob needs size >= 1 and n_jobs >= 1")
+        unit = ClusterSim.unit_cost(job.size)
+        # Wall-time scale of this job (1.0 on the sim path): grains of cost
+        # ``unit`` are the backend's reference work item.
+        scale = self._time_scale(unit)
+        measured = self._measured()
         if self._sim_rt is None:
             tracker = PerformanceTracker(alpha=0.5, dead_after_s=1e18)
             if self.priors == "spec":
-                self._spec_priors(tracker)
+                self._spec_priors(tracker, scale=scale)
             self._sim_rt = AsyncRuntime(
                 [SimWorker(w.name, w.perf) for w in self.fleet.workers],
                 tracker=tracker,
@@ -287,13 +386,17 @@ class Cluster:
                 steal=self._rehomogenize,
                 replan_threshold=self.replan_threshold,
                 authority=self._new_authority(),
+                eta_mode=self.eta_mode,
+                backend=self._new_backend(),
             )
             self._sim_rng = np.random.default_rng(self.seed)
         rt = self._sim_rt
-        unit = ClusterSim.unit_cost(job.size)
         ovh_model = self._overhead_model()
-        ovh = ovh_model(job.size)
-        est_phase = self._phase_estimate(job.size, unit, self.fleet.perfs)
+        # Measured runs pay no modeled distribution overhead — whatever
+        # dispatch really costs is inside the measured durations.
+        ovh = 0.0 if measured else ovh_model(job.size)
+        est_phase = scale * self._phase_estimate(
+            job.size, unit, self.fleet.perfs)
         # Phase-anchored scheduling: each job's events are re-timed against
         # its *true* start (the per-phase run call is the callback), so
         # '@k:frac%' never drifts with accumulated estimate error.
@@ -337,11 +440,14 @@ class Cluster:
         work = float(job.size * job.n_jobs)
         total_s = sum(p.sim_time_s for p in phases)
         pred, meas = self._speedups(
-            job.size * unit, [p for p in self.fleet.perfs],
-            phases[-1].sim_time_s, overhead=ovh_model, load=float(job.size),
+            job.size * unit * scale, [p for p in self.fleet.perfs],
+            phases[-1].sim_time_s,
+            overhead=None if measured else ovh_model, load=float(job.size),
         )
         self._autoselect_profiles(rt.tracker)
         metrics = {"overhead_slope": ovh_model.m, "unit_cost": unit}
+        if measured and res.backend is not None:
+            metrics["wallclock"] = res.backend.summary()
         if self._auto_profiles:
             metrics["auto_profiles"] = dict(self._auto_profiles)
         return RunReport(
@@ -351,6 +457,7 @@ class Cluster:
             predicted_speedup=pred, measured_speedup=meas,
             worker_timelines=merge_worker_timelines(spans),
             metrics=metrics, coord=self._coord_stats(rt),
+            backend=self._backend_label(),
         )
 
     def _simulate_matmul(self, job: MatmulJob, sc: Scenario) -> RunReport:
@@ -368,26 +475,32 @@ class Cluster:
                 profile=spec.profile or self.default_profile or DEFAULT_PROFILE,
             )
 
+        measured = self._measured()
+        # Reference grain: the first (full) row-block — what the measuring
+        # backend calibrates its per-grain work volume against.
+        scale = self._time_scale(
+            min(n, job.block_rows) * ClusterSim.unit_cost(n))
         if self._tda_client is None:
             server = TDAServer(
                 [provider(w) for w in self.fleet.workers],
                 homogenize=self.homogenize,
             )
             if self.priors == "spec":
-                self._spec_priors(server.tracker)
+                self._spec_priors(server.tracker, scale=scale)
             client = ThinClient(server, sim=ClusterSim(
                 perfs=list(self.fleet.perfs),
                 overhead=self._overhead_model(),
                 jitter=sc.jitter, seed=self.seed,
-            ), authority=self._new_authority())
+            ), authority=self._new_authority(),
+                backend=self._new_backend(), eta_mode=self.eta_mode)
             client.runtime.rehomogenize = self._rehomogenize
             client.runtime.steal = self._rehomogenize
             client.runtime.replan_threshold = self.replan_threshold
             self._tda_client = client
         client = self._tda_client
         unit = client.sim.unit_cost(n)
-        est_phase = self._phase_estimate(n, unit, self.fleet.perfs)
-        ovh_est = client.sim.overhead(n)
+        est_phase = scale * self._phase_estimate(n, unit, self.fleet.perfs)
+        ovh_est = 0.0 if measured else client.sim.overhead(n)
         sched = sc.schedule(self.fleet, phase_s=est_phase,
                             stride_s=est_phase + ovh_est,
                             make_worker=provider,
@@ -419,16 +532,20 @@ class Cluster:
         work = float(n * job.n_jobs)
         total_s = sum(p.sim_time_s for p in phases)
         pred, meas = self._speedups(
-            n * unit, list(self.fleet.perfs), phases[-1].sim_time_s,
-            overhead=self._overhead_model(), load=float(n),
+            n * unit * scale, list(self.fleet.perfs), phases[-1].sim_time_s,
+            overhead=None if measured else self._overhead_model(),
+            load=float(n),
         )
+        if measured and client.last_result.backend is not None:
+            metrics["wallclock"] = client.last_result.backend.summary()
         return RunReport(
             kind="simulate", fleet=self._declared_fleet, scenario=str(sc),
             phases=tuple(phases), work_done=work, sim_time_s=total_s,
-            throughput=work / max(total_s, _EPS),
             predicted_speedup=pred, measured_speedup=meas,
+            throughput=work / max(total_s, _EPS),
             worker_timelines=merge_worker_timelines(spans),
             metrics=metrics, artifact=out, coord=self._coord_stats(client.runtime),
+            backend=self._backend_label(),
         )
 
     # ================================================================= train
@@ -444,7 +561,14 @@ class Cluster:
         sc = Scenario.parse(scenario)
         self._reject_workload(sc, "train")
         vocab = job.vocab_size or job.model.cfg.vocab_size
+        measured = self._measured()
+        # Training grains are uniform cost 1.0 — the backend's reference.
+        scale = self._time_scale(1.0)
         ovh_model = self._overhead_model()
+        if measured:
+            # No modeled per-step overhead on measured runs (see simulate);
+            # a huge slope makes the trainer's charged overhead negligible.
+            ovh_model = OverheadModel(m=1e15)
         cfg = HDPConfig(
             total_grains=job.grains,
             grain_spec=GrainSpec(job.grain_size, job.seq_len, vocab),
@@ -461,10 +585,13 @@ class Cluster:
         trainer = HDPTrainer(
             job.model, [Pod(w.name, w.perf) for w in self.fleet.workers],
             cfg, opt_cfg=job.opt, authority=self._new_authority(),
+            backend=self._new_backend(), eta_mode=self.eta_mode,
         )
         if self.priors == "spec":
-            self._spec_priors(trainer.tracker, now_s=trainer.clock)
-        est_phase = self._phase_estimate(job.grains, 1.0, self.fleet.perfs)
+            self._spec_priors(trainer.tracker, now_s=trainer.clock,
+                              scale=scale)
+        est_phase = scale * self._phase_estimate(
+            job.grains, 1.0, self.fleet.perfs)
         ovh = ovh_model(job.grains)
         # Phase-anchored scheduling: the trainer's step-start hook re-times
         # each '@k:frac%' clause against step k's *true* start clock, so long
@@ -501,8 +628,9 @@ class Cluster:
         work = float(job.grains * len(phases))
         total_s = sum(p.sim_time_s for p in phases)
         pred, meas = self._speedups(
-            float(job.grains), list(self.fleet.perfs), phases[-1].sim_time_s,
-            overhead=ovh_model, load=float(job.grains),
+            job.grains * scale, list(self.fleet.perfs),
+            phases[-1].sim_time_s,
+            overhead=None if measured else ovh_model, load=float(job.grains),
         )
         self._autoselect_profiles(trainer.tracker)
         metrics = {"final_loss": history[-1]["loss"],
@@ -519,6 +647,7 @@ class Cluster:
             worker_timelines=merge_worker_timelines(spans),
             metrics=metrics,
             artifact=trainer, coord=self._coord_stats(trainer.runtime),
+            backend=self._backend_label(),
         )
 
     # ================================================================= serve
@@ -536,6 +665,14 @@ class Cluster:
             raise ValueError(
                 "jitter: clauses don't apply to serving — engine timing is "
                 "measured (step clocks), not modeled"
+            )
+        if self._measured() and str(sc):
+            raise ValueError(
+                f"scenario {str(sc)!r} is not supported with "
+                f"backend='wallclock' serving yet: scenario clauses anchor "
+                "to modeled phase estimates, which have no calibrated wall "
+                "equivalent for engine step clocks — serve without a "
+                "scenario, or use backend='sim' for scenario studies"
             )
         # The fleet server persists across calls; the fields that define its
         # engines must not silently change between jobs (a new model served
@@ -567,6 +704,8 @@ class Cluster:
                 homogenize=self.homogenize,
                 engine_factory=self._engine_for_worker,
                 authority=self._new_authority(),
+                backend=self._new_backend(),
+                eta_mode=self.eta_mode,
             )
             server.dispatcher.runtime.rehomogenize = self._rehomogenize
             server.dispatcher.runtime.steal = self._rehomogenize
@@ -631,6 +770,14 @@ class Cluster:
                           counts))
             elapsed += bstat.sim_time_s
         pred, meas = self._speedups(float(cost), rates, rep.sim_time_s)
+        if self._measured():
+            # Wall-clock serving: the tracker's learned rates ARE measured
+            # (work-units per wall second), so the standalone baseline uses
+            # the best *measured* replica, not the declared spec rate.
+            live = server.live_replicas()
+            r_meas = max(
+                (server.tracker.perf(w) for w in live), default=0.0)
+            meas = (cost / max(r_meas, _EPS)) / max(rep.sim_time_s, _EPS)
         self._autoselect_profiles(server.tracker, per_slot=True)
         metrics = {"n_requests": rep.n_requests, "batched": job.batched,
                    "n_waves": len(rep.bundles)}
@@ -645,6 +792,7 @@ class Cluster:
             metrics=metrics,
             artifact=requests, coord=self._coord_stats(
                 server.dispatcher.runtime),
+            backend=self._backend_label(),
         )
 
     def _serve_stream(self, job: ServeJob, sc: Scenario, server) -> RunReport:
@@ -776,7 +924,7 @@ class Cluster:
             worker_timelines=merge_worker_timelines(spans),
             metrics=metrics, artifact=used,
             coord=self._coord_stats(server.dispatcher.runtime),
-            latency=lat,
+            latency=lat, backend=self._backend_label(),
         )
 
     # -- serve internals -----------------------------------------------------

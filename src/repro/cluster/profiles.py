@@ -21,6 +21,7 @@ link is the same).
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Sequence
 
 from ..core.homogenization import OverheadModel, overhead_slope_fit
@@ -30,7 +31,10 @@ __all__ = [
     "DEFAULT_PROFILE",
     "PROFILES",
     "get_profile",
+    "load_profiles",
+    "refit_profile",
     "register_profile",
+    "save_profiles",
     "select_profile",
 ]
 
@@ -128,9 +132,11 @@ def select_profile(measured_perf: float) -> BackendProfile:
     """Pick the registered profile whose measured ``perf_band`` covers a
     worker's observed throughput — the first slice of measured backend
     calibration: a worker the FleetSpec left unprofiled is classified from
-    its *heartbeats*, never silently defaulted.  Falls back to the band with
-    the nearest edge when nothing covers the value; deterministic tie-break
-    by name."""
+    its *heartbeats*, never silently defaulted.  Of the covering bands the
+    *narrowest* wins (a refit band from a live calibration run is tighter
+    than a synthesized class band, so measurements beat defaults); falls
+    back to the band with the nearest edge when nothing covers the value.
+    Deterministic tie-break by name throughout."""
     if measured_perf <= 0:
         raise ValueError(f"measured_perf must be > 0, got {measured_perf}")
     banded = sorted(
@@ -139,16 +145,82 @@ def select_profile(measured_perf: float) -> BackendProfile:
     )
     if not banded:
         return PROFILES[DEFAULT_PROFILE]
-    for p in banded:
-        lo, hi = p.perf_band
-        if lo <= measured_perf < hi:
-            return p
+    covering = [
+        p for p in banded if p.perf_band[0] <= measured_perf < p.perf_band[1]
+    ]
+    if covering:
+        return min(
+            covering, key=lambda p: (p.perf_band[1] - p.perf_band[0], p.name)
+        )
 
     def edge_distance(p: BackendProfile) -> float:
         lo, hi = p.perf_band
         return min(abs(measured_perf - lo), abs(measured_perf - hi))
 
     return min(banded, key=lambda p: (edge_distance(p), p.name))
+
+
+def refit_profile(
+    name: str,
+    samples: Sequence[tuple[float, float]],
+    *,
+    perf_band: tuple[float, float] | None = None,
+    description: str = "",
+) -> BackendProfile:
+    """Register (or replace) ``name`` from freshly *measured* (load,
+    overhead_seconds) samples — the ``launch/calibrate.py`` path.  The slope
+    is refit by the paper's least-squares regression exactly as for built-in
+    profiles; passing a finite ``perf_band`` makes the refit band eligible
+    for (and, being measured-narrow, preferred by) ``select_profile``."""
+    profile = BackendProfile(
+        name,
+        tuple((float(l), float(o)) for l, o in samples),
+        description or f"refit from {len(samples)} measured samples",
+        perf_band,
+    )
+    return register_profile(profile)
+
+
+def save_profiles(path, names: Sequence[str] | None = None) -> None:
+    """Write registered profiles (raw calibration samples + bands, never
+    fitted slopes) to a JSON file ``load_profiles`` can restore."""
+    keep = sorted(PROFILES) if names is None else list(names)
+    payload = {
+        "profiles": [
+            {
+                "name": p.name,
+                "calibration": [list(c) for c in p.calibration],
+                "description": p.description,
+                "perf_band": list(p.perf_band) if p.perf_band else None,
+            }
+            for p in (get_profile(n) for n in keep)
+        ]
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+
+
+def load_profiles(path) -> list[BackendProfile]:
+    """Register every profile stored by ``save_profiles`` (replacing any
+    same-named ones) and return them.  Slopes are refit from the stored
+    samples on access, so a load round-trips bit-for-bit."""
+    with open(path) as f:
+        payload = json.load(f)
+    out = []
+    for rec in payload["profiles"]:
+        band = rec.get("perf_band")
+        out.append(
+            register_profile(
+                BackendProfile(
+                    rec["name"],
+                    tuple((float(l), float(o)) for l, o in rec["calibration"]),
+                    rec.get("description", ""),
+                    tuple(band) if band else None,
+                )
+            )
+        )
+    return out
 
 
 def get_profile(name_or_profile: str | BackendProfile | None) -> BackendProfile:

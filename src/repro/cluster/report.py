@@ -69,6 +69,10 @@ class RunReport:
     artifact: Any = None
     coord: Any = None                # coord.CoordStats when dispatch is sharded
     latency: Any = None              # serve.LatencyStats for open-loop serves
+    # Execution-backend provenance: "sim" (logical clock, modeled durations)
+    # or "wallclock[<n>d]" (measured on <n> real devices) — keeps BENCH_*.json
+    # entries from the two backends from being conflated.
+    backend: str = "sim"
 
     # -- the uniform questions ----------------------------------------------
     def shares(self) -> dict[str, int]:
@@ -108,6 +112,8 @@ class RunReport:
             f"speedup {self.measured_speedup:.2f}x measured vs "
             f"{self.predicted_speedup:.2f}x predicted, shares[{shares}]"
         )
+        if self.backend != "sim":
+            s += f", backend={self.backend}"
         if self.coord is not None:
             s += f", coord[{self.coord.summary()}]"
         if self.latency is not None:

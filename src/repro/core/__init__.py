@@ -8,6 +8,8 @@ Control-plane (pure Python, coordinator-side):
                     event heartbeats, mid-job re-homogenization + stealing
   tda             — client/server/service-provider triangle, real execution
   simulate        — discrete-event heterogeneous cluster (paper §3 testbed)
+  wallclock       — measured ExecutionBackend: grains run as real async JAX
+                    computations on host-platform devices (wall-clock times)
 """
 
 from .homogenization import (
@@ -28,14 +30,17 @@ from .runtime import (
     AsyncRuntime,
     CallableGrainExecutor,
     DispatchAuthority,
+    ExecutionBackend,
     GrainExecutor,
     GrainRecord,
     JobContext,
     RuntimeResult,
+    SimBackend,
     SimWorker,
     SingleCoordinator,
     TimelineEvent,
 )
+from .wallclock import WallclockBackend, WallclockStats
 from .scheduler import GrainPlan, HomogenizedScheduler, should_replan
 from .simulate import PAPER_MACHINES, REF_SIZE, ClusterSim, JobResult, Machine
 from .tda import ServiceProvider, TDAServer, ThinClient
@@ -61,6 +66,10 @@ __all__ = [
     "AsyncRuntime",
     "CallableGrainExecutor",
     "DispatchAuthority",
+    "ExecutionBackend",
+    "SimBackend",
+    "WallclockBackend",
+    "WallclockStats",
     "GrainExecutor",
     "GrainRecord",
     "JobContext",

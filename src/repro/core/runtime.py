@@ -52,6 +52,7 @@ import heapq
 import itertools
 import os
 from collections import deque
+from time import perf_counter as _perf_counter
 from typing import Any, Callable
 
 from .homogenization import scope_lengths
@@ -70,6 +71,8 @@ __all__ = [
     "JobContext",
     "DispatchAuthority",
     "SingleCoordinator",
+    "ExecutionBackend",
+    "SimBackend",
 ]
 
 _EPS = 1e-12
@@ -249,6 +252,93 @@ class DispatchAuthority:
 
 class SingleCoordinator(DispatchAuthority):
     """The paper's single dispatch authority, stated explicitly."""
+
+
+class ExecutionBackend:
+    """Seam between the event loop and *how a grain's work actually runs*.
+
+    The ``GrainExecutor`` answers what a grain is (cost model, real compute);
+    the backend answers where its duration comes from.  The default
+    ``SimBackend`` is the logical-clock simulator the repo always had: the
+    loop asks ``executor.duration_s`` for a modeled time and the clock jumps
+    there.  ``repro.core.wallclock.WallclockBackend`` instead launches a real
+    async device computation per grain and *measures* it — the completion
+    event's duration, the heartbeat fed to the tracker, and
+    ``RuntimeResult.worker_busy`` all become wall-clock observations.
+
+    Per-grain protocol (modeled path):
+
+      launch(ex, w, g, cost, t)     start the grain's real work; returns an
+                                    opaque handle carried on the in-flight
+                                    record (None for pure-sim backends),
+      duration_s(ex, w, g, ...)     seconds to schedule the completion event
+                                    at (modeled, measured, or an estimate
+                                    settled later — see ``settle``),
+      settle(ex, w, g, h, event_d)  called at the completion event with the
+                                    event-clock duration; returns the duration
+                                    to *record* (a measuring backend blocks on
+                                    the handle here and returns wall time),
+      observe_execute(w, dt)        wall seconds ``executor.execute`` took at
+                                    completion; returns the seconds to fold
+                                    into the recorded duration (a measuring
+                                    backend counts real per-grain compute,
+                                    the sim counts none).
+
+    Incremental (tick-driven) protocol: ``tick_s`` schedules the next tick
+    and ``timed_tick`` wraps the executor's real step so a measuring backend
+    can time it.  ``begin_job``/``end_job``/``stats`` bracket one job and
+    surface backend provenance on ``RuntimeResult.backend``.
+    """
+
+    name = "sim"
+    runtime: "AsyncRuntime | None" = None
+
+    def bind(self, runtime: "AsyncRuntime") -> None:
+        self.runtime = runtime
+
+    # -- lifecycle -----------------------------------------------------------
+    def begin_job(self, executor: "GrainExecutor", n_grains: int,
+                  now_s: float) -> None:
+        pass
+
+    def end_job(self, res: "RuntimeResult") -> None:
+        pass
+
+    def stats(self):
+        """Backend provenance for reports (None = pure simulation)."""
+        return None
+
+    # -- modeled/measured grain protocol ------------------------------------
+    def launch(self, executor: "GrainExecutor", worker: Any, grain: int,
+               cost: float, now_s: float) -> Any:
+        return None
+
+    def duration_s(self, executor: "GrainExecutor", worker: Any, grain: int,
+                   cost: float, now_s: float, handle: Any) -> float:
+        return executor.duration_s(worker, cost, now_s)
+
+    def settle(self, executor: "GrainExecutor", worker: Any, grain: int,
+               handle: Any, event_dur_s: float) -> float:
+        return event_dur_s
+
+    def observe_execute(self, worker: Any, elapsed_s: float) -> float:
+        return 0.0
+
+    # -- incremental (tick) protocol ----------------------------------------
+    def tick_s(self, executor: "GrainExecutor", worker: Any,
+               now_s: float) -> float:
+        return executor.tick_s(worker, now_s)
+
+    def timed_tick(self, executor: "GrainExecutor", worker: Any,
+                   now_s: float) -> list[tuple[int, Any]]:
+        return executor.tick(worker, now_s)
+
+
+class SimBackend(ExecutionBackend):
+    """The logical-clock default, stated explicitly.  ``AsyncRuntime`` keeps
+    a dedicated fast path for this backend (no per-event indirection), so
+    ``backend=None``, ``backend=SimBackend()`` and the pre-seam code are all
+    bitwise-identical."""
 
 
 class GrainExecutor:
@@ -497,6 +587,8 @@ class RuntimeResult:
     end_s: float                     # absolute clock at job end
     dead_workers: set[str] = dataclasses.field(default_factory=set)
     coord: Any = None                # coordination-plane stats (CoordStats)
+    backend: Any = None              # execution-backend stats (WallclockStats;
+                                     # None = pure logical-clock simulation)
     # Open-loop extras (ArrivalSource jobs; empty for closed-loop jobs):
     arrive_s: dict[int, float] = dataclasses.field(default_factory=dict)
     shed: list[int] = dataclasses.field(default_factory=list)
@@ -535,6 +627,7 @@ class _Inflight:
     start_s: float
     end_s: float
     cost: float
+    handle: Any = None        # ExecutionBackend launch handle (None for sim)
 
 
 class AsyncRuntime:
@@ -553,6 +646,7 @@ class AsyncRuntime:
         replan_threshold: float = 0.05,
         authority: DispatchAuthority | None = None,
         eta_mode: str | None = None,
+        backend: ExecutionBackend | None = None,
     ):
         if eta_mode is None:
             # Benchmark/debug override: lets harnesses A/B the reference
@@ -574,6 +668,11 @@ class AsyncRuntime:
         self.clock = 0.0
         self.authority = authority or SingleCoordinator()
         self.authority.bind(self)
+        # ``backend`` decides where grain durations come from: None (or a
+        # SimBackend) keeps the logical-clock fast path; a measuring backend
+        # (core.wallclock.WallclockBackend) launches real work per grain.
+        self.backend = backend or SimBackend()
+        self.backend.bind(self)
         # Timeline events scheduled past a job's last completion don't fire in
         # that job; they carry over and fire during a later job's window.
         self._pending: list[TimelineEvent] = []
@@ -688,6 +787,10 @@ class AsyncRuntime:
         uniform = executor.uniform_cost
         cost_of = executor.cost
         dur_of = executor.duration_s
+        backend = self.backend
+        # The sim default keeps the exact pre-seam call sequence (no per-event
+        # backend indirection): bitwise-identical results, identical hot path.
+        sim_exec = type(backend) in (SimBackend, ExecutionBackend)
 
         events = [
             dataclasses.replace(ev, time_s=ev.time_s + now) for ev in timeline
@@ -926,6 +1029,8 @@ class AsyncRuntime:
             new_queue=make_queue, idle=idle,
         )
         self.authority.begin_job(ctx)
+        if not sim_exec:
+            backend.begin_job(executor, n_grains, now)
 
         def abort_inflight(w: str) -> list[int]:
             """Withdraw w's never-completed in-flight work (kill path) so the
@@ -955,8 +1060,17 @@ class AsyncRuntime:
                 return
             g = q.popleft()
             c = cost_of(g)
-            d = max(dur_of(self.workers[w], c, now), _EPS)
-            inflight[w] = _Inflight(g, now, now + d, c)
+            if sim_exec:
+                d = max(dur_of(self.workers[w], c, now), _EPS)
+                h = None
+            else:
+                # Measuring backend: launch the grain's real work now; the
+                # completion event lands at its (measured or estimated)
+                # duration and settles against the handle.
+                h = backend.launch(executor, self.workers[w], g, c, now)
+                d = max(backend.duration_s(executor, self.workers[w], g, c,
+                                           now, h), _EPS)
+            inflight[w] = _Inflight(g, now, now + d, c, h)
             idle.discard(w)
             heapq.heappush(heap, (now + d, 1, next(seq), w))
 
@@ -980,7 +1094,10 @@ class AsyncRuntime:
                 icost_cache.pop(w, None)
                 free -= 1
             if sl and w not in ticks:
-                d = max(executor.tick_s(worker, now), _EPS)
+                if sim_exec:
+                    d = max(executor.tick_s(worker, now), _EPS)
+                else:
+                    d = max(backend.tick_s(executor, worker, now), _EPS)
                 ticks[w] = (now + d, d)
                 heapq.heappush(heap, (now + d, 1, next(seq), w))
 
@@ -1076,7 +1193,10 @@ class AsyncRuntime:
                 del ticks[w]
                 self.authority.count_event(w, "tick", ctx)
                 worker = self.workers[w]
-                finished = executor.tick(worker, now)
+                if sim_exec:
+                    finished = executor.tick(worker, now)
+                else:
+                    finished = backend.timed_tick(executor, worker, now)
                 icost_cache.pop(w, None)
                 sl = islots.get(w, {})
                 res.worker_busy[w] = res.worker_busy.get(w, 0.0) + tk[1]
@@ -1108,11 +1228,24 @@ class AsyncRuntime:
             idle.add(w)
             self.authority.count_event(w, "completion", ctx)
             dur = now - fl.start_s
+            if not sim_exec:
+                # Measured duration: the backend blocks on the grain's real
+                # async work here (or returns the time it already measured).
+                dur = backend.settle(executor, self.workers[w], fl.grain,
+                                     fl.handle, dur)
             res.records.append(GrainRecord(fl.grain, w, fl.start_s, now, fl.cost))
             if fl.grain in res.executed_by:
                 raise RuntimeError(f"grain {fl.grain} double-executed")
             res.executed_by[fl.grain] = w
-            res.values[fl.grain] = executor.execute(self.workers[w], fl.grain)
+            if sim_exec:
+                res.values[fl.grain] = executor.execute(self.workers[w], fl.grain)
+            else:
+                # Real per-grain compute counts toward the measured duration
+                # (the sim charges it to the cost model instead).
+                t0 = _perf_counter()
+                res.values[fl.grain] = executor.execute(self.workers[w], fl.grain)
+                dur += backend.observe_execute(
+                    self.workers[w], _perf_counter() - t0)
             res.worker_finish[w] = now
             res.worker_busy[w] = res.worker_busy.get(w, 0.0) + dur
             # Heartbeat: the background process reports observed throughput.
@@ -1131,6 +1264,9 @@ class AsyncRuntime:
         res.dead_workers = set(dead)
         self.authority.end_job(ctx)
         res.coord = self.authority.stats()
+        if not sim_exec:
+            backend.end_job(res)
+            res.backend = backend.stats()
         return res
 
     def inject_event(self, ev: TimelineEvent) -> None:

@@ -29,7 +29,13 @@ from typing import Callable
 import numpy as np
 
 from .performance import PerformanceTracker, PerfReport
-from .runtime import AsyncRuntime, RuntimeResult, TimelineEvent
+from .runtime import (
+    AsyncRuntime,
+    ExecutionBackend,
+    RuntimeResult,
+    SimBackend,
+    TimelineEvent,
+)
 from .scheduler import GrainPlan, HomogenizedScheduler
 from .simulate import ClusterSim
 
@@ -140,7 +146,7 @@ class ThinClient:
     equal-split baseline (no re-homogenization, no stealing)."""
 
     def __init__(self, server: TDAServer, sim: ClusterSim | None = None,
-                 authority=None):
+                 authority=None, backend=None, eta_mode: str | None = None):
         self.server = server
         self.sim = sim or ClusterSim(
             perfs=[p.perf for p in server.providers]
@@ -148,6 +154,11 @@ class ThinClient:
         # ``authority`` plugs a coordination plane under the triangle: the
         # default is the paper's single TDA; a coord.ShardedCoordinator
         # partitions dispatch across K replicas (``FleetSpec`` '/cK').
+        # ``backend`` swaps grain execution: None keeps the logical-clock
+        # simulator; a measuring ExecutionBackend (core.wallclock) runs each
+        # row-block as real device work and the modeled duration_fn and
+        # distribution-overhead terms stop applying (durations and total
+        # time are *measured*).
         self.runtime = AsyncRuntime(
             server.providers,
             tracker=server.tracker,
@@ -155,6 +166,11 @@ class ThinClient:
             rehomogenize=server.homogenize,
             steal=server.homogenize,
             authority=authority,
+            eta_mode=eta_mode,
+            backend=backend,
+        )
+        self._measured = backend is not None and type(backend) not in (
+            SimBackend, ExecutionBackend
         )
         self.last_result: RuntimeResult | None = None
 
@@ -202,7 +218,14 @@ class ThinClient:
         for g, value in res.values.items():
             lo, hi = rows_of(g)
             out[lo:hi] = value
-        sim_time = res.makespan + self._distribution_overhead(res, rows_of, n)
+        if self._measured:
+            # Measured backends pay no *modeled* distribution overhead; the
+            # wall cost of moving data is already inside the measured grain
+            # durations (device_put + dispatch + combine happen for real).
+            sim_time = res.makespan
+        else:
+            sim_time = res.makespan + self._distribution_overhead(
+                res, rows_of, n)
         return out, sim_time
 
     def _distribution_overhead(self, res: RuntimeResult, rows_of, n: int) -> float:

@@ -1,0 +1,84 @@
+"""Shared launcher plumbing: fleet-flag grammar, backend choice, env profile.
+
+The train and serve CLIs grew the same three fragments independently — a
+``--fleet`` flag whose legacy alias (``--pods`` / ``--replicas``) predates
+the FleetSpec grammar, a ``--tuned``/``REPRO_TUNED`` env-profile apply, and
+(with the wall-clock backend) host-platform device pinning that must land in
+``XLA_FLAGS`` before the first JAX computation.  They live here once.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import warnings
+
+__all__ = ["add_fleet_arg", "add_backend_args", "apply_env"]
+
+_warned_aliases: set[str] = set()
+
+
+def add_fleet_arg(ap: argparse.ArgumentParser, *, legacy: str,
+                  default: str, help: str) -> None:
+    """``--fleet`` plus its deprecated pre-FleetSpec alias (``--pods`` on
+    the train CLI, ``--replicas`` on serve).  Both write ``args.fleet``; the
+    alias additionally emits one DeprecationWarning per process."""
+
+    class _FleetAction(argparse.Action):
+        def __call__(self, parser, namespace, values, option_string=None):
+            if option_string == legacy and legacy not in _warned_aliases:
+                _warned_aliases.add(legacy)
+                # CLI users must actually see this: DeprecationWarning is
+                # filtered out by default outside __main__, so force it
+                # through for this one emission (filters restored on exit).
+                with warnings.catch_warnings():
+                    warnings.simplefilter("always", DeprecationWarning)
+                    warnings.warn(
+                        f"{legacy} is deprecated; use --fleet (same "
+                        f"FleetSpec grammar — the old {legacy} strings "
+                        f"parse unchanged)",
+                        DeprecationWarning,
+                        stacklevel=2,
+                    )
+            setattr(namespace, self.dest, values)
+
+    ap.add_argument("--fleet", legacy, dest="fleet", default=default,
+                    action=_FleetAction, help=help)
+
+
+def add_backend_args(ap: argparse.ArgumentParser) -> None:
+    """``--backend`` / ``--devices``: execution-backend choice for the
+    Cluster facade, mirrored on every launcher."""
+    ap.add_argument("--backend", choices=("sim", "wallclock"), default="sim",
+                    help="execution backend: 'sim' (logical clock, modeled "
+                         "durations — default) or 'wallclock' (grains run "
+                         "as real JAX computations on host-platform "
+                         "devices; durations are measured)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="host-platform device count to pin via XLA_FLAGS "
+                         "(wallclock backend; default: one device per "
+                         "fleet worker)")
+
+
+def apply_env(args: argparse.Namespace, n_workers: int | None = None) -> None:
+    """Apply launcher environment knobs, in the window after arg parsing and
+    before the first JAX computation (XLA reads ``XLA_FLAGS`` at backend
+    initialization, so host-device pinning must happen here):
+
+      - ``--devices`` (or, for ``--backend wallclock``, one device per
+        fleet worker) pins ``--xla_force_host_platform_device_count``,
+      - ``--tuned`` / ``REPRO_TUNED=1`` additionally applies the full
+        tuned-substrate profile (launch/env.py).
+    """
+    devices = getattr(args, "devices", None)
+    if devices is None and n_workers and \
+            getattr(args, "backend", "sim") == "wallclock":
+        devices = n_workers
+    if getattr(args, "tuned", False) or os.environ.get("REPRO_TUNED") == "1":
+        from .env import apply as _apply_tuned
+        _apply_tuned(n_host_devices=devices)
+    elif devices is not None:
+        flag = f"--xla_force_host_platform_device_count={devices}"
+        existing = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in existing:
+            os.environ["XLA_FLAGS"] = f"{existing} {flag}".strip()

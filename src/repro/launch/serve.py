@@ -27,7 +27,6 @@ backlog (``--overflow``), the report gains p50/p99 TTFT and goodput under
 from __future__ import annotations
 
 import argparse
-import os
 
 import jax
 import numpy as np
@@ -36,6 +35,7 @@ from ..cluster import Cluster, FleetSpec, Scenario, ServeJob
 from ..configs import ARCH_IDS, get_config
 from ..models.model import Model
 from ..serve.engine import Request
+from .common import add_backend_args, add_fleet_arg, apply_env
 
 
 def parse_replicas(spec: str) -> list[tuple[float, int]]:
@@ -96,10 +96,11 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=24)
     ap.add_argument("--max-seq", type=int, default=64)
     ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--fleet", "--replicas", dest="fleet", default="8x4:4x2:2x1",
-                    help="FleetSpec grammar: [NAME=]PERFxSLOTS[@PROFILE] per "
-                         "replica, ','/':'-separated (engine steps/sec x slots), "
-                         "optional '/cK' suffix for K coordinator shards")
+    add_fleet_arg(ap, legacy="--replicas", default="8x4:4x2:2x1",
+                  help="FleetSpec grammar: [NAME=]PERFxSLOTS[@PROFILE] per "
+                       "replica, ','/':'-separated (engine steps/sec x slots), "
+                       "optional '/cK' suffix for K coordinator shards")
+    add_backend_args(ap)
     ap.add_argument("--coordinators", type=int, default=None,
                     help="shard dispatch across K coordinator replicas "
                          "(overrides the fleet's '/cK' suffix)")
@@ -131,9 +132,8 @@ def main() -> None:
                          "(launch/env.py; LD_PRELOAD needs "
                          "scripts/tuned_run.sh)")
     args = ap.parse_args()
-    if args.tuned or os.environ.get("REPRO_TUNED") == "1":
-        from .env import apply as _apply_tuned
-        _apply_tuned()
+    apply_env(args, n_workers=len(
+        FleetSpec.parse(args.fleet, prefix="r").workers))
 
     cfg = get_config(args.arch, reduced=True)
     if cfg.input_mode == "embeds" or cfg.is_enc_dec:
@@ -147,7 +147,7 @@ def main() -> None:
     scenario = Scenario.from_arg(args.scenario, fleet.names[0])
 
     requests = make_requests(args.requests, cfg.vocab_size, args.max_new)
-    cluster = Cluster(fleet)
+    cluster = Cluster(fleet, backend=args.backend)
     names = ", ".join(f"{w.name}={w.perf:g}steps/s x{w.concurrency}slots"
                       for w in fleet.workers)
     print(f"fleet: {names}  (queue depth {args.queue_depth}/replica, "
@@ -207,7 +207,7 @@ def main() -> None:
         print(f"wrote {args.json}")
 
     if args.compare_serial:
-        serial = Cluster(fleet).serve(
+        serial = Cluster(fleet, backend=args.backend).serve(
             ServeJob(make_requests(args.requests, cfg.vocab_size, args.max_new),
                      model=model, params=params, max_seq=args.max_seq,
                      max_queue_depth=args.queue_depth, batched=False),

@@ -23,7 +23,6 @@ Examples:
 from __future__ import annotations
 
 import argparse
-import os
 
 from ..cluster import Cluster, FleetSpec, Scenario, TrainJob
 from ..configs import ARCH_IDS, get_config
@@ -31,6 +30,7 @@ from ..data.pipeline import GrainSpec, SyntheticSource, batch_from_grains
 from ..models.model import Model
 from ..optim.adamw import AdamWConfig
 from ..train.loop import train_single
+from .common import add_backend_args, add_fleet_arg, apply_env
 
 
 def main() -> None:
@@ -43,10 +43,11 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--grains", type=int, default=8)
-    ap.add_argument("--fleet", "--pods", dest="fleet", default="4:3:2:1",
-                    help="hdp fleet in FleetSpec grammar: "
-                         "[NAME=]PERF[@PROFILE] per pod, ','/':'-separated, "
-                         "optional '/cK' suffix for K coordinator shards")
+    add_fleet_arg(ap, legacy="--pods", default="4:3:2:1",
+                  help="hdp fleet in FleetSpec grammar: "
+                       "[NAME=]PERF[@PROFILE] per pod, ','/':'-separated, "
+                       "optional '/cK' suffix for K coordinator shards")
+    add_backend_args(ap)
     ap.add_argument("--coordinators", type=int, default=None,
                     help="shard dispatch across K coordinator replicas "
                          "(overrides the fleet's '/cK' suffix)")
@@ -65,9 +66,9 @@ def main() -> None:
                          "(launch/env.py; LD_PRELOAD needs "
                          "scripts/tuned_run.sh)")
     args = ap.parse_args()
-    if args.tuned or os.environ.get("REPRO_TUNED") == "1":
-        from .env import apply as _apply_tuned
-        _apply_tuned()
+    apply_env(args, n_workers=len(
+        FleetSpec.parse(args.fleet, prefix="pod").workers
+    ) if args.mode == "hdp" else None)
 
     cfg = get_config(args.arch, reduced=not args.full_config)
     model = Model(cfg)
@@ -99,7 +100,7 @@ def main() -> None:
     if args.coordinators is not None:
         fleet = fleet.with_coordinators(args.coordinators)
     scenario = Scenario.from_arg(args.scenario, fleet.names[0])
-    cluster = Cluster(fleet, adaptive=not args.static)
+    cluster = Cluster(fleet, adaptive=not args.static, backend=args.backend)
     rep = cluster.train(
         TrainJob(model, steps=args.steps, grains=args.grains,
                  seq_len=args.seq, opt=opt, ckpt_dir=args.ckpt,

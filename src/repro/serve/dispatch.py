@@ -25,7 +25,13 @@ import dataclasses
 from typing import Sequence
 
 from ..core.performance import PerformanceTracker
-from ..core.runtime import AsyncRuntime, RuntimeResult, TimelineEvent
+from ..core.runtime import (
+    AsyncRuntime,
+    ExecutionBackend,
+    RuntimeResult,
+    SimBackend,
+    TimelineEvent,
+)
 from .executor import EngineExecutor
 
 __all__ = ["Replica", "DispatchResult", "HomogenizedDispatcher"]
@@ -51,12 +57,16 @@ class DispatchResult:
 
 class HomogenizedDispatcher:
     def __init__(self, replicas: Sequence[Replica], homogenize: bool = True,
-                 alpha: float = 0.5, authority=None):
+                 alpha: float = 0.5, authority=None, backend=None,
+                 eta_mode: str | None = None):
         self.replicas = {r.name: r for r in replicas}
         self.homogenize = homogenize
         self.tracker = PerformanceTracker(alpha=alpha, dead_after_s=1e9)
         # ``authority`` shards the dispatch plane (coord.ShardedCoordinator);
-        # None keeps the single-coordinator default.
+        # None keeps the single-coordinator default.  ``backend`` swaps tick
+        # timing: None keeps the modeled step clock; a measuring
+        # ExecutionBackend times each engine step for real and its
+        # ``step_clock`` feeds measured seconds/step into heartbeats.
         self.runtime = AsyncRuntime(
             list(replicas),
             tracker=self.tracker,
@@ -64,7 +74,14 @@ class HomogenizedDispatcher:
             rehomogenize=homogenize,
             steal=homogenize,
             authority=authority,
+            eta_mode=eta_mode,
+            backend=backend,
         )
+        measured = backend is not None and type(backend) not in (
+            SimBackend, ExecutionBackend
+        )
+        self._step_clock = getattr(backend, "step_clock", None) if measured \
+            else None
 
     @property
     def clock(self) -> float:
@@ -131,6 +148,7 @@ class HomogenizedDispatcher:
         executor = EngineExecutor(engines, requests,
                                   engine_factory=engine_factory,
                                   on_finish=on_finish)
+        executor.step_clock = self._step_clock
         run = self.runtime.run(
             len(requests),
             executor=executor,
@@ -184,10 +202,12 @@ class HomogenizedDispatcher:
         self._validate_engines(engines, engine_factory)
 
         if batched:
+            executor = EngineExecutor(engines, requests,
+                                      engine_factory=engine_factory)
+            executor.step_clock = self._step_clock
             run = self.runtime.run(
                 len(requests),
-                executor=EngineExecutor(engines, requests,
-                                        engine_factory=engine_factory),
+                executor=executor,
                 timeline=timeline, timeline_relative=True,
                 initial_plan=initial_plan,
             )

@@ -55,6 +55,11 @@ class EngineExecutor(GrainExecutor):
 
     incremental = True
     uniform_cost = None
+    # Optional measured step clock: ``step_clock(worker) -> seconds/step``.
+    # A wall-clock backend wires this to its per-worker tick EMA so
+    # heartbeats report *measured* tokens/sec instead of the modeled
+    # ``1 / perf`` profile.  None keeps the modeled clock.
+    step_clock = None
 
     def __init__(self, engines: Mapping[str, object], requests: Sequence,
                  engine_factory=None, on_finish=None):
@@ -142,7 +147,10 @@ class EngineExecutor(GrainExecutor):
         return self.engine_for(worker).max_batch
 
     def step_seconds(self, worker) -> float:
-        """Simulated seconds per engine step: the replica's speed profile."""
+        """Seconds per engine step: the replica's modeled speed profile, or
+        the backend's measured clock when ``step_clock`` is wired."""
+        if self.step_clock is not None:
+            return self.step_clock(worker)
         return 1.0 / max(worker.perf, _EPS)
 
     def tick_s(self, worker, now_s: float) -> float:

@@ -203,6 +203,8 @@ class FleetServer:
         alpha: float = 0.5,
         engine_factory=None,
         authority=None,
+        backend=None,
+        eta_mode: str | None = None,
     ):
         if max_queue_depth < 1:
             raise ValueError("max_queue_depth must be >= 1")
@@ -210,7 +212,8 @@ class FleetServer:
         if missing and engine_factory is None:
             raise ValueError(f"replicas without engines {sorted(missing)}")
         self.dispatcher = HomogenizedDispatcher(
-            replicas, homogenize=homogenize, alpha=alpha, authority=authority
+            replicas, homogenize=homogenize, alpha=alpha, authority=authority,
+            backend=backend, eta_mode=eta_mode,
         )
         self.engines = dict(engines)
         self.max_queue_depth = max_queue_depth

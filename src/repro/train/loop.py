@@ -193,7 +193,8 @@ class _GrainGradExecutor(GrainExecutor):
 
 class HDPTrainer:
     def __init__(self, model: Model, pods: list[Pod], cfg: HDPConfig,
-                 opt_cfg: AdamWConfig | None = None, authority=None):
+                 opt_cfg: AdamWConfig | None = None, authority=None,
+                 backend=None, eta_mode: str | None = None):
         self.model = model
         self.pods = {p.name: p for p in pods}
         self.cfg = cfg
@@ -225,6 +226,11 @@ class HDPTrainer:
         live = [p for p in pods if p.alive]
         # ``authority`` shards the coordination plane (coord.
         # ShardedCoordinator); None keeps the single-coordinator default.
+        # ``backend`` swaps grain timing: None keeps the modeled clock
+        # (cfg.jitter applies); a measuring ExecutionBackend runs per-grain
+        # device work and each grain's duration — including the real
+        # gradient compute, folded in via observe_execute — is wall time, so
+        # cfg.jitter's modeled noise no longer applies.
         self.runtime = AsyncRuntime(
             live,
             tracker=self.tracker,
@@ -233,6 +239,8 @@ class HDPTrainer:
             steal=cfg.adaptive and cfg.homogenize,
             replan_threshold=cfg.replan_threshold,
             authority=authority,
+            eta_mode=eta_mode,
+            backend=backend,
         )
         self.runtime.clock = clock
         self.residuals = (
