@@ -37,6 +37,7 @@ from repro.kernels.autotune import (
 from repro.kernels.flash_attention.ops import mha
 from repro.kernels.mamba_scan.ops import ssd
 from repro.kernels.matmul.ops import matmul
+from repro.kernels.prefill.ops import prefill_attention
 
 try:
     from .kernel_bench import _time
@@ -150,6 +151,44 @@ def sweep_ssd(on_tpu: bool) -> dict:
                   cands, make, mode)
 
 
+def sweep_prefill(on_tpu: bool) -> list[dict]:
+    """One row per prompt-length bucket: the serving fast path jits one
+    prefill per bucket (``kernels/prefill/ops.length_bucket``), so each
+    bucket is its own registry entry and uncached first calls never fall
+    back to unbucketed shapes."""
+    rng = np.random.default_rng(3)
+    if on_tpu:
+        buckets = (512, 2048)
+        h, d = 8, 128
+        blocks = (128, 256, 512)
+        mode, kw = "compiled", {}
+    else:
+        buckets = (16, 32, 64, 128)
+        h, d = 2, 32
+        blocks = (16, 32, 64, 128)
+        mode, kw = "interpret", {"use_pallas": True, "interpret": True}
+    rows = []
+    for s in buckets:
+        default = {"block_q": min(256, s), "block_k": min(256, s)}
+        cands = [
+            {"block_q": bq, "block_k": bk}
+            for bq in blocks if bq <= s
+            for bk in blocks if bk <= s
+        ]
+        cands = [c for c in cands if c != default]
+        q = jnp.asarray(rng.standard_normal((1, s, h, d)), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((1, s, h, d)), jnp.float32)
+        v = jnp.asarray(rng.standard_normal((1, s, h, d)), jnp.float32)
+
+        def make(b, q=q, k=k, v=v):
+            return (lambda q, k, v: prefill_attention(q, k, v, **b, **kw)[0]
+                    ), (q, k, v)
+
+        rows.append(_sweep("prefill", {"sq": s, "skv": s, "d": d},
+                           default, cands, make, mode))
+    return rows
+
+
 def run_bench() -> dict:
     cache_dir = enable_compilation_cache()
     backend = jax.default_backend()
@@ -161,13 +200,22 @@ def run_bench() -> dict:
             "matmul": sweep_matmul(on_tpu),
             "mha": sweep_mha(on_tpu),
             "ssd": sweep_ssd(on_tpu),
+            "prefill": sweep_prefill(on_tpu),
         },
     }
 
 
+def _op_rows(result: dict):
+    """(op, row) pairs; an op whose sweep spans several shape buckets
+    (prefill) contributes one row per bucket."""
+    for op, rows in result["ops"].items():
+        for row in rows if isinstance(rows, list) else [rows]:
+            yield op, row
+
+
 def update_registry(result: dict) -> None:
     registry = dict(load_registry())
-    for op, row in result["ops"].items():
+    for op, row in _op_rows(result):
         key = registry_key(op, row["dims"], result["backend"])
         registry[key] = {
             "blocks": row["winner"],
@@ -187,7 +235,7 @@ def main(argv: list[str] | None = None) -> dict:
     args = ap.parse_args(argv)
 
     result = run_bench()
-    for op, row in result["ops"].items():
+    for op, row in _op_rows(result):
         print(
             f"{op:8s} [{row['mode']:11s}] default {row['default_blocks']} "
             f"{row['default_us_per_call']:10.0f} us -> winner "

@@ -23,12 +23,23 @@ A fourth measurement exercises the open-loop stack end to end:
              shed rate, goodput under deadline, and the autoscaled
              replica's share of the work.
 
+A fifth compares serving planes on identical hardware and arrivals:
+
+  disagg     the same sustained Poisson stream served twice — once by a
+             mixed-role fleet (prompts teacher-forced through the decode
+             step, one token per tick) and once by the same fleet split
+             into a prefill pool (bucketed one-call prefill) and a decode
+             pool (KV handoff insert).  Reports both p99 TTFTs, the TTFT
+             split, and handoff counts, with backend provenance.
+
 Acceptance (ISSUE 3): batched >= 2x serial tokens/sec on the same request
 set; fault quality <= 1.3.  Acceptance (ISSUE 6): the sustained entry has
 non-null p50/p99 TTFT, a nonzero shed rate under the Poisson overload, the
 autoscaled join visible in the shares, and survivor quality <= 1.3 under the
-mid-stream halve.  The fleet spec and scenario DSL strings ride into the
-JSON for traceability.  Output: ``BENCH_serve.json``.
+mid-stream halve.  Acceptance (ISSUE 9): the disagg entry beats the mixed
+baseline on p99 TTFT (``p99_ttft_speedup > 1``).  The fleet spec and
+scenario DSL strings ride into the JSON for traceability.  Output:
+``BENCH_serve.json``.
 
 Run:   PYTHONPATH=src python -m benchmarks.bench_serve
 Toy:   PYTHONPATH=src python -m benchmarks.bench_serve --requests 12 --max-new 4
@@ -149,6 +160,61 @@ def run_bench(n_requests: int, max_new: int, fleet: FleetSpec | str,
         },
         "wall_s": time.perf_counter() - t0,
     }
+
+    # Disaggregation A/B: identical hardware and identical Poisson arrivals,
+    # served by the mixed plane vs the prefill/decode-split plane.  Longer
+    # prompts than the wave benches — prompt feeding is exactly what the
+    # bucketed prefill fast path removes from the TTFT.
+    import numpy as np
+
+    from repro.serve.engine import Request
+
+    def long_prompt_pool(n: int, prompt_len: int, seed: int):
+        rng = np.random.default_rng(seed)
+        return [
+            Request(rid=i, prompt=list(rng.integers(0, vocab, prompt_len)),
+                    max_new_tokens=max_new)
+            for i in range(n)
+        ]
+
+    arrive_sc = Scenario.parse("arrive:poisson(0.6)@0-30")
+    mixed_ab = FleetSpec.parse("fast=2.0x2,d0=1.0x4,d1=1.0x4")
+    disagg_ab = FleetSpec.parse(
+        "fast=2.0x2^prefill,d0=1.0x4^decode,d1=1.0x4^decode")
+
+    def ab_run(ab_fleet):
+        pool = long_prompt_pool(120, prompt_len=24, seed=seed + 2)
+        t0 = time.perf_counter()
+        rep = Cluster(ab_fleet, priors="spec").serve(
+            job(pool, max_queue_depth=4), scenario=arrive_sc)
+        lat = rep.latency
+        entry = {
+            "fleet": str(ab_fleet),
+            "n_served": rep.metrics["n_served"],
+            "tokens_per_s": rep.throughput,
+            "p50_ttft_s": lat.p50_ttft_s,
+            "p99_ttft_s": lat.p99_ttft_s,
+            "quality": rep.homogenization_quality(),
+            "wall_s": time.perf_counter() - t0,
+        }
+        if rep.metrics.get("mode") == "disaggregated":
+            entry["ttft_split"] = rep.metrics["ttft_split"]
+            entry["role_quality"] = rep.metrics["role_quality"]
+            entry["n_handoffs"] = rep.metrics["n_handoffs"]
+        return rep, entry
+
+    rep_m, mixed_entry = ab_run(mixed_ab)
+    rep_d, disagg_entry = ab_run(disagg_ab)
+    out["disagg"] = {
+        "scenario": str(arrive_sc),
+        "prompt_len": 24,
+        "backend": rep_d.backend,
+        "mixed": mixed_entry,
+        "disaggregated": disagg_entry,
+        "p99_ttft_speedup": (
+            mixed_entry["p99_ttft_s"] / max(disagg_entry["p99_ttft_s"], 1e-12)
+        ),
+    }
     return out
 
 
@@ -182,6 +248,12 @@ def main(argv: list[str] | None = None) -> dict:
           f"shed {sus['n_shed']}/{sus['n_requests']} ({sus['shed_rate']:.1%}), "
           f"quality {sus['quality']:.2f}, "
           f"autoscaled {sus['joined_shares'] or 'none'}")
+    dg = result["disagg"]
+    print(f"disagg : p99 TTFT {dg['disaggregated']['p99_ttft_s']:.2f}s split "
+          f"vs {dg['mixed']['p99_ttft_s']:.2f}s mixed -> "
+          f"{dg['p99_ttft_speedup']:.2f}x, "
+          f"{dg['disaggregated']['n_handoffs']} handoffs "
+          f"[backend={dg['backend']}]")
     print(f"wrote {args.out}")
     return result
 

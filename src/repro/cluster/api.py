@@ -340,6 +340,15 @@ class Cluster:
                 f"Cluster.serve supports — {kind} takes fault clauses only"
             )
 
+    def _reject_roles(self, kind: str) -> None:
+        if self.fleet.has_roles:
+            raise ValueError(
+                f"fleet {self._declared_fleet!r} declares prefill/decode "
+                f"roles, which only Cluster.serve understands "
+                f"(role-disaggregated serving); {kind} needs an all-mixed "
+                "fleet — drop the '^prefill'/'^decode' suffixes"
+            )
+
     def _speedups(self, work: float, rates: Sequence[float], measured_s: float,
                   overhead=None, load: float = 0.0) -> tuple[float, float]:
         """(predicted, measured) speedup vs the best single worker, paper
@@ -360,6 +369,7 @@ class Cluster:
         ``MatmulJob``) under an optional fault ``scenario``."""
         sc = Scenario.parse(scenario)
         self._reject_workload(sc, "simulate")
+        self._reject_roles("simulate")
         if isinstance(job, int):
             job = SimJob(size=job)
         if isinstance(job, MatmulJob):
@@ -560,6 +570,7 @@ class Cluster:
 
         sc = Scenario.parse(scenario)
         self._reject_workload(sc, "train")
+        self._reject_roles("train")
         vocab = job.vocab_size or job.model.cfg.vocab_size
         measured = self._measured()
         # Training grains are uniform cost 1.0 — the backend's reference.
@@ -666,6 +677,11 @@ class Cluster:
                 "jitter: clauses don't apply to serving — engine timing is "
                 "measured (step clocks), not modeled"
             )
+        roles: dict[str, str] | None = None
+        if self.fleet.has_roles:
+            self.fleet.validate_roles()
+            self._validate_role_scenario(sc)
+            roles = {w.name: w.role for w in self.fleet.workers}
         if self._measured() and str(sc):
             raise ValueError(
                 f"scenario {str(sc)!r} is not supported with "
@@ -716,10 +732,14 @@ class Cluster:
         server = self._server
         server.max_queue_depth = job.max_queue_depth
 
-        if sc.has_workload:
+        if sc.has_workload or roles:
             # Workload clauses turn the job open-loop: requests *arrive* on
             # the scenario's schedule instead of being planned as waves.
-            return self._serve_stream(job, sc, server)
+            # Role-disaggregated fleets are open-loop-only — the wave
+            # planner has no notion of a two-stage (prefill -> decode)
+            # request, so without workload clauses the whole pool arrives
+            # at t=0 (an implicit burst).
+            return self._serve_stream(job, sc, server, roles=roles)
 
         requests = list(job.requests)
         cost = sum(len(r.prompt) + r.max_new_tokens for r in requests)
@@ -795,12 +815,48 @@ class Cluster:
             backend=self._backend_label(),
         )
 
-    def _serve_stream(self, job: ServeJob, sc: Scenario, server) -> RunReport:
+    def _validate_role_scenario(self, sc: Scenario) -> None:
+        """Fail fast on scenario/role combinations that cannot mean anything
+        coherent, instead of mid-stream RuntimeErrors or silent mixed-role
+        joins."""
+        if self._n_coordinators() > 1:
+            raise ValueError(
+                "role-disaggregated serving runs on a single coordinator: "
+                "sharded dispatch ('/cK', ckill:/partition: clauses) has no "
+                "pool-aware gossip plane yet — drop the '/cK' suffix or the "
+                "role suffixes"
+            )
+        joins = [c for c in sc.clauses if c.action == "join"]
+        if joins:
+            raise ValueError(
+                f"join: clauses cannot target a role-disaggregated fleet "
+                f"({'; '.join(str(c) for c in joins)}): a joined replica "
+                "has no role, and a mixed replica would defeat the "
+                "disaggregation — pre-provision the pool in the fleet spec "
+                "(e.g. 'fast=2^prefill*2')"
+            )
+        killed = {c.worker for c in sc.clauses if c.action == "kill"}
+        for role in ("prefill", "decode"):
+            members = set(self.fleet.role_names(role))
+            if members and members <= killed:
+                raise ValueError(
+                    f"scenario {str(sc)!r} kills every '{role}' replica "
+                    f"({sorted(members)}); a role-disaggregated stream "
+                    "cannot continue with an empty pool — keep at least one "
+                    f"'{role}' replica alive"
+                )
+
+    def _serve_stream(self, job: ServeJob, sc: Scenario, server,
+                      roles: dict[str, str] | None = None) -> RunReport:
         """Open-loop serving: materialize the scenario's workload clauses
         into concrete arrival times, stream ``job.requests`` through
         ``FleetServer.serve_stream`` (continuous admission, per-request
         latency traces, SLO autoscaling), and wrap the result as a
-        single-phase ``RunReport`` carrying ``LatencyStats``."""
+        single-phase ``RunReport`` carrying ``LatencyStats``.
+
+        ``roles`` (worker -> 'prefill'|'decode', from a roled FleetSpec)
+        switches the stream to the disaggregated plane; the report's metrics
+        then carry the TTFT split, per-role quality and handoff count."""
         from ..serve.dispatch import Replica
         from .workload import materialize_workload
 
@@ -880,6 +936,7 @@ class Cluster:
             deadline_s=job.deadline_s,
             scale_rules=sc.scale_rules,
             scale_worker=scale_worker,
+            roles=roles,
         )
 
         # Speedup compares *served* work only — shed requests cost the fleet
@@ -914,6 +971,21 @@ class Cluster:
             "p99_ttft_s": lat.p99_ttft_s,
             "goodput_rps": lat.goodput_rps,
         }
+        if roles:
+            metrics["mode"] = "disaggregated"
+            metrics["roles"] = {
+                rs.role: list(rs.workers) for rs in srep.role_stats
+            }
+            metrics["role_quality"] = {
+                rs.role: rs.quality for rs in srep.role_stats
+            }
+            metrics["role_shares"] = {
+                rs.role: dict(rs.shares) for rs in srep.role_stats
+            }
+            metrics["ttft_split"] = (
+                srep.ttft_split.as_dict() if srep.ttft_split else None
+            )
+            metrics["n_handoffs"] = srep.n_handoffs
         if self._auto_profiles:
             metrics["auto_profiles"] = dict(self._auto_profiles)
         return RunReport(

@@ -13,7 +13,7 @@ launcher flag; items are comma- or colon-separated, with an optional
 coordination-plane suffix:
 
     spec    :=  item (","|":") item ... ["/cK"]
-    item    :=  [NAME=]PERF[xCONC][@PROFILE][*COUNT]
+    item    :=  [NAME=]PERF[xCONC][@PROFILE][^ROLE][*COUNT]
 
     "2.0x8,2.0x8,1.0x4"        three workers, slot counts 8/8/4
     "8x4:4x2:2x1"              the old --replicas grammar, unchanged
@@ -21,6 +21,12 @@ coordination-plane suffix:
     "fast=8x4@dcn,edge=1x2"    named workers, per-backend profiles
     "2.0x4*3"                  three identical 2.0x4 workers
     "1.0*32/c4"                32 workers dispatched by 4 coordinator shards
+    "fast=2.0^prefill,1x4^decode"  role-disaggregated serving fleet
+
+Roles (``^prefill`` / ``^decode``; default ``mixed``) split a *serving*
+fleet into a prompt-consuming pool and a token-generating pool — see
+``repro.serve.disagg``.  A fleet must be all-mixed or fully role-split
+(at least one of each); sim/train workloads reject roled fleets.
 
 ``str(fleet)`` emits the canonical form, which parses back to an equal spec
 (the round-trip the scenario/benchmark traceability relies on) — with one
@@ -37,21 +43,24 @@ from typing import Any, Mapping, Sequence
 from ..core.homogenization import OverheadModel
 from .profiles import DEFAULT_PROFILE, get_profile
 
-__all__ = ["WorkerSpec", "FleetSpec"]
+__all__ = ["WorkerSpec", "FleetSpec", "ROLES"]
 
 _ITEM_RE = re.compile(
     r"^(?:(?P<name>[A-Za-z_][\w.-]*)=)?"      # NAME=
     r"(?P<perf>\d+(?:\.\d+)?(?:e-?\d+)?)"     # PERF
     r"(?:x(?P<conc>\d+))?"                    # xCONC
     r"(?:@(?P<profile>[A-Za-z_][\w.-]*))?"    # @PROFILE
+    r"(?:\^(?P<role>[A-Za-z]+))?"             # ^ROLE
     r"(?:\*(?P<count>\d+))?$"                 # *COUNT
 )
 
 _GRAMMAR_HINT = (
-    "expected [NAME=]PERF[xSLOTS][@PROFILE][*COUNT] "
-    "(e.g. '8x4', 'fast=8x4@dcn', '2.0*3'); items separated by ',' or ':', "
-    "optional '/cK' suffix for K coordinator shards"
+    "expected [NAME=]PERF[xSLOTS][@PROFILE][^ROLE][*COUNT] "
+    "(e.g. '8x4', 'fast=8x4@dcn', '2.0*3', '2.0^prefill'); items separated "
+    "by ',' or ':', optional '/cK' suffix for K coordinator shards"
 )
+
+ROLES = ("mixed", "prefill", "decode")
 
 _COORD_RE = re.compile(r"^c(\d+)$")
 
@@ -65,6 +74,7 @@ class WorkerSpec:
     perf: float
     concurrency: int = 1
     profile: str | None = None
+    role: str = "mixed"
     config: Mapping[str, Any] | None = None
 
     def __post_init__(self):
@@ -75,6 +85,11 @@ class WorkerSpec:
         if self.concurrency < 1:
             raise ValueError(
                 f"worker {self.name!r}: concurrency must be >= 1, got {self.concurrency}"
+            )
+        if self.role not in ROLES:
+            raise ValueError(
+                f"worker {self.name!r}: unknown role {self.role!r}; "
+                f"known roles: {list(ROLES)}"
             )
         if self.profile is not None:
             get_profile(self.profile)  # fail fast on unknown profiles
@@ -94,6 +109,8 @@ class WorkerSpec:
             s += f"x{self.concurrency}"
         if self.profile is not None:
             s += f"@{self.profile}"
+        if self.role != "mixed":
+            s += f"^{self.role}"
         return s
 
 
@@ -175,6 +192,7 @@ class FleetSpec:
                     perf=float(m["perf"]),
                     concurrency=int(m["conc"]) if m["conc"] else 1,
                     profile=m["profile"],
+                    role=m["role"] or "mixed",
                 ))
         return cls(tuple(workers), coordinators=coordinators)
 
@@ -194,7 +212,7 @@ class FleetSpec:
                 except TypeError as e:
                     raise ValueError(
                         f"bad worker dict at index {i}: {e}; known keys are "
-                        "name, perf, concurrency, profile, config"
+                        "name, perf, concurrency, profile, role, config"
                     ) from None
             elif isinstance(item, tuple) and len(item) == 2:
                 workers.append(WorkerSpec(f"{prefix}{i}", float(item[0]), int(item[1])))
@@ -222,6 +240,35 @@ class FleetSpec:
     @property
     def perfs(self) -> tuple[float, ...]:
         return tuple(w.perf for w in self.workers)
+
+    @property
+    def has_roles(self) -> bool:
+        """True when any worker is role-specialized (prefill/decode)."""
+        return any(w.role != "mixed" for w in self.workers)
+
+    def role_names(self, role: str) -> tuple[str, ...]:
+        return tuple(w.name for w in self.workers if w.role == role)
+
+    def validate_roles(self) -> None:
+        """A roled fleet must be *fully* split: at least one prefill and one
+        decode replica, and no mixed stragglers (a mixed replica would need
+        both grain classes routed to it, defeating the disaggregation)."""
+        if not self.has_roles:
+            return
+        pre, dec = self.role_names("prefill"), self.role_names("decode")
+        mixed = self.role_names("mixed")
+        if mixed:
+            raise ValueError(
+                f"role-disaggregated fleet mixes roled and mixed workers "
+                f"({list(mixed)} have no role); mark every worker "
+                f"'^prefill' or '^decode', or none"
+            )
+        if not pre or not dec:
+            raise ValueError(
+                "role-disaggregated fleet needs at least one '^prefill' AND "
+                f"one '^decode' worker; got prefill={list(pre)}, "
+                f"decode={list(dec)}"
+            )
 
     def worker(self, name: str) -> WorkerSpec:
         for w in self.workers:

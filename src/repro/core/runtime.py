@@ -161,6 +161,9 @@ class JobContext:
     new_queue: Callable[[], deque] = deque
     # Runtime-internal: workers that may need a (re)start (see run()).
     idle: set = dataclasses.field(default_factory=set)
+    # Pooled executors: worker name -> pool name (None = unpooled job).
+    # Rebalance/steal/heir decisions partition by pool when set.
+    pool_of: Callable[[str], str | None] | None = None
 
 
 class DispatchAuthority:
@@ -210,8 +213,22 @@ class DispatchAuthority:
         """Fleet-wide hysteresis-gated migration (the single-TDA default).
         ``worker`` hints which worker's completion triggered the call so a
         sharded authority can rebalance only the affected shard."""
-        rt = self.runtime
         live = ctx.live
+        if len(live) < 2:
+            return
+        if ctx.pool_of is not None:
+            # Pooled job (disaggregated roles): each pool homogenizes its own
+            # queues — grains never cross pools, so neither do migrations.
+            groups: dict[Any, list[str]] = {}
+            for w in live:
+                groups.setdefault(ctx.pool_of(w), []).append(w)
+            for group in groups.values():
+                self._rebalance_group(group, ctx)
+            return
+        self._rebalance_group(live, ctx)
+
+    def _rebalance_group(self, live: list[str], ctx: JobContext) -> None:
+        rt = self.runtime
         if len(live) < 2:
             return
         if rt.eta_mode == "recompute":
@@ -228,8 +245,13 @@ class DispatchAuthority:
                       ctx.res, etas)
 
     def steal_for(self, thief: str, ctx: JobContext) -> int:
+        queues = ctx.queues
+        if ctx.pool_of is not None:
+            pool = ctx.pool_of(thief)
+            queues = {w: q for w, q in queues.items()
+                      if ctx.pool_of(w) == pool}
         return self.runtime._steal_into(
-            thief, ctx.queues, ctx.eta, ctx.est_perf, ctx.res
+            thief, queues, ctx.eta, ctx.est_perf, ctx.res
         )
 
     # -- coordinator-plane events -------------------------------------------
@@ -389,10 +411,44 @@ class GrainExecutor:
 
     Unstarted grains stay in runtime-side queues and migrate/steal exactly as
     in the modeled path; only admitted grains are pinned to their worker.
+
+    Pooled executors
+    ----------------
+    ``pooled = True`` splits the fleet into named worker pools carrying
+    distinct grain classes (prefill/decode disaggregation): ``worker_pool``
+    names a worker's pool, ``grain_pool`` names the pool a grain must run in.
+    Admission, rebalancing, stealing and kill-heir choice all stay within a
+    pool — per-pool homogenized queues.  A pool with work but no live worker
+    is a hard error (kill of the last replica of a role), never a silent
+    deadlock.  ``followups`` lets a completed grain *defer* new grains into
+    the stream (a prefill grain completing hands off a decode grain after a
+    transfer delay); deferred grains are declared up front via ``run``'s
+    ``n_deferred`` and occupy the top grain ids.  ``shed_with`` names the
+    deferred grains that die with a shed grain so termination accounting
+    stays exact.
     """
 
     uniform_cost: float | None = 1.0
     incremental: bool = False
+    pooled: bool = False
+
+    # -- pooled seam (used only when ``pooled = True``) ----------------------
+    def worker_pool(self, name: str) -> str | None:
+        return None
+
+    def grain_pool(self, grain: int) -> str | None:
+        return None
+
+    def followups(self, grain: int, value: Any,
+                  now_s: float) -> list[tuple[int, float]]:
+        """Deferred grains triggered by ``grain``'s completion:
+        ``[(new_grain, delay_s), ...]`` arriving ``delay_s`` after now."""
+        return []
+
+    def shed_with(self, grain: int) -> list[int]:
+        """Deferred grains that can never materialize once ``grain`` is shed
+        (they are recorded shed alongside it)."""
+        return []
 
     def cost(self, grain: int) -> float:
         return 1.0 if self.uniform_cost is None else self.uniform_cost
@@ -724,6 +780,7 @@ class AsyncRuntime:
         arrivals: ArrivalSource | None = None,
         max_queue_depth: int | None = None,
         overflow: str = "queue",
+        n_deferred: int = 0,
     ) -> RuntimeResult:
         """Run one job of ``n_grains`` grains to completion.
 
@@ -750,6 +807,12 @@ class AsyncRuntime:
                           queue is full: ``'queue'`` holds it in a runtime
                           backlog, ``'shed'`` rejects it
                           (``RuntimeResult.shed``).
+        ``n_deferred``  — grains (the top ``n_deferred`` ids) that have no
+                          scheduled arrival: they enter the stream when an
+                          earlier grain's completion defers them
+                          (``executor.followups`` — the KV-handoff pattern).
+                          Deferred grains are in-progress work, so they
+                          backlog rather than shed on overflow.
         """
         if n_grains < 0:
             raise ValueError("n_grains must be >= 0")
@@ -762,9 +825,19 @@ class AsyncRuntime:
                 "arrivals and initial_plan are mutually exclusive: an "
                 "open-loop job has no up-front allotment to execute"
             )
-        if arrivals is not None and len(arrivals) != n_grains:
+        if not 0 <= n_deferred <= n_grains:
             raise ValueError(
-                f"arrivals covers {len(arrivals)} grains, job has {n_grains}"
+                f"n_deferred must be in [0, n_grains], got {n_deferred}"
+            )
+        if n_deferred and arrivals is None:
+            raise ValueError(
+                "n_deferred needs arrivals=: deferred grains extend an "
+                "open-loop stream (executor.followups injects them)"
+            )
+        if arrivals is not None and len(arrivals) != n_grains - n_deferred:
+            raise ValueError(
+                f"arrivals covers {len(arrivals)} grains, job has "
+                f"{n_grains - n_deferred} non-deferred"
             )
         if max_queue_depth is not None:
             if arrivals is None:
@@ -791,6 +864,9 @@ class AsyncRuntime:
         # The sim default keeps the exact pre-seam call sequence (no per-event
         # backend indirection): bitwise-identical results, identical hot path.
         sim_exec = type(backend) in (SimBackend, ExecutionBackend)
+        pooled = executor.pooled
+        defers = n_deferred > 0
+        n_direct = n_grains - n_deferred
 
         events = [
             dataclasses.replace(ev, time_s=ev.time_s + now) for ev in timeline
@@ -1027,6 +1103,7 @@ class AsyncRuntime:
             live=live_list, etas_under=etas_under, perf_map=perf_map,
             etas_under_view=etas_under_view,
             new_queue=make_queue, idle=idle,
+            pool_of=executor.worker_pool if pooled else None,
         )
         self.authority.begin_job(ctx)
         if not sim_exec:
@@ -1104,9 +1181,24 @@ class AsyncRuntime:
         def admit_arrival(g: int) -> str | None:
             """Join-the-homogenized-shortest-queue admission: the live worker
             with the earliest predicted drain time among those with queue
-            room, or None when every live queue is at max_queue_depth."""
+            room, or None when every live queue is at max_queue_depth.
+            Pooled jobs admit only into the grain's pool; an empty pool is a
+            hard error (the last replica of a role died), never a wait."""
+            cands = alive() if recompute else live_list
+            if pooled:
+                pool = executor.grain_pool(g)
+                if pool is not None:
+                    cands = [w for w in cands
+                             if executor.worker_pool(w) == pool]
+                    if not cands:
+                        raise RuntimeError(
+                            f"no live {pool!r} worker to admit grain {g}: "
+                            f"the {pool} pool is empty (killed its last "
+                            "replica?) — a role-disaggregated fleet needs at "
+                            "least one live worker per role"
+                        )
             room = [
-                w for w in (alive() if recompute else live_list)
+                w for w in cands
                 if max_queue_depth is None or len(queues[w]) < max_queue_depth
             ]
             if not room:
@@ -1134,6 +1226,18 @@ class AsyncRuntime:
                 # live-list order, same as scanning every live worker.
                 for w in sorted(idle, key=live_list.index):
                     start_next(w)
+            if pooled:
+                # First-fit scan: a full prefill pool must not block a
+                # backlogged decode handoff behind it (head-of-line).
+                i = 0
+                while i < len(backlog):
+                    w = admit_arrival(backlog[i])
+                    if w is None:
+                        i += 1
+                        continue
+                    del backlog[i]
+                    start_next(w)
+                return
             while backlog:
                 w = admit_arrival(backlog[0])
                 if w is None:
@@ -1163,10 +1267,19 @@ class AsyncRuntime:
                     raise RuntimeError("all workers dead with grains pending")
                 w = admit_arrival(g)
                 if w is None:
-                    if overflow == "shed":
+                    if overflow == "shed" and not (defers and g >= n_direct):
                         res.shed.append(g)
+                        if defers:
+                            # The shed grain's deferred follow-ups can never
+                            # materialize — record them shed too, or the
+                            # termination count never closes.
+                            for extra in executor.shed_with(g):
+                                res.shed.append(extra)
+                                res.arrive_s[extra] = now
                         self.authority.count_event(None, "shed", ctx)
                         continue
+                    # Deferred grains carry in-progress work (a produced KV
+                    # handoff): they backlog, never shed.
                     backlog.append(g)
                     continue
                 self.authority.count_event(w, "arrive", ctx)
@@ -1211,6 +1324,16 @@ class AsyncRuntime:
                     res.executed_by[g] = w
                     res.values[g] = val
                     res.worker_finish[w] = now
+                if defers and finished:
+                    # Completion-triggered deferred arrivals (KV handoff:
+                    # a finished prefill grain schedules its decode grain
+                    # after the modeled transfer delay).
+                    for g, val in finished:
+                        for ng, delay in executor.followups(g, val, now):
+                            heapq.heappush(
+                                heap,
+                                (now + max(delay, 0.0), 2, next(seq), ng),
+                            )
                 # Measured heartbeat: real tokens over real steps on this
                 # worker's step clock — replaces the modeled per-grain report.
                 hb = executor.heartbeat(worker, now)
@@ -1482,6 +1605,17 @@ class AsyncRuntime:
         live = ctx.live
         if not live and orphans:
             raise RuntimeError("all workers dead with grains pending")
+        if ctx.pool_of is not None:
+            # Orphans re-home within the dead worker's pool only.
+            pool = ctx.pool_of(name)
+            live = [w for w in live if ctx.pool_of(w) == pool]
+            if not live and orphans:
+                raise RuntimeError(
+                    f"killed {name!r}, the last live {pool!r} worker, with "
+                    f"{len(orphans)} {pool} grains pending — a role-"
+                    "disaggregated fleet needs at least one live worker per "
+                    "role"
+                )
         if orphans:
             heir = self.authority.heir_for(name, live, ctx)
             queues[heir].extend(orphans)

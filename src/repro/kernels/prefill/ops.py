@@ -1,0 +1,89 @@
+"""Public prefill op: GQA head handling + block dispatch + cache emission.
+
+Callers (the bucketed `DecodeEngine.prefill` fast path) pad the prompt to a
+length bucket *before* projection, so Sq here is always the bucket size —
+block sizes come from the autotune registry under the dedicated ``prefill``
+op key, which is swept over the bucket ladder by `benchmarks/bench_kernels`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..autotune import lookup
+from .prefill import prefill_flash as _prefill_call
+from .ref import prefill_ref as _prefill_ref
+
+_DEFAULT_BLOCKS = {"block_q": 256, "block_k": 256}
+
+#: Prompt-length bucket ladder: prompts are right-padded to the next power of
+#: two in [MIN_BUCKET, max_seq]; one jitted computation per rung.
+MIN_BUCKET = 16
+
+
+def length_bucket(n: int, max_seq: int) -> int:
+    """Next-power-of-two bucket for a prompt of length ``n``, clamped to
+    [MIN_BUCKET, max_seq]."""
+    if n > max_seq:
+        raise ValueError(f"prompt length {n} exceeds max_seq {max_seq}")
+    b = MIN_BUCKET
+    while b < n:
+        b *= 2
+    return min(b, max_seq)
+
+
+def prefill_attention(
+    q: jax.Array,  # (B, S, Hq, D)
+    k: jax.Array,  # (B, S, Hkv, D)
+    v: jax.Array,  # (B, S, Hkv, D)
+    *,
+    cache_dtype=None,
+    block_q: int | None = None,
+    block_k: int | None = None,
+    use_pallas: bool | None = None,
+    interpret: bool | None = None,
+):
+    """Fused causal prefill attention.  Returns
+    ``(out (B,S,Hq,D), k_cache (B,S,Hkv,D), v_cache (B,S,Hkv,D))`` with the
+    cache tensors in ``cache_dtype`` (default: input dtype).  Block sizes
+    default to the registry winner for this shape bucket under op
+    ``prefill``."""
+    b, s, hq, d = q.shape
+    hkv = k.shape[2]
+    if hq % hkv:
+        raise ValueError(f"GQA needs Hkv | Hq, got {hkv}, {hq}")
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    rep = hq // hkv
+    qf = q.transpose(0, 2, 1, 3).reshape(b * hq, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * hkv, s, d)
+    if not use_pallas:
+        out, kc, vc = _prefill_ref(
+            qf, kf, vf, cache_dtype=cache_dtype, group=rep
+        )
+    else:
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        if block_q is None or block_k is None:
+            tuned = {**_DEFAULT_BLOCKS,
+                     **lookup("prefill", {"sq": s, "skv": s, "d": d})}
+            block_q = block_q if block_q is not None else tuned["block_q"]
+            block_k = block_k if block_k is not None else tuned["block_k"]
+        bq = min(block_q, s)
+        bk = min(block_k, s)
+        while s % bq:
+            bq //= 2
+        while s % bk:
+            bk //= 2
+        cdt = None if cache_dtype is None else jnp.dtype(cache_dtype).name
+        out, kc, vc = _prefill_call(
+            qf, kf, vf, block_q=max(bq, 1), block_k=max(bk, 1),
+            cache_dtype=cdt, interpret=interpret, group=rep,
+        )
+    return (
+        out.reshape(b, hq, s, d).transpose(0, 2, 1, 3),
+        kc.reshape(b, hkv, s, d).transpose(0, 2, 1, 3),
+        vc.reshape(b, hkv, s, d).transpose(0, 2, 1, 3),
+    )

@@ -1,0 +1,163 @@
+"""Bucketed prefill Pallas kernel: causal flash attention + fused cache cast.
+
+Disaggregated serving consumes a whole prompt in one call per length bucket
+(`DecodeEngine.prefill`), so this op owns its own autotune entries — bucket
+shapes are short-and-wide (Sq == Skv == bucket, small D) rather than the 32k
+training shapes `flash_attention` is tuned for.  Two fused pieces:
+
+  1. `_prefill_kernel` — the canonical online-softmax causal flash recurrence
+     (same math as `kernels/flash_attention`, GQA-native via index_map
+     division), grid (B*Hq, Sq/bq, Skv/bk) with VMEM scratch carries.
+  2. `_cache_kernel` — materializes the KV-handoff tensors in the *cache*
+     dtype in the same pallas program, grid (B*Hkv, Skv/bk): one pass over
+     K/V emits the storage copies the decode pool will `insert()`, instead
+     of a separate XLA convert over the full cache.
+
+Prompts are padded on the *right* to the bucket length; causality guarantees
+no valid query row attends a pad key, so outputs at positions < L are exact
+(rows >= L are garbage the caller never reads — decode masks `arange(S) <=
+pos`, so garbage cache tail entries are never attended either).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _prefill_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+    n_k: int, bq: int, bk: int, scale: float,
+):
+    iq, ik = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Always causal: k-blocks strictly above the diagonal are skipped.
+    @pl.when(ik * bk <= iq * bq + bq - 1)
+    def _step():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        v = v_ref[0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(                          # (bq, bk)
+            q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        qi = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kj = ik * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(qi >= kj, s, NEG_INF)
+        m_prev = m_ref[...]                               # (bq, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                            # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                   # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _flush():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def _cache_kernel(k_ref, v_ref, kc_ref, vc_ref):
+    kc_ref[...] = k_ref[...].astype(kc_ref.dtype)
+    vc_ref[...] = v_ref[...].astype(vc_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_k", "cache_dtype", "interpret", "group"),
+)
+def prefill_flash(
+    q: jax.Array,  # (B*Hq, S, D)
+    k: jax.Array,  # (B*Hkv, S, D)   Hkv = Hq // group
+    v: jax.Array,  # (B*Hkv, S, D)
+    *,
+    block_q: int = 256,
+    block_k: int = 256,
+    cache_dtype=None,
+    interpret: bool = False,
+    group: int = 1,
+):
+    """Fused bucketed prefill: returns (out, k_cache, v_cache).
+
+    GQA-native like `flash_attention`: K/V BlockSpecs divide the grid head
+    index by ``group`` so the same K/V block feeds consecutive Q-head
+    programs without an HBM repeat.  ``cache_dtype`` (default: input dtype)
+    is the storage dtype of the emitted handoff tensors."""
+    bh, sq, d = q.shape
+    bhkv, skv, _ = k.shape
+    if bh != bhkv * group:
+        raise ValueError(f"q heads {bh} != kv heads {bhkv} * group {group}")
+    if sq != skv:
+        raise ValueError(f"prefill needs Sq == Skv, got ({sq}, {skv})")
+    bq, bk = min(block_q, sq), min(block_k, skv)
+    if sq % bq or skv % bk:
+        raise ValueError(f"seq len {sq} not divisible by ({bq},{bk})")
+    n_q, n_k = sq // bq, skv // bk
+    scale = 1.0 / (d ** 0.5)
+    kernel = functools.partial(
+        _prefill_kernel, n_k=n_k, bq=bq, bk=bk, scale=scale
+    )
+    params = {}
+    if not interpret:
+        params["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")
+        )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+        **params,
+    )(q, k, v)
+    cdt = jnp.dtype(cache_dtype) if cache_dtype is not None else k.dtype
+    if cdt == k.dtype:
+        return out, k, v
+    cparams = {}
+    if not interpret:
+        cparams["compiler_params"] = pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        )
+    kc, vc = pl.pallas_call(
+        _cache_kernel,
+        grid=(bhkv, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, j: (b, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bhkv, skv, d), cdt),
+            jax.ShapeDtypeStruct((bhkv, skv, d), cdt),
+        ],
+        interpret=interpret,
+        **cparams,
+    )(k, v)
+    return out, kc, vc

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused prefill op (attention + cache cast)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..flash_attention.ref import attention_ref
+
+
+def prefill_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, *, cache_dtype=None, group: int = 1
+):
+    """(B*Hq, S, D) x (B*Hkv, S, D) -> (out, k_cache, v_cache).
+
+    Causal attention in f32 (full logits) plus the cache-dtype K/V copies —
+    the reference for `prefill_flash`."""
+    if group > 1:
+        kr = jnp.repeat(k, group, axis=0)
+        vr = jnp.repeat(v, group, axis=0)
+    else:
+        kr, vr = k, v
+    out = attention_ref(q, kr, vr, causal=True)
+    cdt = jnp.dtype(cache_dtype) if cache_dtype is not None else k.dtype
+    return out, k.astype(cdt), v.astype(cdt)

@@ -22,6 +22,15 @@ backlog (``--overflow``), the report gains p50/p99 TTFT and goodput under
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
       --requests 256 --fleet 8x4:4x2 --overflow shed --deadline 2 \
       --scenario 'arrive:poisson(8)@0-30 burst:64@10 scale:+2@p99>0.5'
+
+Role suffixes (``^prefill``/``^decode``) in ``--fleet`` disaggregate the
+stream: prompts prefill in one bucketed call on the prefill pool, KV hands
+off to the decode pool, and the report adds the TTFT split
+(queue/prefill/handoff/decode) plus per-role homogenization quality:
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-1.5b \
+      --requests 128 --fleet 'fast=2.0^prefill,slow=1.0x4^decode' \
+      --scenario 'arrive:poisson(6)@0-20'
 """
 
 from __future__ import annotations
@@ -181,6 +190,17 @@ def main() -> None:
                  f"{lat.deadline_s:g}s deadline" if lat.deadline_s else "")
               + (f", autoscaled in {rep.metrics['joined']}"
                  if rep.metrics.get("joined") else ""))
+    if rep.metrics.get("mode") == "disaggregated":
+        split = rep.metrics["ttft_split"]
+        rq = rep.metrics["role_quality"]
+        print(f"disaggregated: {rep.metrics['n_handoffs']} KV handoffs; "
+              f"quality prefill={rq['prefill']:.2f} decode={rq['decode']:.2f}")
+        if split:
+            parts = "  ".join(
+                f"{k[:-2]}={split[k]['mean']:.3f}s"
+                for k in ("queue_s", "prefill_s", "handoff_s", "decode_s")
+            )
+            print(f"TTFT split (mean): {parts}")
     if rep.coord is not None:
         print(f"coordination plane: {rep.coord.summary()}")
     if args.json:
@@ -201,6 +221,13 @@ def main() -> None:
                 shed_rate=rep.latency.shed_rate,
                 goodput_rps=rep.latency.goodput_rps,
                 joined=list(rep.metrics.get("joined", [])),
+            )
+        if rep.metrics.get("mode") == "disaggregated":
+            payload.update(
+                ttft_split=rep.metrics["ttft_split"],
+                role_quality=rep.metrics["role_quality"],
+                role_shares=rep.metrics["role_shares"],
+                n_handoffs=rep.metrics["n_handoffs"],
             )
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=2)

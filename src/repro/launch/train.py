@@ -97,6 +97,12 @@ def main() -> None:
         return
 
     fleet = FleetSpec.parse(args.fleet, prefix="pod")
+    if fleet.has_roles:
+        raise SystemExit(
+            "--fleet role suffixes (^prefill/^decode) disaggregate a "
+            "*serving* fleet; hdp training takes an all-mixed fleet — "
+            "drop the role suffixes or use repro.launch.serve"
+        )
     if args.coordinators is not None:
         fleet = fleet.with_coordinators(args.coordinators)
     scenario = Scenario.from_arg(args.scenario, fleet.names[0])

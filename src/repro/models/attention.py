@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.flash_attention.ops import mha as flash_mha
+from ..kernels.prefill.ops import prefill_attention
 from .config import ModelConfig
 from .layers import apply_rope, dense_init, dtype_of, rms_norm
 
@@ -187,12 +188,18 @@ def attention_prefill(
     p: dict, cfg: ModelConfig, x: jax.Array, positions,
 ) -> tuple[jax.Array, KVCache]:
     """Causal attention over the prompt; returns output + KV cache (pre-rope
-    keys are *not* cached — rope is applied before caching, standard)."""
+    keys are *not* cached — rope is applied before caching, standard).
+
+    The Pallas branch uses the fused bucketed-prefill op, which also
+    materializes the cache tensors in the storage dtype in-kernel (the KV
+    handoff payload for disaggregated serving)."""
     q, k, v = _project_qkv(p, cfg, x, x, positions, positions)
     if _use_pallas(cfg):
-        out = flash_mha(q, k, v, causal=True,
-                        use_pallas=True, interpret=jax.default_backend() != "tpu")
-    elif x.shape[1] <= cfg.attn_chunk:
+        out, kc, vc = prefill_attention(
+            q, k, v, cache_dtype=dtype_of(cfg.cache_dtype or cfg.compute_dtype),
+            use_pallas=True, interpret=jax.default_backend() != "tpu")
+        return jnp.einsum("bshd,hdm->bsm", out, p["wo"]), KVCache(k=kc, v=vc)
+    if x.shape[1] <= cfg.attn_chunk:
         out = _sdpa_full(q, k, v, causal=True)
     else:
         out = _sdpa_chunked(q, k, v, causal=True, chunk=cfg.attn_chunk,

@@ -197,8 +197,13 @@ class Model:
             cross_seq=cross_seq,
         )
 
-    def prefill(self, params, batch, capacities=None):
-        """Full-prompt forward.  Returns (last-token logits, caches)."""
+    def prefill(self, params, batch, capacities=None, last_pos=None):
+        """Full-prompt forward.  Returns (last-token logits, caches).
+
+        ``last_pos`` selects which position's logits to return (default: the
+        final one).  Bucketed prefill pads prompts to a fixed length on the
+        right; causality keeps every valid position's activations exact, so
+        the true last-token logits live at ``last_pos = L - 1``, not -1."""
         cfg = self.cfg
         x, positions = self._embed(params, batch)
         cross_memory = mem_pos = None
@@ -212,7 +217,11 @@ class Model:
             causal=True, cross_memory=cross_memory, mem_positions=mem_pos,
             capacities=capacities, pattern=dec_pattern(cfg),
         )
-        x = apply_norm(cfg, params["final_norm"], x[:, -1:])
+        if last_pos is None:
+            x = x[:, -1:]
+        else:
+            x = jax.lax.dynamic_slice_in_dim(x, last_pos, 1, axis=1)
+        x = apply_norm(cfg, params["final_norm"], x)
         return lm_logits(params["embed"], x, cfg), caches
 
     def decode_step(self, params, caches, inputs, pos, capacities=None):

@@ -1,5 +1,6 @@
+from .disagg import DisaggExecutor, RoleStats, TTFTSplit
 from .dispatch import DispatchResult, HomogenizedDispatcher, Replica
-from .engine import DecodeEngine, Request
+from .engine import DecodeEngine, KVHandoff, Request
 from .executor import EngineExecutor
 from .fleet import (
     BundleStats,
@@ -11,10 +12,14 @@ from .fleet import (
 )
 
 __all__ = [
+    "DisaggExecutor",
     "DispatchResult",
     "HomogenizedDispatcher",
     "Replica",
+    "RoleStats",
+    "TTFTSplit",
     "DecodeEngine",
+    "KVHandoff",
     "Request",
     "EngineExecutor",
     "BundleStats",

@@ -32,6 +32,7 @@ from ..core.runtime import (
     SimBackend,
     TimelineEvent,
 )
+from .disagg import DisaggExecutor
 from .executor import EngineExecutor
 
 __all__ = ["Replica", "DispatchResult", "HomogenizedDispatcher"]
@@ -136,15 +137,37 @@ class HomogenizedDispatcher:
         overflow: str = "queue",
         engine_factory=None,
         on_finish=None,
-    ) -> tuple[DispatchResult, RuntimeResult, EngineExecutor]:
+        roles: dict[str, str] | None = None,
+    ) -> tuple[DispatchResult, RuntimeResult, EngineExecutor | DisaggExecutor]:
         """Open-loop real-execution path: requests *arrive* at job-relative
         times ``arrive_s[i]`` instead of being planned up front.  Each arrival
         is admitted to the min-ETA replica with queue room
         (``max_queue_depth``); saturation queues or sheds per ``overflow``
         (``RuntimeResult.shed``).  Always batched — continuous open-loop
         admission is only meaningful against live engine slots.  Returns the
-        executor too, so callers can read per-grain first-token times."""
+        executor too, so callers can read per-grain first-token times.
+
+        ``roles`` (replica name -> 'prefill'|'decode') switches the stream to
+        the disaggregated plane: each request becomes a prefill grain plus a
+        *deferred* decode grain (its KV handoff), pools are homogenized
+        independently, and arrivals are admitted prefill-first."""
         self._validate_engines(engines, engine_factory)
+        if roles:
+            executor = DisaggExecutor(engines, requests, roles,
+                                      engine_factory=engine_factory,
+                                      on_finish=on_finish)
+            executor.step_clock = self._step_clock
+            run = self.runtime.run(
+                2 * len(requests),
+                executor=executor,
+                timeline=timeline, timeline_relative=True,
+                arrivals=[float(t) for t in arrive_s],
+                n_deferred=len(requests),
+                max_queue_depth=max_queue_depth,
+                overflow=overflow,
+            )
+            self._sync_replicas()
+            return self._result(run), run, executor
         executor = EngineExecutor(engines, requests,
                                   engine_factory=engine_factory,
                                   on_finish=on_finish)

@@ -5,8 +5,15 @@ with a *per-slot position vector* — slots advance independently, so finished
 sequences are replaced by queued requests immediately (continuous batching)
 with no head-of-line blocking.  Prompts are teacher-forced through the decode
 path token-by-token, which keeps a single compiled shape per engine — the
-right trade for the CPU test harness; on TPU the same engine would take a
-prefill fast path per admitted request.
+right trade for the CPU test harness.
+
+The *bucketed prefill fast path* (``prefill``/``insert``) consumes a whole
+prompt in one jitted call instead: prompts are right-padded to a power-of-two
+length bucket (one compiled shape per bucket, block sizes from the autotune
+registry via ``kernels/prefill``), the true last-token logits sample the
+first output token, and the resulting ``KVHandoff`` — request + first token +
+batch-1 cache slice — can be ``insert()``-ed into a free slot of *any*
+engine, including a different replica (prefill/decode disaggregation).
 
 The engine reports throughput heartbeats which the homogenized dispatcher
 (dispatch.py) consumes for cross-replica scope-length allotment.
@@ -21,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.performance import PerfReport
+from ..kernels.prefill.ops import length_bucket
 from ..models.model import Model
 
 
@@ -40,6 +48,25 @@ class _Slot:
     req: Request | None = None
     pos: int = 0             # next cache index to write
     fed: int = 0             # prompt tokens already consumed
+
+
+@dataclasses.dataclass
+class KVHandoff:
+    """A completed prefill: everything a decode replica needs to continue.
+
+    ``caches`` is the batch-1 cache pytree covering positions [0, bucket);
+    ``insert`` writes it into one slot lane of the target engine's full-size
+    cache (positions beyond ``pos`` are never attended — decode masks
+    ``arange(S) <= pos``).  ``first_token`` was sampled from the true
+    last-prompt-position logits, so a handoff + decode reproduces the
+    teacher-forced token sequence."""
+
+    req: Request
+    pos: int                 # cache positions filled (= len(prompt))
+    first_token: int
+    caches: object           # batch-1 cache pytree, seq dim = bucket
+    source: str              # producing engine (provenance / debugging)
+    bucket: int
 
 
 class DecodeEngine:
@@ -64,10 +91,14 @@ class DecodeEngine:
         self.queue: list[Request] = []
         self.caches = model.init_cache(max_batch, max_seq)
         self._decode = jax.jit(model.decode_step, donate_argnums=1)
+        self._prefills: dict[int, object] = {}   # bucket -> jitted prefill
         self.steps = 0
         self.tokens_out = 0
+        self.prompt_fed = 0      # prompt tokens consumed (feed or prefill)
+        self.handoffs_in = 0     # KVHandoffs inserted into this engine
         self._hb_steps = 0
         self._hb_tokens = 0
+        self._hb_fed = 0
 
     # ----------------------------------------------------------------- admin
     def submit(self, req: Request) -> None:
@@ -110,6 +141,97 @@ class DecodeEngine:
                 return r
         return None
 
+    # --------------------------------------------------------------- prefill
+    def prefill(self, req: Request) -> KVHandoff:
+        """Consume the whole prompt in one bucketed jitted call.
+
+        One compiled shape per power-of-two length bucket: the prompt is
+        right-padded to the bucket and the true last-token logits are read at
+        ``last_pos = L - 1`` (causality keeps valid positions exact under end
+        padding).  Stateless w.r.t. the slot pool — the produced ``KVHandoff``
+        is decoded wherever it gets ``insert``-ed."""
+        L = len(req.prompt)
+        if L == 0:
+            raise ValueError("prefill needs a non-empty prompt")
+        if L + req.max_new_tokens > self.max_seq:
+            raise ValueError("request exceeds engine max_seq")
+        bucket = length_bucket(L, self.max_seq)
+        toks = np.zeros((1, bucket), np.int64)
+        toks[0, :L] = req.prompt
+        fn = self._prefills.get(bucket)
+        if fn is None:
+            model = self.model
+
+            def run(params, toks, last_pos):
+                return model.prefill(params, {"tokens": toks},
+                                     last_pos=last_pos)
+
+            fn = jax.jit(run)
+            self._prefills[bucket] = fn
+        logits, caches = fn(
+            self.params, jnp.asarray(toks, jnp.int32), jnp.int32(L - 1)
+        )
+        lg = np.asarray(logits[0, 0, : self.model.cfg.vocab_size], np.float32)
+        first = (
+            int(lg.argmax()) if self.greedy
+            else int(self.rng.choice(self.model.cfg.vocab_size))
+        )
+        self.prompt_fed += L
+        self.tokens_out += 1
+        return KVHandoff(req=req, pos=L, first_token=first, caches=caches,
+                         source=self.name, bucket=bucket)
+
+    def insert(self, handoff: KVHandoff) -> int:
+        """Continue a prefilled request on this engine.  Returns the slot
+        index, or -1 when the request finished *at* prefill (max_new_tokens
+        == 1 or first token is EOS) and no slot is needed.
+
+        Exactly-once contract: ``insert`` (re)sets ``out_tokens`` to the
+        handoff's first token, so a decode cancelled mid-stream on a killed
+        replica can re-insert the *same* handoff on the heir and decode a
+        bitwise-identical continuation — the prefill is never recomputed and
+        never double-counted."""
+        r = handoff.req
+        if len(r.prompt) + r.max_new_tokens > self.max_seq:
+            raise ValueError("request exceeds engine max_seq")
+        r.submit_step = self.steps
+        r.out_tokens = [handoff.first_token]
+        r.done = False
+        self.handoffs_in += 1
+        if r.max_new_tokens <= 1 or (
+            self.eos_id is not None and handoff.first_token == self.eos_id
+        ):
+            r.done = True
+            r.finish_step = self.steps
+            return -1
+        idx = next(
+            (i for i, s in enumerate(self.slots) if s.req is None), None
+        )
+        if idx is None:
+            raise RuntimeError(
+                f"engine {self.name!r}: no free slot for handoff insert"
+            )
+
+        def put(full, part):
+            # The batch axis is the first axis where the handoff slice is 1
+            # and the engine cache is wider; the (shorter) bucket seq axis
+            # starts at 0.  Garbage beyond `pos` is never attended.
+            starts = [0] * full.ndim
+            for a in range(full.ndim):
+                if part.shape[a] != full.shape[a] and part.shape[a] == 1:
+                    starts[a] = idx
+                    break
+            return jax.lax.dynamic_update_slice(
+                full, part.astype(full.dtype), tuple(starts)
+            )
+
+        self.caches = jax.tree_util.tree_map(put, self.caches, handoff.caches)
+        slot = self.slots[idx]
+        slot.req = r
+        slot.pos = handoff.pos
+        slot.fed = len(r.prompt)
+        return idx
+
     # ------------------------------------------------------------------ step
     def step(self) -> list[Request]:
         """Advance every active slot one token; returns finished requests.
@@ -145,6 +267,7 @@ class DecodeEngine:
             slot.pos += 1
             if slot.fed < len(r.prompt):
                 slot.fed += 1
+                self.prompt_fed += 1
                 if slot.fed < len(r.prompt):
                     continue  # still feeding prompt; no sample yet
             nxt = (
@@ -178,19 +301,26 @@ class DecodeEngine:
         return self.tokens_out / max(self.steps, 1)
 
     def heartbeat(self, now_s: float, seconds_per_step: float = 1.0) -> PerfReport | None:
-        """Tokens/sec since the last heartbeat, as a PerfReport for the
+        """Work/sec since the last heartbeat, as a PerfReport for the
         homogenized dispatcher's tracker (the paper's background process).
-        Returns None when no engine steps ran since the last call."""
+
+        Work counts *prompt tokens consumed* as well as output tokens: a
+        step spent teacher-forcing a prompt is real engine work, so a
+        mid-prompt-feed window reports the engine's true speed instead of
+        going silent (silence froze the tracker's perf estimate exactly when
+        a new bundle landed — the early-estimate distortion).  Returns None
+        when no engine steps ran since the last call."""
         steps = self.steps - self._hb_steps
-        tokens = self.tokens_out - self._hb_tokens
-        if steps <= 0 or tokens <= 0:
-            # tokens==0 happens mid-prompt-feed: a zero-throughput report
-            # would poison the tracker's perf EMA for a perfectly live engine.
+        work = (self.tokens_out - self._hb_tokens) + (
+            self.prompt_fed - self._hb_fed
+        )
+        if steps <= 0 or work <= 0:
             return None
         self._hb_steps, self._hb_tokens = self.steps, self.tokens_out
+        self._hb_fed = self.prompt_fed
         return PerfReport(
             worker=self.name,
-            work_done=float(tokens),
+            work_done=float(work),
             elapsed_s=steps * seconds_per_step,
             time_s=now_s,
         )

@@ -26,6 +26,7 @@ from typing import Sequence
 from ..core.homogenization import scope_lengths
 from ..core.runtime import TimelineEvent
 from ..core.scheduler import GrainPlan
+from .disagg import RoleStats, TTFTSplit, build_ttft_split
 from .dispatch import HomogenizedDispatcher, Replica
 
 __all__ = [
@@ -178,6 +179,10 @@ class StreamReport:
     joined: tuple[str, ...] = ()
     worker_busy: dict[str, float] = dataclasses.field(default_factory=dict)
     worker_finish: dict[str, float] = dataclasses.field(default_factory=dict)
+    # Disaggregated streams only (None/empty on mixed-role fleets):
+    ttft_split: TTFTSplit | None = None
+    role_stats: tuple[RoleStats, ...] = ()
+    n_handoffs: int = 0
 
     @property
     def shed_rate(self) -> float:
@@ -363,6 +368,7 @@ class FleetServer:
         deadline_s: float | None = None,
         scale_rules: Sequence = (),
         scale_worker=None,
+        roles: dict[str, str] | None = None,
     ) -> StreamReport:
         """Open-loop continuous serving: request ``i`` arrives ``arrive_s[i]``
         seconds into the stream and is admitted to the min-ETA replica with
@@ -379,12 +385,23 @@ class FleetServer:
         and, on breach, joins ``add`` new replicas mid-stream through the
         engine-factory path.  ``scale_worker(i)`` builds the i-th joined
         replica (default: a clone of the fastest live replica's step clock,
-        named ``scale{i}``)."""
+        named ``scale{i}``).
+
+        ``roles`` (replica name -> 'prefill'|'decode') routes the stream
+        through the disaggregated plane: requests prefill on the prefill
+        pool (bucketed one-call prefill), hand their KV off to the decode
+        pool, and the report carries the TTFT split and per-role quality."""
         requests = list(requests)
         arrive = [float(t) for t in arrive_s]
         if len(arrive) != len(requests):
             raise ValueError(
                 f"arrive_s covers {len(arrive)} requests, got {len(requests)}"
+            )
+        if roles and scale_rules:
+            raise ValueError(
+                "scale: rules cannot target a role-disaggregated fleet — a "
+                "joined replica's role is ambiguous; pre-provision the pool "
+                "in the fleet spec instead (e.g. 'fast=2^prefill*2')"
             )
         if scale_rules and self.engine_factory is None:
             raise ValueError(
@@ -444,9 +461,13 @@ class FleetServer:
                 self._factory if self.engine_factory is not None else None
             ),
             on_finish=on_finish,
+            roles=roles,
         )
 
-        shed = set(run.shed)
+        # Disaggregated streams complete on the *decode* grain (request g's
+        # completion record is grain n + g); mixed streams on grain g.
+        off = len(requests) if roles else 0
+        shed = {g for g in run.shed if g < len(requests)}
         recs = {rec.grain: rec for rec in run.records}
         traces = []
         for g, r in enumerate(requests):
@@ -455,16 +476,42 @@ class FleetServer:
                     r.rid, arrive[g], None, None, None, 0, shed=True))
                 continue
             ft = executor.first_token_s.get(g)
-            rec = recs[g]
+            rec = recs[off + g]
             traces.append(RequestTrace(
                 r.rid, arrive[g],
                 None if ft is None else ft - start,
                 rec.end_s - start,
-                run.executed_by[g],
+                run.executed_by[off + g],
                 len(r.out_tokens),
             ))
         tokens = sum(t.tokens for t in traces)
         stream_start = run.end_s - run.makespan
+
+        ttft_split: TTFTSplit | None = None
+        role_stats: tuple[RoleStats, ...] = ()
+        n_handoffs = 0
+        if roles:
+            rel_arrive = [start + a for a in arrive]
+            finish = {g: recs[off + g].end_s for g in range(len(requests))
+                      if off + g in recs}
+            ttft_split = build_ttft_split(executor, rel_arrive, finish)
+            counts = run.shares()
+            role_stats = tuple(
+                RoleStats(
+                    role=role,
+                    workers=tuple(members),
+                    quality=run.homogenization_quality(
+                        [w for w in members if w not in run.dead_workers]
+                    ),
+                    shares={w: counts.get(w, 0) for w in members},
+                )
+                for role, members in (
+                    (rl, sorted(w for w, r in roles.items() if r == rl))
+                    for rl in ("prefill", "decode")
+                )
+            )
+            n_handoffs = executor.n_handoffs
+
         return StreamReport(
             n_requests=len(requests),
             n_served=len(requests) - len(shed),
@@ -483,6 +530,9 @@ class FleetServer:
             worker_finish={
                 w: f - stream_start for w, f in run.worker_finish.items()
             },
+            ttft_split=ttft_split,
+            role_stats=role_stats,
+            n_handoffs=n_handoffs,
         )
 
     # -- fleet management (between waves) ------------------------------------

@@ -9,12 +9,19 @@ run in milliseconds in tier-1.  Shared by ``test_fleet.py`` and
 
 import dataclasses
 
-from repro.serve import Request
+from repro.serve import KVHandoff, Request
 
 
 def stub_token(rid: int, k: int) -> int:
     """Deterministic 'decode': token k of request rid."""
     return (rid * 31 + k * 7) % 97
+
+
+def _stub_bucket(n: int, max_seq: int) -> int:
+    b = 16
+    while b < n:
+        b *= 2
+    return min(b, max_seq)
 
 
 @dataclasses.dataclass
@@ -37,8 +44,11 @@ class StubEngine:
         self.queue: list[Request] = []
         self.steps = 0
         self.tokens_out = 0
+        self.prompt_fed = 0
+        self.handoffs_in = 0
         self._hb_steps = 0
         self._hb_tokens = 0
+        self._hb_fed = 0
 
     def submit(self, req: Request) -> None:
         if len(req.prompt) + req.max_new_tokens > self.max_seq:
@@ -70,6 +80,7 @@ class StubEngine:
             slot.pos += 1
             if slot.fed < len(r.prompt):
                 slot.fed += 1
+                self.prompt_fed += 1
                 if slot.fed < len(r.prompt):
                     continue
             r.out_tokens.append(stub_token(r.rid, len(r.out_tokens)))
@@ -105,15 +116,59 @@ class StubEngine:
                 return r
         return None
 
+    def prefill(self, req: Request) -> KVHandoff:
+        """Stub bucketed prefill: whole prompt in 'one call', first token is
+        ``stub_token(rid, 0)`` — same as the teacher-forced first sample."""
+        L = len(req.prompt)
+        if L == 0:
+            raise ValueError("prefill needs a non-empty prompt")
+        if L + req.max_new_tokens > self.max_seq:
+            raise ValueError("request exceeds engine max_seq")
+        self.prompt_fed += L
+        self.tokens_out += 1
+        return KVHandoff(
+            req=req, pos=L, first_token=stub_token(req.rid, 0),
+            caches={"stub": req.rid}, source=self.name,
+            bucket=_stub_bucket(L, self.max_seq),
+        )
+
+    def insert(self, handoff: KVHandoff) -> int:
+        r = handoff.req
+        if len(r.prompt) + r.max_new_tokens > self.max_seq:
+            raise ValueError("request exceeds engine max_seq")
+        r.submit_step = self.steps
+        r.out_tokens = [handoff.first_token]
+        r.done = False
+        self.handoffs_in += 1
+        if r.max_new_tokens <= 1:
+            r.done = True
+            r.finish_step = self.steps
+            return -1
+        idx = next(
+            (i for i, s in enumerate(self.slots) if s.req is None), None
+        )
+        if idx is None:
+            raise RuntimeError(
+                f"engine {self.name!r}: no free slot for handoff insert"
+            )
+        slot = self.slots[idx]
+        slot.req = r
+        slot.pos = handoff.pos
+        slot.fed = len(r.prompt)
+        return idx
+
     def heartbeat(self, now_s, seconds_per_step=1.0):
         from repro.core import PerfReport
 
         steps = self.steps - self._hb_steps
-        tokens = self.tokens_out - self._hb_tokens
-        if steps <= 0 or tokens <= 0:
+        work = (self.tokens_out - self._hb_tokens) + (
+            self.prompt_fed - self._hb_fed
+        )
+        if steps <= 0 or work <= 0:
             return None
         self._hb_steps, self._hb_tokens = self.steps, self.tokens_out
-        return PerfReport(self.name, float(tokens), steps * seconds_per_step,
+        self._hb_fed = self.prompt_fed
+        return PerfReport(self.name, float(work), steps * seconds_per_step,
                           now_s)
 
 

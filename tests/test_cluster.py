@@ -535,3 +535,43 @@ def test_cluster_same_spec_and_scenario_drive_sim_and_serve():
     assert sim.scenario == srv.scenario == "halve:a@25%"
     assert {p.label for p in sim.phases} == {"job"}
     assert {p.label for p in srv.phases} == {"wave"}
+
+
+# ========================================================== roles (disagg)
+ROLED = "pf0=2.0^prefill,dc0=1.0x4^decode,dc1=1.0x4^decode"
+
+
+def test_roled_fleet_rejected_outside_serve():
+    with pytest.raises(ValueError, match="only Cluster.serve"):
+        Cluster(ROLED).simulate(SimJob(size=10))
+    with pytest.raises(ValueError, match="only Cluster.serve"):
+        Cluster(ROLED).train(None)
+
+
+def test_roled_fleet_pool_composition_validated():
+    with pytest.raises(ValueError, match="mixes roled and mixed"):
+        Cluster("a=1^prefill,b=1").serve(
+            ServeJob(mk_requests(2), engine_factory=stub_factory))
+    with pytest.raises(ValueError, match="at least one"):
+        Cluster("a=1^prefill,b=1^prefill").serve(
+            ServeJob(mk_requests(2), engine_factory=stub_factory))
+
+
+def test_roled_fleet_scenario_interactions_rejected():
+    def serve(fleet, sc=None, n=2):
+        return Cluster(fleet).serve(
+            ServeJob(mk_requests(n), engine_factory=stub_factory),
+            scenario=sc)
+
+    # a joined replica has no role -> joins are ambiguous on a roled fleet
+    with pytest.raises(ValueError, match="joined replica"):
+        serve(ROLED, "join:new=1x2@1")
+    # scale: rules join replicas too, just reactively
+    with pytest.raises(ValueError, match="scale: rules cannot target"):
+        serve(ROLED, "arrive:poisson(4)@0-5;scale:+1@p99>0.1", n=30)
+    # killing a whole role would deadlock the stream: fail fast, statically
+    with pytest.raises(ValueError, match="kills every"):
+        serve(ROLED, "kill:dc0@1;kill:dc1@2")
+    # sharded dispatch has no pool-aware plane yet
+    with pytest.raises(ValueError, match="single coordinator"):
+        serve(ROLED + "/c2")

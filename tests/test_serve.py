@@ -228,28 +228,34 @@ def test_engine_heartbeat_reports_throughput():
     eng.run_until_drained()
     hb = eng.heartbeat(1.0)
     assert hb is not None and hb.worker == "e0"
-    assert hb.throughput == pytest.approx(eng.throughput)
+    # work counts prompt tokens consumed as well as output tokens
+    assert hb.throughput == pytest.approx(
+        (eng.tokens_out + eng.prompt_fed) / eng.steps)
     assert eng.heartbeat(2.0) is None          # nothing new since last report
 
 
-def test_engine_heartbeat_none_mid_prompt_feed_no_ema_poison():
-    """Steps that only consumed prompt tokens produce no output yet; the
-    heartbeat must return None (a zero-throughput report would poison the
-    tracker's EMA for a live engine) *without* resetting its counters, so
-    the next report still covers the prompt-feed steps."""
+def test_engine_heartbeat_counts_prompt_feed_no_ema_distortion():
+    """Steps that only consumed prompt tokens are real engine work: the
+    heartbeat reports them at the engine's true speed instead of going
+    silent (silence froze the tracker's perf estimate exactly when a new
+    bundle landed — the early-estimate distortion) and the follow-up report
+    covers only the interval since."""
     model, params = tiny_model()
     eng = DecodeEngine(model, params, max_batch=1, max_seq=32, name="e0")
     eng.submit(Request(rid=0, prompt=[3, 14, 15, 9, 2], max_new_tokens=3))
     eng.step()
     eng.step()                                 # 2 steps in, still mid-prompt
     assert eng.tokens_out == 0 and eng.steps == 2
-    assert eng.heartbeat(1.0) is None          # no tokens yet: no report
+    fed = eng.prompt_fed
+    hb = eng.heartbeat(1.0)
+    assert hb is not None and fed > 0
+    assert hb.work_done == float(fed)
     eng.run_until_drained()
     hb = eng.heartbeat(2.0, seconds_per_step=0.5)
     assert hb is not None
-    # the None report did not consume the interval: all steps are covered
-    assert hb.work_done == float(eng.tokens_out) == 3.0
-    assert hb.elapsed_s == pytest.approx(eng.steps * 0.5)
+    # only the new interval: the mid-prompt report consumed its steps
+    assert hb.work_done == float(eng.tokens_out + eng.prompt_fed - fed)
+    assert hb.elapsed_s == pytest.approx((eng.steps - 2) * 0.5)
 
 
 def test_engine_cancel_resets_decode_state():
