@@ -6,8 +6,12 @@ optimizes — how many dispatch events (completions, ticks, gossip rounds,
 timeline changes) the coordinator loop retires per host-second when the
 executor is a stub (``SimJob`` carries no real compute, every grain is
 timing-only).  Fleet sizes are kept small so the bench doubles as the CI
-``loop-smoke`` gate: a >30% events/sec regression against the committed
-``BENCH_loop.json`` fails the build (``--check``).
+``loop-smoke`` gate: a >15% events/sec regression against the committed
+``BENCH_loop.json`` fails the build (``--check``); ``--assert-noise``
+tightens that to 3% (the obs-plane acceptance bar: the untraced path must
+stay within measurement noise of the pre-obs baseline).  Every run also
+does a traced lap per K and asserts its ``sim_time_s`` is bitwise-identical
+to the untraced run — tracing observes decisions, never makes them.
 
 Each K also gets a same-machine reference wall from the retained
 ``eta_mode='recompute'`` path (the pre-fast-path hot loop, bitwise-identical
@@ -39,7 +43,11 @@ DEFAULT_JOBS = 3
 DEFAULT_KS = (1, 2, 4)
 #: CI regression tolerance: fail if events/sec drops below this fraction of
 #: the committed baseline.
-CHECK_FLOOR = 0.7
+CHECK_FLOOR = 0.85
+#: Tracing-noise tolerance (``--assert-noise``): the *untraced* path must
+#: stay within 3% of the committed baseline — the obs plane's one-branch
+#: guard is asserted to cost nothing, not hoped to.
+NOISE_FLOOR = 0.97
 
 
 def fleet_for(n_workers: int, coordinators: int) -> FleetSpec:
@@ -49,15 +57,19 @@ def fleet_for(n_workers: int, coordinators: int) -> FleetSpec:
 
 
 def run_k(k: int, *, n_workers: int, n_grains: int, n_jobs: int,
-          eta_mode: str = "incremental", repeats: int = 3) -> dict:
+          eta_mode: str = "incremental", repeats: int = 3,
+          trace: bool = False) -> dict:
     """Best-of-``repeats`` pure-dispatch run at K shards (best-of damps
     scheduler noise without inflating the rate the way a mean of warm+cold
-    laps would)."""
+    laps would).  ``trace=True`` attaches an obs.Tracer — the traced lap
+    must produce a bitwise-identical sim_time_s (checked by run_bench)."""
     best = None
     for _ in range(repeats):
         fleet = fleet_for(n_workers, k)
+        from repro.obs import Tracer
         cluster = Cluster(fleet, priors="spec",
-                          coord=CoordSpec(coordinators=k))
+                          coord=CoordSpec(coordinators=k),
+                          trace=Tracer() if trace else None)
         saved = os.environ.get("REPRO_ETA_MODE")
         os.environ["REPRO_ETA_MODE"] = eta_mode
         try:
@@ -78,13 +90,15 @@ def run_k(k: int, *, n_workers: int, n_grains: int, n_jobs: int,
             "events_per_s": total / wall_s if wall_s > 0 else 0.0,
             "sim_time_s": rep.sim_time_s,
         }
+        if trace:
+            r["n_trace_events"] = len(cluster.tracer.events)
         if best is None or r["events_per_s"] > best["events_per_s"]:
             best = r
     return best
 
 
 def run_bench(n_workers: int, n_grains: int, n_jobs: int,
-              ks=DEFAULT_KS) -> dict:
+              ks=DEFAULT_KS, repeats: int = 3) -> dict:
     out = {
         "config": {
             "n_workers": n_workers, "n_grains": n_grains, "n_jobs": n_jobs,
@@ -93,7 +107,8 @@ def run_bench(n_workers: int, n_grains: int, n_jobs: int,
         "scaling": {},
     }
     for k in ks:
-        r = run_k(k, n_workers=n_workers, n_grains=n_grains, n_jobs=n_jobs)
+        r = run_k(k, n_workers=n_workers, n_grains=n_grains, n_jobs=n_jobs,
+                  repeats=repeats)
         ref = run_k(k, n_workers=n_workers, n_grains=n_grains,
                     n_jobs=n_jobs, eta_mode="recompute")
         if ref["sim_time_s"] != r["sim_time_s"]:
@@ -106,12 +121,28 @@ def run_bench(n_workers: int, n_grains: int, n_jobs: int,
             r["events_per_s"] / ref["events_per_s"]
             if ref["events_per_s"] > 0 else 0.0
         )
+        # Traced A/B: tracing on must not change a single scheduling
+        # decision — sim_time_s is bitwise-compared, not band-compared.
+        tr = run_k(k, n_workers=n_workers, n_grains=n_grains,
+                   n_jobs=n_jobs, repeats=1, trace=True)
+        if tr["sim_time_s"] != r["sim_time_s"]:
+            raise AssertionError(
+                f"K={k}: traced run diverged "
+                f"(sim {tr['sim_time_s']} vs {r['sim_time_s']})"
+            )
+        r["traced_events_per_s"] = tr["events_per_s"]
+        r["n_trace_events"] = tr["n_trace_events"]
+        r["trace_overhead"] = (
+            r["events_per_s"] / tr["events_per_s"]
+            if tr["events_per_s"] > 0 else 0.0
+        )
         out["scaling"][str(k)] = r
     return out
 
 
-def check(result: dict, baseline_path: str) -> list[str]:
-    """CI gate: events/sec per K must stay within ``CHECK_FLOOR`` of the
+def check(result: dict, baseline_path: str,
+          floor: float = CHECK_FLOOR) -> list[str]:
+    """CI gate: events/sec per K must stay within ``floor`` of the
     committed baseline (same config, same machine class)."""
     with open(baseline_path) as f:
         baseline = json.load(f)
@@ -127,11 +158,10 @@ def check(result: dict, baseline_path: str) -> list[str]:
         if cur is None:
             errors.append(f"K={k} missing from current run")
             continue
-        floor = CHECK_FLOOR * base["events_per_s"]
-        if cur["events_per_s"] < floor:
+        if cur["events_per_s"] < floor * base["events_per_s"]:
             errors.append(
-                f"K={k}: {cur['events_per_s']:.0f} ev/s < 70% of baseline "
-                f"{base['events_per_s']:.0f} ev/s"
+                f"K={k}: {cur['events_per_s']:.0f} ev/s < {floor:.0%} of "
+                f"baseline {base['events_per_s']:.0f} ev/s"
             )
     return errors
 
@@ -144,23 +174,36 @@ def main(argv: list[str] | None = None) -> dict:
     ap.add_argument("--out", default="BENCH_loop.json")
     ap.add_argument("--check", metavar="BASELINE",
                     help="compare against a committed BENCH_loop.json "
-                         "instead of writing one; exit 1 on >30% regression")
+                         "instead of writing one; exit 1 on >15% regression")
+    ap.add_argument("--assert-noise", metavar="BASELINE",
+                    help="strict obs-plane acceptance gate: exit 1 if the "
+                         "untraced path regresses >3% vs the committed "
+                         "baseline (run on the machine class that wrote it)")
     args = ap.parse_args(argv)
 
-    result = run_bench(args.workers, args.grains, args.jobs)
+    # A 3% bar needs a stabler best-of than the default 3 laps: scheduler
+    # noise alone spans that band, so the noise gate takes more samples.
+    result = run_bench(args.workers, args.grains, args.jobs,
+                       repeats=8 if args.assert_noise else 3)
     for k, r in result["scaling"].items():
         print(
             f"K={k}: {r['events_per_s']:10.0f} ev/s "
             f"({r['total_events']} events in {r['wall_s']:.3f}s), "
-            f"{r['speedup_vs_reference']:.2f}x vs recompute reference"
+            f"{r['speedup_vs_reference']:.2f}x vs recompute reference, "
+            f"trace overhead {r['trace_overhead']:.2f}x "
+            f"({r['n_trace_events']} events, bitwise-identical)"
         )
-    if args.check:
-        errors = check(result, args.check)
+    if args.check or args.assert_noise:
+        errors = []
+        if args.check:
+            errors += check(result, args.check)
+        if args.assert_noise:
+            errors += check(result, args.assert_noise, floor=NOISE_FLOOR)
         for e in errors:
             print(f"LOOP-SMOKE FAIL: {e}", file=sys.stderr)
         if errors:
             sys.exit(1)
-        print(f"loop-smoke OK vs {args.check}")
+        print(f"loop-smoke OK vs {args.check or args.assert_noise}")
     else:
         write_bench_json(args.out, result)
         print(f"wrote {args.out}")

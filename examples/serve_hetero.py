@@ -19,12 +19,19 @@ unstarted requests off the degraded replica and holds the homogenization line
 greedy decode.
 
 Run:  PYTHONPATH=src python examples/serve_hetero.py
+      PYTHONPATH=src python examples/serve_hetero.py --trace serve.json
+      # then open serve.json at https://ui.perfetto.dev — the adaptive run's
+      # track view shows requests flowing off the halved r-fast replica as
+      # migration arrows (flow events) onto r-mid/r-slow.
 """
+
+import argparse
 
 import jax
 
 from repro.cluster import Cluster, FleetSpec, ServeJob
 from repro.models import LayerSpec, Model, ModelConfig
+from repro.obs import Tracer
 from repro.serve import DecodeEngine, Request
 
 FLEET = FleetSpec.parse("r-fast=8x4,r-mid=4x2,r-slow=2x1")
@@ -51,6 +58,12 @@ def mk_requests(n, max_new=6):
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write the Part 3 adaptive run's grain-lifecycle "
+                         "trace as Perfetto trace_event JSON (or JSONL when "
+                         "PATH ends in .jsonl)")
+    args = ap.parse_args()
     model, params = demo_model()
 
     # ---------------- Part 1: continuous batching on a real engine ----------
@@ -90,9 +103,13 @@ def main() -> None:
     # -------- Part 3: mid-bundle degradation, adaptive vs static ------------
     print("\n== r-fast's step clock halves mid-bundle (48 requests) ==")
     results = {}
+    tracer = Tracer() if args.trace else None
     for label, homogenize in (("async runtime", True),
                               ("equal-split static", False)):
-        cluster = Cluster(FLEET, homogenize=homogenize)
+        # Only the adaptive run is traced: its Perfetto view is the demo —
+        # migration flow arrows carrying requests off the halved r-fast.
+        cluster = Cluster(FLEET, homogenize=homogenize,
+                          trace=tracer if homogenize else None)
         cluster.serve(job(mk_requests(48), max_queue_depth=32))  # warm wave
         reqs = mk_requests(48)
         rep = cluster.serve(job(reqs, max_queue_depth=32),
@@ -108,6 +125,13 @@ def main() -> None:
     print(f"re-homogenization holds the line: quality {sta:.2f} -> {ada:.2f}")
     assert ada <= 1.3
     assert ada < sta
+    if tracer is not None:
+        n_moves = sum(1 for e in tracer.events
+                      if e.kind in ("migrate", "steal") and e.worker == "r-fast")
+        n = tracer.export(args.trace)
+        print(f"wrote {n} trace events to {args.trace} "
+              f"({n_moves} requests moved off r-fast; open at "
+              f"https://ui.perfetto.dev)")
 
 
 if __name__ == "__main__":

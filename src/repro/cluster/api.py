@@ -40,7 +40,13 @@ Construction knobs (all fleet-wide):
                   (single coordinator when absent).  Scenario clauses
                   ``ckill``/``partition``/``heal`` script coordinator faults,
                   and ``RunReport.coord`` carries the per-shard event counts,
-                  gossip-staleness and dispatch-throughput stats.
+                  gossip-staleness and dispatch-throughput stats,
+  ``trace``       an ``obs.Tracer`` (or ``True`` for a default one) records
+                  grain-lifecycle/coordinator/gossip/serve events across
+                  every run this Cluster executes; ``tracer.export(path)``
+                  writes Perfetto or JSONL, and ``RunReport.telemetry``
+                  carries the metrics rollup.  None (default) keeps the
+                  untraced path bitwise-identical and overhead-free.
 
 A ``Cluster`` is long-lived: repeated ``.simulate``/``.serve`` calls reuse
 the same runtime/fleet-server, so learned perf state persists across calls
@@ -59,6 +65,7 @@ from ..core.homogenization import OverheadModel, predicted_speedup, scope_length
 from ..core.performance import PerformanceTracker
 from ..core.runtime import AsyncRuntime, ExecutionBackend, SimBackend, SimWorker
 from ..core.simulate import ClusterSim
+from ..obs import Tracer
 from .profiles import DEFAULT_PROFILE, select_profile
 from .report import PhaseStats, RunReport, merge_worker_timelines
 from .scenario import Scenario
@@ -152,6 +159,7 @@ class Cluster:
         coord: CoordSpec | int | None = None,
         backend: str | ExecutionBackend = "sim",
         eta_mode: str | None = None,
+        trace: Tracer | bool | None = None,
     ):
         self.fleet = FleetSpec.parse(fleet, prefix=name_prefix)
         # Reports trace back to the *declared* spec (auto-selected backend
@@ -184,6 +192,19 @@ class Cluster:
             )
         self.backend = backend
         self.eta_mode = eta_mode
+        # Observability: a shared obs.Tracer threaded into every workload
+        # runtime this Cluster builds.  ``trace=True`` constructs a default
+        # one; None keeps the zero-overhead untraced path (the runtimes
+        # never even branch into emit sites).  Long-lived like the tracker:
+        # repeated simulate/train/serve calls append to the same event log.
+        if trace is True:
+            trace = Tracer()
+        elif trace is not None and not isinstance(trace, Tracer):
+            raise TypeError(
+                f"trace must be an obs.Tracer, True (build a default one) "
+                f"or None, got {type(trace).__name__}"
+            )
+        self.tracer: Tracer | None = trace or None
         self.homogenize = homogenize
         self.adaptive = adaptive
         self.priors = priors
@@ -273,6 +294,11 @@ class Cluster:
     @staticmethod
     def _coord_stats(runtime):
         return runtime.authority.stats()
+
+    def _telemetry(self):
+        """RunReport.telemetry payload: the tracer's metrics rollup (None
+        when this Cluster is untraced, keeping reports byte-identical)."""
+        return self.tracer.telemetry() if self.tracer is not None else None
 
     def _autoselect_profiles(self, tracker: PerformanceTracker,
                              per_slot: bool = False) -> dict[str, str]:
@@ -398,6 +424,7 @@ class Cluster:
                 authority=self._new_authority(),
                 eta_mode=self.eta_mode,
                 backend=self._new_backend(),
+                tracer=self.tracer,
             )
             self._sim_rng = np.random.default_rng(self.seed)
         rt = self._sim_rt
@@ -467,7 +494,7 @@ class Cluster:
             predicted_speedup=pred, measured_speedup=meas,
             worker_timelines=merge_worker_timelines(spans),
             metrics=metrics, coord=self._coord_stats(rt),
-            backend=self._backend_label(),
+            backend=self._backend_label(), telemetry=self._telemetry(),
         )
 
     def _simulate_matmul(self, job: MatmulJob, sc: Scenario) -> RunReport:
@@ -503,6 +530,10 @@ class Cluster:
                 jitter=sc.jitter, seed=self.seed,
             ), authority=self._new_authority(),
                 backend=self._new_backend(), eta_mode=self.eta_mode)
+            # ThinClient's constructor predates the obs plane; attach the
+            # tracer to its runtime directly (same seam, same zero-overhead
+            # guard when None).
+            client.runtime.tracer = self.tracer
             client.runtime.rehomogenize = self._rehomogenize
             client.runtime.steal = self._rehomogenize
             client.runtime.replan_threshold = self.replan_threshold
@@ -555,7 +586,7 @@ class Cluster:
             throughput=work / max(total_s, _EPS),
             worker_timelines=merge_worker_timelines(spans),
             metrics=metrics, artifact=out, coord=self._coord_stats(client.runtime),
-            backend=self._backend_label(),
+            backend=self._backend_label(), telemetry=self._telemetry(),
         )
 
     # ================================================================= train
@@ -598,6 +629,7 @@ class Cluster:
             cfg, opt_cfg=job.opt, authority=self._new_authority(),
             backend=self._new_backend(), eta_mode=self.eta_mode,
         )
+        trainer.runtime.tracer = self.tracer
         if self.priors == "spec":
             self._spec_priors(trainer.tracker, now_s=trainer.clock,
                               scale=scale)
@@ -658,7 +690,7 @@ class Cluster:
             worker_timelines=merge_worker_timelines(spans),
             metrics=metrics,
             artifact=trainer, coord=self._coord_stats(trainer.runtime),
-            backend=self._backend_label(),
+            backend=self._backend_label(), telemetry=self._telemetry(),
         )
 
     # ================================================================= serve
@@ -722,6 +754,7 @@ class Cluster:
                 authority=self._new_authority(),
                 backend=self._new_backend(),
                 eta_mode=self.eta_mode,
+                tracer=self.tracer,
             )
             server.dispatcher.runtime.rehomogenize = self._rehomogenize
             server.dispatcher.runtime.steal = self._rehomogenize
@@ -812,7 +845,7 @@ class Cluster:
             metrics=metrics,
             artifact=requests, coord=self._coord_stats(
                 server.dispatcher.runtime),
-            backend=self._backend_label(),
+            backend=self._backend_label(), telemetry=self._telemetry(),
         )
 
     def _validate_role_scenario(self, sc: Scenario) -> None:
@@ -997,6 +1030,7 @@ class Cluster:
             metrics=metrics, artifact=used,
             coord=self._coord_stats(server.dispatcher.runtime),
             latency=lat, backend=self._backend_label(),
+            telemetry=self._telemetry(),
         )
 
     # -- serve internals -----------------------------------------------------

@@ -73,6 +73,11 @@ class RunReport:
     # or "wallclock[<n>d]" (measured on <n> real devices) — keeps BENCH_*.json
     # entries from the two backends from being conflated.
     backend: str = "sim"
+    # obs.Tracer rollup when the run was traced (``Cluster(trace=...)``):
+    # ``{"counters": ..., "gauges": ..., "histograms": ..., "n_events": N}``
+    # with deterministic key order.  None when tracing was off — the
+    # default keeps untraced reports byte-identical to pre-obs builds.
+    telemetry: Any = None
 
     # -- the uniform questions ----------------------------------------------
     def shares(self) -> dict[str, int]:

@@ -136,6 +136,10 @@ class GossipBus:
         self.messages_by_shard: dict[int, int] = {
             s: 0 for s in range(n_shards)
         }
+        #: Optional per-round observer (the tracing plane): called after each
+        #: round as ``hook(round_idx, n_live, d_messages, d_merged,
+        #: d_suppressed)``.  None (the default) costs one load per round.
+        self.trace_hook = None
 
     #: Catch-up bound per advance() call: a mis-estimated (too small) period
     #: degrades to at most this many rounds between events instead of
@@ -172,7 +176,12 @@ class GossipBus:
         n = len(order)
         self.round_idx += 1
         self.n_rounds += 1
+        hook = self.trace_hook
+        if hook is not None:
+            m0, g0, s0 = self.n_messages, self.n_merged, self.n_suppressed
         if n < 2:
+            if hook is not None:
+                hook(self.round_idx, n, 0, 0, 0)
             return
         n_offsets = max(1, math.ceil(math.log2(n)))
         for j in range(self.fanout):
@@ -190,6 +199,9 @@ class GossipBus:
                 self.n_messages += 2
                 self.messages_by_shard[i] += 1
                 self.messages_by_shard[peer] += 1
+        if hook is not None:
+            hook(self.round_idx, n, self.n_messages - m0,
+                 self.n_merged - g0, self.n_suppressed - s0)
 
     def rounds_to_converge(self, n_live: int) -> int:
         """The dissemination bound: full convergence within this many rounds

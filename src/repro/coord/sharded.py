@@ -222,6 +222,24 @@ class ShardedCoordinator(DispatchAuthority):
             if est > 0:
                 self.bus.period_s = est / 16.0
         self.bus.next_round_s = now + self.bus.period_s
+        tracer = self.runtime.tracer
+        if tracer is None:
+            self.bus.trace_hook = None
+        else:
+            bus = self.bus
+
+            def _on_round(round_idx: int, n_live: int, d_msgs: int,
+                          d_merged: int, d_supp: int) -> None:
+                # Staleness *at merge*: how far the freshest-lagging live
+                # view trails the owners' latest observations right now.
+                tracer.emit(
+                    "gossip", round_idx=round_idx, n_live=n_live,
+                    fanout=bus.fanout, messages=d_msgs, merged=d_merged,
+                    suppressed=d_supp,
+                    staleness_max_s=self._staleness_max_now(),
+                )
+
+            bus.trace_hook = _on_round
 
     def advance(self, now_s: float, ctx: JobContext) -> None:
         # Called before *every* event: bail without touching the bus unless a
@@ -239,6 +257,23 @@ class ShardedCoordinator(DispatchAuthority):
             # nothing.
             for s, n in self.bus.messages_by_shard.items():
                 self.events_per_shard[s] += n - before.get(s, 0)
+
+    def _staleness_max_now(self) -> float:
+        """Worst lag of any live shard's view behind the owner-side truth —
+        the per-round sample the gossip trace events carry.  Only called
+        when tracing is on (O(shards x workers))."""
+        tracker = self.runtime.tracker
+        worst = 0.0
+        for s in sorted(self.alive):
+            view = self.bus.views[s]
+            for w in self.runtime.workers:
+                truth = tracker.last_report_s(w)
+                if truth is None:
+                    continue
+                lag = view.staleness(w, truth)
+                if lag is not None and lag > worst:
+                    worst = lag
+        return worst
 
     def end_job(self, ctx: JobContext) -> None:
         # Staleness of every live shard's view of every live worker, against
@@ -367,6 +402,10 @@ class ShardedCoordinator(DispatchAuthority):
         self.events_per_shard[s] += 1
         self.events_per_shard[t] += 1
         self.cross_steals += 1
+        tracer = self.runtime.tracer
+        if tracer is not None:
+            tracer.emit("cross_steal", worker=victim, to=thief,
+                        shard=t, thief_shard=s, take=take)
         return take
 
     def heir_for(self, name: str, live: list[str], ctx: JobContext) -> str:
@@ -427,6 +466,10 @@ class ShardedCoordinator(DispatchAuthority):
         # fresh heartbeats re-teach it within an EMA window.
         self.takeovers += 1
         self.events_per_shard[successor] += 1 + len(adopted)
+        tracer = self.runtime.tracer
+        if tracer is not None:
+            tracer.emit("ckill", t_s=now_s, shard=shard,
+                        successor=successor, adopted=len(adopted))
 
     def _partition(self, groups: tuple[tuple[int, ...], ...]) -> None:
         group_of: dict[int, int] = {}

@@ -330,6 +330,11 @@ class ExecutionBackend:
         """Backend provenance for reports (None = pure simulation)."""
         return None
 
+    #: Set by the runtime at job start when tracing is on (measuring backends
+    #: emit 'start'/'settle' events with real launch/measured timings; the
+    #: sim fast path never consults the backend, so SimBackend needs none).
+    tracer: Any = None
+
     # -- modeled/measured grain protocol ------------------------------------
     def launch(self, executor: "GrainExecutor", worker: Any, grain: int,
                cost: float, now_s: float) -> Any:
@@ -703,6 +708,7 @@ class AsyncRuntime:
         authority: DispatchAuthority | None = None,
         eta_mode: str | None = None,
         backend: ExecutionBackend | None = None,
+        tracer: Any = None,
     ):
         if eta_mode is None:
             # Benchmark/debug override: lets harnesses A/B the reference
@@ -729,6 +735,12 @@ class AsyncRuntime:
         # (core.wallclock.WallclockBackend) launches real work per grain.
         self.backend = backend or SimBackend()
         self.backend.bind(self)
+        # ``tracer`` (obs.Tracer or None) observes the run: every emit site
+        # is guarded by a single ``tracer is not None`` branch on a local, so
+        # the off path stays bitwise-identical and within noise on bench_loop
+        # (tests/test_obs.py asserts the first, the bench asserts the second).
+        # Plain attribute: facades may attach one per job after construction.
+        self.tracer = tracer
         # Timeline events scheduled past a job's last completion don't fire in
         # that job; they carry over and fire during a later job's window.
         self._pending: list[TimelineEvent] = []
@@ -864,6 +876,8 @@ class AsyncRuntime:
         # The sim default keeps the exact pre-seam call sequence (no per-event
         # backend indirection): bitwise-identical results, identical hot path.
         sim_exec = type(backend) in (SimBackend, ExecutionBackend)
+        # Same idiom for tracing: one local, one None-check per emit site.
+        tracer = self.tracer
         pooled = executor.pooled
         defers = n_deferred > 0
         n_direct = n_grains - n_deferred
@@ -1108,6 +1122,14 @@ class AsyncRuntime:
         self.authority.begin_job(ctx)
         if not sim_exec:
             backend.begin_job(executor, n_grains, now)
+            backend.tracer = tracer
+        if tracer is not None:
+            # Inject the live clock so emit sites with no ``now`` in scope
+            # (rebalance moves, steals, gossip rounds) stamp correctly.
+            tracer.set_clock(ctx.clock)
+            for tw, tq in queues.items():
+                for tg in tq:
+                    tracer.emit("enqueue", t_s=now, worker=tw, grain=tg)
 
         def abort_inflight(w: str) -> list[int]:
             """Withdraw w's never-completed in-flight work (kill path) so the
@@ -1119,9 +1141,13 @@ class AsyncRuntime:
                 gs = sorted(sl, key=sl.get)
                 for g in gs:
                     executor.abort(self.workers[w], g)
+                    if tracer is not None:
+                        tracer.emit("abort", t_s=now, worker=w, grain=g)
                 ticks.pop(w, None)
                 return gs
             fl = inflight.pop(w, None)
+            if fl is not None and tracer is not None:
+                tracer.emit("abort", t_s=now, worker=w, grain=fl.grain)
             return [fl.grain] if fl is not None else []
 
         def start_next(w: str) -> None:
@@ -1149,6 +1175,8 @@ class AsyncRuntime:
                                            now, h), _EPS)
             inflight[w] = _Inflight(g, now, now + d, c, h)
             idle.discard(w)
+            if tracer is not None:
+                tracer.emit("dispatch", t_s=now, worker=w, grain=g, cost=c)
             heapq.heappush(heap, (now + d, 1, next(seq), w))
 
         def admit(w: str) -> None:
@@ -1170,6 +1198,8 @@ class AsyncRuntime:
                 sl[g] = now
                 icost_cache.pop(w, None)
                 free -= 1
+                if tracer is not None:
+                    tracer.emit("dispatch", t_s=now, worker=w, grain=g)
             if sl and w not in ticks:
                 if sim_exec:
                     d = max(executor.tick_s(worker, now), _EPS)
@@ -1209,6 +1239,8 @@ class AsyncRuntime:
                 em = etas_under(room, perf_map(room))
                 w = min(room, key=em.__getitem__)
             queues[w].append(g)
+            if tracer is not None:
+                tracer.emit("admit", t_s=now, worker=w, grain=g)
             return w
 
         def kick_idle() -> None:
@@ -1263,12 +1295,16 @@ class AsyncRuntime:
             if prio == 2:  # open-loop arrival
                 g = payload
                 res.arrive_s[g] = now
+                if tracer is not None:
+                    tracer.emit("arrive", t_s=now, grain=g)
                 if not alive():
                     raise RuntimeError("all workers dead with grains pending")
                 w = admit_arrival(g)
                 if w is None:
                     if overflow == "shed" and not (defers and g >= n_direct):
                         res.shed.append(g)
+                        if tracer is not None:
+                            tracer.emit("shed", t_s=now, grain=g)
                         if defers:
                             # The shed grain's deferred follow-ups can never
                             # materialize — record them shed too, or the
@@ -1276,6 +1312,8 @@ class AsyncRuntime:
                             for extra in executor.shed_with(g):
                                 res.shed.append(extra)
                                 res.arrive_s[extra] = now
+                                if tracer is not None:
+                                    tracer.emit("shed", t_s=now, grain=extra)
                         self.authority.count_event(None, "shed", ctx)
                         continue
                     # Deferred grains carry in-progress work (a produced KV
@@ -1291,6 +1329,16 @@ class AsyncRuntime:
                     payload.worker if isinstance(payload.worker, str) else None,
                     "timeline", ctx,
                 )
+                if tracer is not None:
+                    tw = payload.worker
+                    tracer.emit(
+                        "fault", t_s=now,
+                        worker=tw if isinstance(tw, str)
+                        else getattr(tw, "name", None),
+                        fault=payload.kind,
+                        **({"perf": payload.perf}
+                           if payload.perf is not None else {}),
+                    )
                 self._apply_timeline(payload, now, queues, abort_inflight,
                                      dead, ctx)
                 if self.rehomogenize:
@@ -1320,16 +1368,24 @@ class AsyncRuntime:
                         )
                     if g in res.executed_by:
                         raise RuntimeError(f"grain {g} double-executed")
-                    res.records.append(GrainRecord(g, w, sl.pop(g), now, cost_of(g)))
+                    g_start = sl.pop(g)
+                    res.records.append(GrainRecord(g, w, g_start, now, cost_of(g)))
                     res.executed_by[g] = w
                     res.values[g] = val
                     res.worker_finish[w] = now
+                    if tracer is not None:
+                        tracer.emit("complete", t_s=now, worker=w, grain=g,
+                                    start_s=g_start)
                 if defers and finished:
                     # Completion-triggered deferred arrivals (KV handoff:
                     # a finished prefill grain schedules its decode grain
                     # after the modeled transfer delay).
                     for g, val in finished:
                         for ng, delay in executor.followups(g, val, now):
+                            if tracer is not None:
+                                tracer.emit("handoff", t_s=now, worker=w,
+                                            grain=g, to_grain=ng,
+                                            delay_s=delay)
                             heapq.heappush(
                                 heap,
                                 (now + max(delay, 0.0), 2, next(seq), ng),
@@ -1339,6 +1395,9 @@ class AsyncRuntime:
                 hb = executor.heartbeat(worker, now)
                 if hb is not None:
                     self.authority.observe(hb, ctx)
+                    if tracer is not None:
+                        tracer.emit("heartbeat", t_s=now, worker=w,
+                                    work=hb.work_done, elapsed_s=hb.elapsed_s)
                 if finished and self.rehomogenize:
                     self.authority.rebalance(ctx, worker=w)
                 kick_idle()
@@ -1360,6 +1419,9 @@ class AsyncRuntime:
             if fl.grain in res.executed_by:
                 raise RuntimeError(f"grain {fl.grain} double-executed")
             res.executed_by[fl.grain] = w
+            if tracer is not None:
+                tracer.emit("complete", t_s=now, worker=w, grain=fl.grain,
+                            start_s=fl.start_s, cost=fl.cost)
             if sim_exec:
                 res.values[fl.grain] = executor.execute(self.workers[w], fl.grain)
             else:
@@ -1373,6 +1435,9 @@ class AsyncRuntime:
             res.worker_busy[w] = res.worker_busy.get(w, 0.0) + dur
             # Heartbeat: the background process reports observed throughput.
             self.authority.observe(PerfReport(w, fl.cost, max(dur, _EPS), now), ctx)
+            if tracer is not None:
+                tracer.emit("heartbeat", t_s=now, worker=w, work=fl.cost,
+                            elapsed_s=max(dur, _EPS))
             if self.rehomogenize:
                 self.authority.rebalance(ctx, worker=w)
             kick_idle()
@@ -1461,6 +1526,10 @@ class AsyncRuntime:
         queues[thief].extend(reversed(stolen))
         res.n_steals += 1
         res.n_migrated += take
+        tracer = self.tracer
+        if tracer is not None:
+            for g in reversed(stolen):
+                tracer.emit("steal", worker=victim, grain=g, to=thief)
         return take
 
     def _rebalance(self, live, queues, cost_of, est_perf, res, etas):
@@ -1476,8 +1545,11 @@ class AsyncRuntime:
         # Inline should_replan(etas.values(), threshold): the hysteresis
         # spread gate, sans list copy — this runs on every completion.
         vals = etas.values()
-        if not max(vals) > min(vals) * (1.0 + self.replan_threshold) + 1e-12:
+        eta_hi = max(vals)
+        eta_lo = min(vals)
+        if not eta_hi > eta_lo * (1.0 + self.replan_threshold) + 1e-12:
             return
+        tracer = self.tracer
         moved = 0
         # Move budget (total queued grains + 1) guarantees termination; it is
         # computed lazily at the first actual move since most calls pass the
@@ -1514,9 +1586,16 @@ class AsyncRuntime:
             etas[hi] = hi_e - c / est_perf(hi)
             etas[lo] = new_lo
             moved += 1
+            if tracer is not None:
+                tracer.emit("migrate", worker=hi, grain=g, to=lo)
         if moved:
             res.n_replans += 1
             res.n_migrated += moved
+            if tracer is not None:
+                tracer.emit("rebalance", moved=moved,
+                            eta_max_before=eta_hi, eta_min_before=eta_lo,
+                            eta_max_after=max(etas.values()),
+                            eta_min_after=min(etas.values()))
 
     def _rebalance_reference(self, live, queues, eta, cost_of, est_perf, res):
         """The pre-fast-path ``_rebalance``, kept verbatim as the

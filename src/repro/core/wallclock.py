@@ -243,6 +243,12 @@ class WallclockBackend(ExecutionBackend):
         k = self.repeats(cost, getattr(worker, "perf", 1.0))
         x = self._x[self.device_index(worker.name)]
         self._n_launched += 1
+        if self.tracer is not None:
+            # 'start' marks the *real* device launch (the runtime's
+            # 'dispatch' is the scheduling decision at the same logical t).
+            self.tracer.emit("start", t_s=now_s, worker=worker.name,
+                             grain=grain, repeats=k,
+                             device=self.device_index(worker.name))
         t0 = time.perf_counter()
         h = x
         for _ in range(k):
@@ -268,6 +274,10 @@ class WallclockBackend(ExecutionBackend):
             handle.value.block_until_ready()
             handle.measured = max(time.perf_counter() - handle.t0, _MIN_DT)
             self._learn_unit(handle.measured / handle.k)
+        if self.tracer is not None:
+            self.tracer.emit("settle", worker=worker.name, grain=grain,
+                             measured_s=handle.measured,
+                             modeled_s=event_dur_s)
         return handle.measured
 
     def observe_execute(self, worker: Any, elapsed_s: float) -> float:

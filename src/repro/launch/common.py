@@ -13,7 +13,8 @@ import argparse
 import os
 import warnings
 
-__all__ = ["add_fleet_arg", "add_backend_args", "apply_env"]
+__all__ = ["add_fleet_arg", "add_backend_args", "add_trace_args",
+           "make_tracer", "export_trace", "apply_env"]
 
 _warned_aliases: set[str] = set()
 
@@ -58,6 +59,44 @@ def add_backend_args(ap: argparse.ArgumentParser) -> None:
                     help="host-platform device count to pin via XLA_FLAGS "
                          "(wallclock backend; default: one device per "
                          "fleet worker)")
+
+
+def add_trace_args(ap: argparse.ArgumentParser) -> None:
+    """``--trace`` / ``--metrics-interval``: run observability, mirrored on
+    every launcher.  ``--trace out.json`` writes a Chrome/Perfetto
+    ``trace_event`` file (open at https://ui.perfetto.dev); a ``.jsonl``
+    suffix writes compact one-event-per-line JSON instead."""
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record grain-lifecycle/coordinator/serve events "
+                         "and write them to PATH: Perfetto trace_event JSON "
+                         "(load in ui.perfetto.dev), or JSONL when PATH "
+                         "ends in .jsonl")
+    ap.add_argument("--metrics-interval", type=float, default=None,
+                    metavar="S",
+                    help="print a one-line live metrics summary every S "
+                         "simulated seconds while the run executes "
+                         "(implies tracing; --trace optional)")
+
+
+def make_tracer(args: argparse.Namespace):
+    """An ``obs.Tracer`` when ``--trace``/``--metrics-interval`` asks for
+    one, else None (the runtimes keep the zero-overhead untraced path)."""
+    if getattr(args, "trace", None) is None and \
+            getattr(args, "metrics_interval", None) is None:
+        return None
+    from ..obs import Tracer
+    return Tracer(metrics_interval_s=getattr(args, "metrics_interval", None))
+
+
+def export_trace(tracer, args: argparse.Namespace) -> None:
+    """Write the recorded events to ``--trace PATH`` (no-op otherwise)."""
+    path = getattr(args, "trace", None)
+    if tracer is None or path is None:
+        return
+    n = tracer.export(path)
+    print(f"wrote {n} trace events to {path}"
+          + ("" if path.endswith(".jsonl")
+             else " (open at https://ui.perfetto.dev)"))
 
 
 def apply_env(args: argparse.Namespace, n_workers: int | None = None) -> None:

@@ -44,7 +44,14 @@ from ..cluster import Cluster, FleetSpec, Scenario, ServeJob
 from ..configs import ARCH_IDS, get_config
 from ..models.model import Model
 from ..serve.engine import Request
-from .common import add_backend_args, add_fleet_arg, apply_env
+from .common import (
+    add_backend_args,
+    add_fleet_arg,
+    add_trace_args,
+    apply_env,
+    export_trace,
+    make_tracer,
+)
 
 
 def parse_replicas(spec: str) -> list[tuple[float, int]]:
@@ -135,7 +142,9 @@ def main() -> None:
                          "quota's estimated drain time")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the run's headline metrics (throughput, "
-                         "p50/p99 TTFT, shed rate, joined replicas) as JSON")
+                         "p50/p99 TTFT, shed rate, joined replicas, "
+                         "coordination-plane stats) as JSON")
+    add_trace_args(ap)
     ap.add_argument("--tuned", action="store_true",
                     help="apply the tuned-substrate env profile "
                          "(launch/env.py; LD_PRELOAD needs "
@@ -156,7 +165,8 @@ def main() -> None:
     scenario = Scenario.from_arg(args.scenario, fleet.names[0])
 
     requests = make_requests(args.requests, cfg.vocab_size, args.max_new)
-    cluster = Cluster(fleet, backend=args.backend)
+    tracer = make_tracer(args)
+    cluster = Cluster(fleet, backend=args.backend, trace=tracer)
     names = ", ".join(f"{w.name}={w.perf:g}steps/s x{w.concurrency}slots"
                       for w in fleet.workers)
     print(f"fleet: {names}  (queue depth {args.queue_depth}/replica, "
@@ -213,7 +223,12 @@ def main() -> None:
             "tokens_per_s": rep.throughput,
             "quality": rep.homogenization_quality(),
             "n_requests": rep.metrics["n_requests"],
+            # Coordination-plane stats (sharded dispatch): gossip staleness,
+            # cross-shard steals, takeovers — None on single-coordinator runs.
+            "coord": rep.coord.as_dict() if rep.coord is not None else None,
         }
+        if rep.telemetry is not None:
+            payload["telemetry"] = rep.telemetry
         if rep.latency is not None:
             payload.update(
                 p50_ttft_s=rep.latency.p50_ttft_s,
@@ -232,6 +247,7 @@ def main() -> None:
         with open(args.json, "w") as fh:
             json.dump(payload, fh, indent=2)
         print(f"wrote {args.json}")
+    export_trace(tracer, args)
 
     if args.compare_serial:
         serial = Cluster(fleet, backend=args.backend).serve(

@@ -30,7 +30,14 @@ from ..data.pipeline import GrainSpec, SyntheticSource, batch_from_grains
 from ..models.model import Model
 from ..optim.adamw import AdamWConfig
 from ..train.loop import train_single
-from .common import add_backend_args, add_fleet_arg, apply_env
+from .common import (
+    add_backend_args,
+    add_fleet_arg,
+    add_trace_args,
+    apply_env,
+    export_trace,
+    make_tracer,
+)
 
 
 def main() -> None:
@@ -59,6 +66,11 @@ def main() -> None:
                     help="hdp: disable mid-step migration/stealing (each step "
                          "runs its initial plan to completion)")
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="hdp: also write the run's headline metrics (loss, "
+                         "step times, quality, coordination-plane stats) "
+                         "as JSON")
+    add_trace_args(ap)
     ap.add_argument("--peak-lr", type=float, default=1e-3)
     ap.add_argument("--compress-grads", action="store_true")
     ap.add_argument("--tuned", action="store_true",
@@ -106,7 +118,9 @@ def main() -> None:
     if args.coordinators is not None:
         fleet = fleet.with_coordinators(args.coordinators)
     scenario = Scenario.from_arg(args.scenario, fleet.names[0])
-    cluster = Cluster(fleet, adaptive=not args.static, backend=args.backend)
+    tracer = make_tracer(args)
+    cluster = Cluster(fleet, adaptive=not args.static, backend=args.backend,
+                      trace=tracer)
     rep = cluster.train(
         TrainJob(model, steps=args.steps, grains=args.grains,
                  seq_len=args.seq, opt=opt, ckpt_dir=args.ckpt,
@@ -122,6 +136,29 @@ def main() -> None:
     print(rep.summary())
     if rep.coord is not None:
         print(f"coordination plane: {rep.coord.summary()}")
+    if args.json:
+        import json
+
+        payload = {
+            "fleet": rep.fleet,
+            "scenario": rep.scenario,
+            "steps": rep.n_phases,
+            "final_loss": rep.metrics["final_loss"],
+            "first_loss": rep.metrics["first_loss"],
+            "sim_time_s": rep.sim_time_s,
+            "throughput": rep.throughput,
+            "quality": rep.homogenization_quality(),
+            "n_migrated": rep.n_migrated,
+            # Coordination-plane stats (sharded dispatch): gossip staleness,
+            # cross-shard steals, takeovers — None on single-coordinator runs.
+            "coord": rep.coord.as_dict() if rep.coord is not None else None,
+        }
+        if rep.telemetry is not None:
+            payload["telemetry"] = rep.telemetry
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2)
+        print(f"wrote {args.json}")
+    export_trace(tracer, args)
     trainer = rep.artifact
     if trainer.ckpt:
         trainer.ckpt.wait()

@@ -136,6 +136,7 @@ class DisaggExecutor(GrainExecutor):
     pooled = True
     uniform_cost = None
     step_clock = None   # wall-clock backend seam, as on EngineExecutor
+    tracer = None       # serve-plane tracing seam, as on EngineExecutor
 
     def __init__(
         self,
@@ -315,6 +316,9 @@ class DisaggExecutor(GrainExecutor):
                 self.n_handoffs += 1
                 self.ready_s[g] = now_s
                 self.first_token_s[g] = now_s
+                if self.tracer is not None:
+                    self.tracer.emit("first_token", t_s=now_s, worker=name,
+                                     grain=g)
                 done.append((g, h))
             return done
         finished = self.engine_for(worker).step()
@@ -326,6 +330,11 @@ class DisaggExecutor(GrainExecutor):
                 i = g - self.n
                 self.on_finish(i, r, name, now_s,
                                self.first_token_s.get(i, now_s))
+        if self.tracer is not None:
+            for g, r in out:
+                self.tracer.emit("request_done", t_s=now_s, worker=name,
+                                 grain=g - self.n, rid=r.rid,
+                                 tokens=len(r.out_tokens))
         return out
 
     def abort(self, worker, grain: int) -> None:
@@ -351,7 +360,9 @@ class DisaggExecutor(GrainExecutor):
             eng.cancel(self.requests[i].rid)
         # The handoff (and its first token) survives in self.handoffs: the
         # heir re-inserts the same prefill output — never recomputed, and
-        # the re-decode is bitwise the same continuation.
+        # the re-decode is bitwise the same continuation.  Hence no
+        # 'ttft_drop' here, unlike EngineExecutor.abort: the TTFT sample in
+        # first_token_s stays valid.
         self.insert_s.pop(i, None)
 
     def heartbeat(self, worker, now_s: float) -> PerfReport | None:

@@ -59,7 +59,7 @@ class DispatchResult:
 class HomogenizedDispatcher:
     def __init__(self, replicas: Sequence[Replica], homogenize: bool = True,
                  alpha: float = 0.5, authority=None, backend=None,
-                 eta_mode: str | None = None):
+                 eta_mode: str | None = None, tracer=None):
         self.replicas = {r.name: r for r in replicas}
         self.homogenize = homogenize
         self.tracker = PerformanceTracker(alpha=alpha, dead_after_s=1e9)
@@ -68,6 +68,8 @@ class HomogenizedDispatcher:
         # timing: None keeps the modeled step clock; a measuring
         # ExecutionBackend times each engine step for real and its
         # ``step_clock`` feeds measured seconds/step into heartbeats.
+        # ``tracer`` (obs.Tracer) observes the dispatch plane; serve_stream
+        # may also attach one per stream via ``runtime.tracer``.
         self.runtime = AsyncRuntime(
             list(replicas),
             tracker=self.tracker,
@@ -77,6 +79,7 @@ class HomogenizedDispatcher:
             authority=authority,
             eta_mode=eta_mode,
             backend=backend,
+            tracer=tracer,
         )
         measured = backend is not None and type(backend) not in (
             SimBackend, ExecutionBackend
@@ -157,6 +160,7 @@ class HomogenizedDispatcher:
                                       engine_factory=engine_factory,
                                       on_finish=on_finish)
             executor.step_clock = self._step_clock
+            executor.tracer = self.runtime.tracer
             run = self.runtime.run(
                 2 * len(requests),
                 executor=executor,
@@ -172,6 +176,7 @@ class HomogenizedDispatcher:
                                   engine_factory=engine_factory,
                                   on_finish=on_finish)
         executor.step_clock = self._step_clock
+        executor.tracer = self.runtime.tracer
         run = self.runtime.run(
             len(requests),
             executor=executor,

@@ -60,6 +60,10 @@ class EngineExecutor(GrainExecutor):
     # heartbeats report *measured* tokens/sec instead of the modeled
     # ``1 / perf`` profile.  None keeps the modeled clock.
     step_clock = None
+    # Serve-plane tracing (obs.Tracer), set by the dispatcher: first_token /
+    # ttft_drop / request_done events are *the* carrier for per-request
+    # latency — serve_stream folds them back into RequestTraces.
+    tracer = None
 
     def __init__(self, engines: Mapping[str, object], requests: Sequence,
                  engine_factory=None, on_finish=None):
@@ -163,21 +167,33 @@ class EngineExecutor(GrainExecutor):
     def tick(self, worker, now_s: float) -> list[tuple[int, object]]:
         finished = self.engines[worker.name].step()
         watch = self._watch.get(worker.name)
+        tracer = self.tracer
         if watch:
             for g in [g for g in watch if self.requests[g].out_tokens]:
                 self.first_token_s[g] = now_s
                 watch.discard(g)
+                if tracer is not None:
+                    tracer.emit("first_token", t_s=now_s, worker=worker.name,
+                                grain=g)
         out = [(self._grain_of[r.rid], r) for r in finished]
         if self.on_finish is not None:
             for g, r in out:
                 self.on_finish(g, r, worker.name, now_s,
                                self.first_token_s.get(g, now_s))
+        if tracer is not None:
+            for g, r in out:
+                tracer.emit("request_done", t_s=now_s, worker=worker.name,
+                            grain=g, rid=r.rid, tokens=len(r.out_tokens))
         return out
 
     def abort(self, worker, grain: int) -> None:
         self.engines[worker.name].cancel(self.requests[grain].rid)
         self._watch.get(worker.name, set()).discard(grain)
-        self.first_token_s.pop(grain, None)
+        had_ft = self.first_token_s.pop(grain, None)
+        if had_ft is not None and self.tracer is not None:
+            # The cancelled decode's tokens were never delivered: its TTFT
+            # sample dies with it (the surviving re-decode re-measures).
+            self.tracer.emit("ttft_drop", worker=worker.name, grain=grain)
 
     def heartbeat(self, worker, now_s: float) -> PerfReport | None:
         return self.engines[worker.name].heartbeat(

@@ -26,6 +26,7 @@ from typing import Sequence
 from ..core.homogenization import scope_lengths
 from ..core.runtime import TimelineEvent
 from ..core.scheduler import GrainPlan
+from ..obs import Tracer
 from .disagg import RoleStats, TTFTSplit, build_ttft_split
 from .dispatch import HomogenizedDispatcher, Replica
 
@@ -210,6 +211,7 @@ class FleetServer:
         authority=None,
         backend=None,
         eta_mode: str | None = None,
+        tracer=None,
     ):
         if max_queue_depth < 1:
             raise ValueError("max_queue_depth must be >= 1")
@@ -218,7 +220,7 @@ class FleetServer:
             raise ValueError(f"replicas without engines {sorted(missing)}")
         self.dispatcher = HomogenizedDispatcher(
             replicas, homogenize=homogenize, alpha=alpha, authority=authority,
-            backend=backend, eta_mode=eta_mode,
+            backend=backend, eta_mode=eta_mode, tracer=tracer,
         )
         self.engines = dict(engines)
         self.max_queue_depth = max_queue_depth
@@ -417,6 +419,17 @@ class FleetServer:
 
         rt = self.dispatcher.runtime
         start = rt.clock
+        # Per-request TTFT/completion accounting rides the obs event
+        # vocabulary: first_token / ttft_drop events from the executor and
+        # complete events from the runtime fold back into RequestTraces
+        # below.  With no caller-supplied tracer an ephemeral one carries the
+        # events for just this stream — same values the executor dict held,
+        # so LatencyStats output is byte-identical either way.
+        ephemeral = rt.tracer is None
+        if ephemeral:
+            rt.tracer = Tracer()
+        stream_tracer = rt.tracer
+        ev_mark = len(stream_tracer.events)
         joined: list[str] = []
         fired = [False] * len(scale_rules)
         ttfts: deque[float] = deque(
@@ -450,38 +463,56 @@ class FleetServer:
                     )
                     joined.append(rep.name)
 
-        res, run, executor = self.dispatcher.dispatch_stream(
-            {n: self.engines[n] for n in live if n in self.engines},
-            requests,
-            arrive,
-            timeline=timeline,
-            max_queue_depth=self.max_queue_depth,
-            overflow=overflow,
-            engine_factory=(
-                self._factory if self.engine_factory is not None else None
-            ),
-            on_finish=on_finish,
-            roles=roles,
-        )
+        try:
+            res, run, executor = self.dispatcher.dispatch_stream(
+                {n: self.engines[n] for n in live if n in self.engines},
+                requests,
+                arrive,
+                timeline=timeline,
+                max_queue_depth=self.max_queue_depth,
+                overflow=overflow,
+                engine_factory=(
+                    self._factory if self.engine_factory is not None else None
+                ),
+                on_finish=on_finish,
+                roles=roles,
+            )
+        finally:
+            if ephemeral:
+                rt.tracer = None
+
+        # Fold this stream's trace events back into per-request accounting:
+        # the last surviving first_token sets TTFT (a ttft_drop — cancelled
+        # mixed-path decode — voids it, exactly as the executor dict's
+        # pop-on-abort did), and each grain's single complete event carries
+        # its completion time and executing worker.
+        ft_s: dict[int, float] = {}
+        done: dict[int, tuple[float, str]] = {}
+        for e in stream_tracer.events[ev_mark:]:
+            if e.kind == "complete":
+                done[e.grain] = (e.t_s, e.worker)
+            elif e.kind == "first_token":
+                ft_s[e.grain] = e.t_s
+            elif e.kind == "ttft_drop":
+                ft_s.pop(e.grain, None)
 
         # Disaggregated streams complete on the *decode* grain (request g's
         # completion record is grain n + g); mixed streams on grain g.
         off = len(requests) if roles else 0
         shed = {g for g in run.shed if g < len(requests)}
-        recs = {rec.grain: rec for rec in run.records}
         traces = []
         for g, r in enumerate(requests):
             if g in shed:
                 traces.append(RequestTrace(
                     r.rid, arrive[g], None, None, None, 0, shed=True))
                 continue
-            ft = executor.first_token_s.get(g)
-            rec = recs[off + g]
+            ft = ft_s.get(g)
+            end_s, served_by = done[off + g]
             traces.append(RequestTrace(
                 r.rid, arrive[g],
                 None if ft is None else ft - start,
-                rec.end_s - start,
-                run.executed_by[off + g],
+                end_s - start,
+                served_by,
                 len(r.out_tokens),
             ))
         tokens = sum(t.tokens for t in traces)
@@ -492,8 +523,8 @@ class FleetServer:
         n_handoffs = 0
         if roles:
             rel_arrive = [start + a for a in arrive]
-            finish = {g: recs[off + g].end_s for g in range(len(requests))
-                      if off + g in recs}
+            finish = {g: done[off + g][0] for g in range(len(requests))
+                      if off + g in done}
             ttft_split = build_ttft_split(executor, rel_arrive, finish)
             counts = run.shares()
             role_stats = tuple(
